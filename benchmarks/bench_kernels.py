@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks (interpret mode on CPU — correctness-path timing;
+TPU wall-clock comes from the roofline model in EXPERIMENTS.md).
+
+Also times the pure-JAX serving paths (the numbers that matter on this
+host) and derives the per-call HBM bytes each variant would move on TPU —
+the quantity the SWAN kernel actually optimises.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SwanConfig, get_smoke_config
+from repro.core import hybrid_cache as hc
+from repro.core import swan_attention as swa
+from repro.core.analytical import sparse_vector_bytes
+from repro.kernels.flash_prefill.ops import flash_attention
+from repro.kernels.swan_decode.ops import swan_decode_attention_kernel
+from repro.kernels.swan_prune.ops import swan_prune
+from repro.core.projections import random_orthogonal
+from benchmarks.common import emit, timeit_call
+
+
+def run() -> None:
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32")
+    B, S, b, k = 2, 256, 16, 8
+    swan = SwanConfig(k_max=k, buffer=b, mode="topk")
+    key = jax.random.PRNGKey(0)
+    kh = jax.random.normal(key, (B, 200, cfg.n_kv_heads, cfg.d_head))
+    vh = jax.random.normal(jax.random.fold_in(key, 1),
+                           (B, 200, cfg.n_kv_heads, cfg.d_head))
+    cache = hc.init_swan_cache(cfg, swan, B, S)
+    cache = hc.swan_cache_insert_prefill(cache, swan, cfg, kh, vh)
+    q = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, cfg.n_kv_heads, cfg.q_group, cfg.d_head))
+
+    # --- decode paths -------------------------------------------------------
+    core = jax.jit(lambda q, c: swa.swan_decode_attention(q, c, swan, cfg, 199))
+    us = timeit_call(core, q, cache)
+    sparse_b = 2 * B * cfg.n_kv_heads * S * sparse_vector_bytes(k)
+    dense_b = 2 * B * cfg.n_kv_heads * S * cfg.d_head * 2
+    emit("swan_decode_xla_ref", us,
+         f"S={S}_k={k}_tpu_bytes={sparse_b}_vs_dense={dense_b}")
+
+    us = timeit_call(lambda: swan_decode_attention_kernel(
+        q, cache, swan, cfg, 199, block_s=64), iters=3, warmup=1)
+    emit("swan_decode_pallas_interpret", us,
+         f"S={S}_k={k}_streams_compressed_cache_once")
+
+    # --- prefill kernel ------------------------------------------------------
+    qf = jax.random.normal(key, (1, 256, 4, 32), jnp.float32)
+    kf = jax.random.normal(key, (1, 256, 2, 32), jnp.float32)
+    vf = jax.random.normal(key, (1, 256, 2, 32), jnp.float32)
+    us = timeit_call(lambda: flash_attention(qf, kf, vf, block_q=64,
+                                             block_k=64), iters=3, warmup=1)
+    flops = 4 * 256 * 256 * 32 * 4
+    emit("flash_prefill_pallas_interpret", us, f"Sq=Sk=256_flops={flops}")
+
+    from repro.models.attention import blocked_attention
+    blk = jax.jit(lambda q, k_, v_: blocked_attention(q, k_, v_, causal=True,
+                                                      block=64))
+    us = timeit_call(blk, qf, kf, vf)
+    emit("flash_prefill_xla_blocked", us, f"Sq=Sk=256_flops={flops}")
+
+    # --- prune kernel ---------------------------------------------------------
+    x = jax.random.normal(key, (2, 2, 128, 32), jnp.float32)
+    P = random_orthogonal(jax.random.fold_in(key, 5), (2,), 32)
+    us = timeit_call(lambda: swan_prune(x, P, 8, tile=64), iters=3, warmup=1)
+    emit("swan_prune_pallas_interpret", us, "T=128_dh=32_k=8")
+
+    from repro.core.winnow import topk_pack, rotate_k
+    prune_ref = jax.jit(lambda x, P: topk_pack(rotate_k(x.transpose(0, 2, 1, 3),
+                                                        P).transpose(0, 2, 1, 3), 8))
+    us = timeit_call(prune_ref, x, P)
+    emit("swan_prune_xla_ref", us, "T=128_dh=32_k=8")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Whole-model KV-cache memory accounting across the assigned architectures
+(the paper's abstract claim: 50-60% per-token savings at strong quality).
+
+Emits dense vs SWAN cache bytes for the serving shapes, per arch, for the
+paper-faithful setting (k=d_h/2, bt=128, fp16) and the 8-bit variant.
+"""
+from __future__ import annotations
+
+from repro.configs import ARCH_IDS, SHAPES, SwanConfig, get_config
+from repro.core.analytical import model_cache_footprint
+from repro.models import swan_applicable
+from benchmarks.common import emit
+
+
+def run() -> None:
+    shape = SHAPES["decode_32k"]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        if not swan_applicable(cfg):
+            emit("cache_footprint", 0.0, f"{arch}_swan=inapplicable_O(1)_state")
+            continue
+        for tag, swan in [
+            ("fp16_k50", SwanConfig(k_max=cfg.d_head // 2, buffer=128)),
+            ("int8_k50", SwanConfig(k_max=cfg.d_head // 2, buffer=128,
+                                    quantize=True)),
+        ]:
+            fp = model_cache_footprint(cfg, swan, shape.global_batch,
+                                       shape.seq_len)
+            emit("cache_footprint", 0.0,
+                 f"{arch}_{tag}_dense={fp.dense_bytes / 1e9:.1f}GB"
+                 f"_swan={fp.swan_bytes / 1e9:.1f}GB_saving={fp.saving:.1%}")
+
+
+if __name__ == "__main__":
+    run()

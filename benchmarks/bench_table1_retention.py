@@ -1,0 +1,35 @@
+"""Paper Table 1 (structural reproduction): quality vs top-k retention
+ratio on the trained tiny LM, scored through the SWAN serving path.
+
+Paper shape to reproduce: ~flat through ratio 0.75, mild loss at 0.5,
+collapse at 0.3.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import SwanConfig
+from benchmarks.common import (emit, eval_tokens, swan_teacher_forced_nll,
+                               trained_tiny_lm)
+
+RATIOS = [1.0, 0.9, 0.75, 0.5, 0.3, 0.1]
+
+
+def run() -> None:
+    cfg, params, pj, absorbed = trained_tiny_lm()
+    tokens = eval_tokens(cfg)
+    t0 = time.perf_counter()
+    base = swan_teacher_forced_nll(cfg, params, tokens, None)
+    emit("table1_retention_baseline", (time.perf_counter() - t0) * 1e6,
+         f"ratio=1.00_nll={base:.4f}")
+    for ratio in RATIOS:
+        k = max(int(round(cfg.d_head * ratio)), 1)
+        swan = SwanConfig(k_max=k, buffer=8, mode="topk")
+        t0 = time.perf_counter()
+        nll = swan_teacher_forced_nll(cfg, absorbed, tokens, swan, pj)
+        emit("table1_retention", (time.perf_counter() - t0) * 1e6,
+             f"ratio={ratio:.2f}_k={k}_nll={nll:.4f}_delta={nll - base:+.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Table 2 (structural reproduction): asymmetric key/value retention
+under a fixed budget (TopK_R + TopV_R = 1), zero buffer.
+
+Paper shape: symmetric 0.5/0.5 best; extreme asymmetry catastrophic.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import SwanConfig
+from benchmarks.common import (emit, eval_tokens, swan_teacher_forced_nll,
+                               trained_tiny_lm)
+
+SPLITS = [(0.2, 0.8), (0.35, 0.65), (0.5, 0.5), (0.65, 0.35), (0.8, 0.2)]
+
+
+def run() -> None:
+    cfg, params, pj, absorbed = trained_tiny_lm()
+    tokens = eval_tokens(cfg)
+    for kr, vr in SPLITS:
+        kk = max(int(round(cfg.d_head * kr)), 1)
+        kv = max(int(round(cfg.d_head * vr)), 1)
+        swan = SwanConfig(k_max=max(kk, kv), buffer=0, mode="topk",
+                          k_key=kk, k_value=kv)
+        t0 = time.perf_counter()
+        nll = swan_teacher_forced_nll(cfg, absorbed, tokens, swan, pj)
+        emit("table2_kv_split", (time.perf_counter() - t0) * 1e6,
+             f"topk_r={kr:.2f}_topv_r={vr:.2f}_nll={nll:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,124 @@
+"""Shared benchmark infrastructure.
+
+* ``trained_tiny_lm()`` — trains (once, cached in-process and on disk) a
+  small llama-family LM on the deterministic synthetic corpus; all quality
+  benchmarks (paper Tables 1-3, Figs 2b/3/4 structural reproductions) score
+  this model under different SWAN settings.
+* ``swan_teacher_forced_nll`` — SWAN-faithful perplexity: tokens are scored
+  through the *serving* path (prefill + incremental decode with the
+  compressed hybrid cache), so compression errors propagate exactly as in
+  deployment.
+* ``timeit_call`` — microbenchmark helper emitting us_per_call.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import (ModelConfig, OptimizerConfig, SwanConfig,
+                           TrainConfig)
+from repro.core import projections as proj_mod
+from repro.data.pipeline import SyntheticStream
+from repro.models import get_model
+from repro.runtime.train_loop import Trainer
+
+CKPT_DIR = os.environ.get("REPRO_BENCH_CKPT", "/tmp/repro_bench_lm")
+TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_STEPS", "900"))
+
+
+def tiny_lm_config() -> ModelConfig:
+    return ModelConfig(
+        name="bench-tiny-lm", family="dense",
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+        d_ff=384, vocab_size=512,
+        norm="rmsnorm", act="silu", rope_theta=10000.0,
+        dtype="float32", param_dtype="float32", remat=False,
+    )
+
+
+@functools.lru_cache(maxsize=1)
+def trained_tiny_lm():
+    """Returns (cfg, params, projections, absorbed_params)."""
+    cfg = tiny_lm_config()
+    tc = TrainConfig(
+        model=cfg, seq_len=64, global_batch=16, steps=TRAIN_STEPS,
+        optimizer=OptimizerConfig(lr=6e-3, warmup_steps=20,
+                                  decay_steps=TRAIN_STEPS),
+        checkpoint_dir=CKPT_DIR, checkpoint_every=TRAIN_STEPS,
+        log_every=max(TRAIN_STEPS // 5, 1), seed=0)
+    trainer = Trainer(tc)
+    latest = trainer.ckpt.latest_step()
+    if latest is not None and latest >= TRAIN_STEPS:
+        params, _, _ = trainer.restore_or_init()
+        log = None
+    else:
+        out = trainer.run()
+        params = out["params"]
+        log = out["log"]
+    api = get_model(cfg)
+    # calibration data: SAME synthetic language as training (seed) but an
+    # unseen step index — mirrors the paper's held-out calibration set
+    calib = {"tokens": jnp.asarray(
+        SyntheticStream(cfg.vocab_size, 8, 96, seed=0).batch_at(50_000)["tokens"][:, :96])}
+    q, k, v, wo = api.collect_qkv(params, cfg, calib)
+    pj = proj_mod.compute_projections((q, k, v), wo, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.d_head)
+    absorbed = api.absorb(params, cfg, pj)
+    if log:
+        print(f"# tiny-lm trained: loss {log[0]['loss']:.3f} -> "
+              f"{log[-1]['loss']:.3f} over {TRAIN_STEPS} steps")
+    return cfg, params, pj, absorbed
+
+
+def eval_tokens(cfg, batch: int = 8, seq: int = 160, step: int = 100_000):
+    """Held-out batch from the TRAINING language (same seed, unseen step)."""
+    s = SyntheticStream(cfg.vocab_size, batch, seq, seed=0)
+    return jnp.asarray(s.batch_at(step)["tokens"][:, :seq])
+
+
+def swan_teacher_forced_nll(cfg, params, tokens, swan: Optional[SwanConfig],
+                            projections=None, prompt_len: int = 8) -> float:
+    """Mean NLL of tokens[prompt_len:] scored through the serving path."""
+    api = get_model(cfg)
+    B, S = tokens.shape
+    state = api.init_serve_state(cfg, swan, B, S + 1)
+    prompt = {"tokens": tokens[:, :prompt_len]}
+    logits, state = api.prefill(params, cfg, prompt, state, swan, projections)
+    logits = logits[:, -1]
+
+    @jax.jit
+    def step(state, tok, pos):
+        return api.decode_step(params, cfg, tok, pos, state, swan, projections)
+
+    nll, count = 0.0, 0
+    for t in range(prompt_len, S):
+        target = tokens[:, t]
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll += float(-jnp.take_along_axis(lp, target[:, None], 1).mean())
+        count += 1
+        if t < S - 1:
+            logits, state = step(state, target, jnp.asarray(t, jnp.int32))
+    return nll / count
+
+
+def timeit_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """us per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV row in the required ``name,us_per_call,derived`` format."""
+    print(f"{name},{us_per_call:.1f},{derived}")

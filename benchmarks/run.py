@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (spec format).  Quality
+benchmarks score a tiny LM trained in-process on the deterministic
+synthetic corpus (cached across modules and runs).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_adaptive_k, bench_breakeven,
+                        bench_buffer_rescue, bench_fig2a_compression,
+                        bench_kernels, bench_longcontext_error,
+                        bench_memory_footprint, bench_table1_retention,
+                        bench_table2_kv_split, bench_table3_projection)
+
+MODULES = [
+    ("fig2a_compression", bench_fig2a_compression),
+    ("eq2_breakeven", bench_breakeven),
+    ("memory_footprint", bench_memory_footprint),
+    ("table1_retention", bench_table1_retention),
+    ("table2_kv_split", bench_table2_kv_split),
+    ("table3_projection", bench_table3_projection),
+    ("fig2b_buffer_rescue", bench_buffer_rescue),
+    ("fig4_longcontext", bench_longcontext_error),
+    ("adaptive_k", bench_adaptive_k),          # beyond-paper extension
+    ("kernels", bench_kernels),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        t0 = time.monotonic()
+        try:
+            mod.run()
+            print(f"# [{name}] ok in {time.monotonic() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# [{name}] FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""Loop-aware HLO cost analyzer.
+
+XLA's built-in ``compiled.cost_analysis()`` counts while-loop bodies ONCE,
+which undercounts scanned-layer models by ~n_layers× (verified empirically —
+see EXPERIMENTS.md §Methodology).  This module parses the post-optimization
+HLO text, builds the computation call graph (entry → while bodies / fusions
+/ calls) with ``known_trip_count`` multipliers, and accumulates:
+
+  * flops            — dot ops (2·N·K from shapes + contracting dims) plus
+                       1 flop/elem for arithmetic elementwise ops,
+  * hbm_bytes        — per top-level op: operand result-sizes + own size
+                       (fusion internals collapsed — the standard roofline
+                       approximation of HBM traffic),
+  * collective_bytes — received-bytes per device: result sizes of
+                       all-reduce / all-gather / reduce-scatter / all-to-all
+                       / collective-permute (incl. async start forms),
+                       broken out per op kind.
+
+All numbers are per-device (post-SPMD-partitioning shapes).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_EWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "rsqrt", "sqrt", "tanh", "logistic",
+    "power", "floor", "ceil", "round-nearest-afz", "cosine", "sine",
+    "expm1", "log1p", "atan2", "remainder",
+}
+
+
+def _shape_info(type_str: str) -> Tuple[int, int]:
+    """-> (total bytes, total elements) for a possibly-tuple HLO type."""
+    total_b = total_e = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+        total_e += n
+    return total_b, total_e
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    bytes: int = 0
+    elems: int = 0
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+_LHS_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_TYPE_WORD_RE = re.compile(
+    r"^((?:[\w]+\[[\d,]*\](?:\{[\d,:TSE()*]*\})?\s*)+)(.*)$")
+_OPCODE_RE = re.compile(r"^([\w\-]+)\((.*)$", re.DOTALL)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+
+
+def _match_paren(s: str, start: int = 0) -> int:
+    """Index just past the paren group opening at s[start] (must be '(')."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def parse_instr_line(line: str) -> Optional[Instr]:
+    m = _LHS_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(2), m.group(3)
+    if rhs.startswith("("):                  # tuple type (may contain /*i=N*/)
+        end = _match_paren(rhs)
+        type_str, rest = rhs[:end], rhs[end:].lstrip()
+    else:
+        mt = _TYPE_WORD_RE.match(rhs)
+        if not mt:
+            return None
+        type_str, rest = mt.group(1), mt.group(2)
+    mo = _OPCODE_RE.match(rest)
+    if not mo:
+        return None
+    opcode = mo.group(1)
+    tail = "(" + mo.group(2)
+    end = _match_paren(tail)
+    operands_str, attrs = tail[1:end - 1], tail[end:]
+    ops = [o.strip().lstrip("%") for o in _split_top(operands_str)]
+    ops = [re.sub(r"^.*\s%?([\w.\-]+)$", r"\1", o) for o in ops if o]
+    b, e = _shape_info(type_str)
+    return Instr(name, type_str.strip(), opcode, ops, attrs, b, e)
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if "=" in line and line.rstrip().endswith("{") and "->" in line:
+            mc = _COMP_RE.match(line)
+        else:
+            mc = _COMP_RE.match(line) if line.rstrip().endswith("{") else None
+        if mc:
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        ins = parse_instr_line(line)
+        if ins is None:
+            continue
+        cur.instrs.append(ins)
+        cur.by_name[ins.name] = ins
+    return comps, entry
+
+
+def _split_top(s: str) -> List[str]:
+    out, depth, buf = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        out.append("".join(buf))
+    return out
+
+
+_TRIP_RE = re.compile(r'known_trip_count\D*?(\d+)')
+_CALLED_RE = re.compile(r'(?:body|to_apply|calls|condition)=%?([\w.\-]+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> int:
+    """2 × result-elems × contracted-size (batch dims handled naturally)."""
+    lhs = comp.by_name.get(ins.operands[0]) if ins.operands else None
+    contracted = 1
+    m = _CONTRACT_RE.search(ins.attrs)
+    if lhs is not None and m and m.group(1):
+        sm = _SHAPE_RE.search(lhs.type_str)
+        if sm and sm.group(2):
+            dims = [int(d) for d in sm.group(2).split(",")]
+            for ci in m.group(1).split(","):
+                ci = int(ci)
+                if ci < len(dims):
+                    contracted *= dims[ci]
+    return 2 * ins.elems * contracted
+
+
+_SLICE_OPS = ("dynamic-slice", "slice")
+
+
+def _fusion_operand_bytes(callee: Optional["Computation"], index: int,
+                          full_bytes: int) -> int:
+    """Bytes a fusion actually reads from operand ``index``: if every use
+    inside the fused computation goes through a (dynamic-)slice, only the
+    sliced regions are read — charging the full stacked array would
+    over-count scanned layer stacks ~L×."""
+    if callee is None:
+        return full_bytes
+    param = None
+    for ins in callee.instrs:
+        if ins.opcode == "parameter" and ins.operands[:1] == [str(index)]:
+            param = ins
+            break
+    if param is None:
+        return full_bytes
+    consumers = [i for i in callee.instrs if param.name in i.operands]
+    if not consumers:
+        return 0
+    if all(i.opcode in _SLICE_OPS for i in consumers):
+        return sum(i.bytes for i in consumers)
+    return full_bytes
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = field(default_factory=dict)
+    collective_count: int = 0
+
+    def add(self, other: "HloCosts", mult: float) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.collective_count += int(other.collective_count * mult)
+        for k, v in other.per_collective.items():
+            self.per_collective[k] = self.per_collective.get(k, 0.0) + v * mult
+
+
+def _comp_costs(comp: Computation, comps: Dict[str, Computation],
+                memo: Dict[str, HloCosts], in_fusion: bool = False) -> HloCosts:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = HloCosts()   # cycle guard
+    c = HloCosts()
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op.endswith("-done"):
+            continue
+        base = op.replace("-start", "")
+        if base in _COLLECTIVES:
+            c.collective_bytes += ins.bytes
+            c.collective_count += 1
+            c.per_collective[base] = c.per_collective.get(base, 0.0) + ins.bytes
+            c.hbm_bytes += ins.bytes
+            continue
+        if op == "while":
+            trip = 1
+            m = _TRIP_RE.search(ins.attrs)
+            if m:
+                trip = int(m.group(1))
+            called = _CALLED_RE.findall(ins.attrs)
+            for sub in called:
+                if sub in comps:
+                    c.add(_comp_costs(comps[sub], comps, memo), trip)
+            continue
+        if op in ("fusion", "call", "conditional", "async-start", "custom-call"):
+            callees = [comps[s] for s in _CALLED_RE.findall(ins.attrs)
+                       if s in comps]
+            for sub in callees:
+                sc = _comp_costs(sub, comps, memo, in_fusion=(op == "fusion"))
+                # fusion internals: count flops, not bytes
+                c.flops += sc.flops
+                c.collective_bytes += sc.collective_bytes
+                c.collective_count += sc.collective_count
+                for k, v in sc.per_collective.items():
+                    c.per_collective[k] = c.per_collective.get(k, 0.0) + v
+            if not in_fusion:
+                callee = callees[0] if op == "fusion" and callees else None
+                opb = 0
+                for i, o in enumerate(ins.operands):
+                    if o not in comp.by_name:
+                        continue
+                    full = comp.by_name[o].bytes
+                    opb += _fusion_operand_bytes(callee, i, full)
+                c.hbm_bytes += opb + ins.bytes
+            continue
+        if op == "dot":
+            c.flops += _dot_flops(ins, comp)
+        elif op == "convolution":
+            c.flops += 2 * ins.elems * 8   # rough; convs are rare here
+        elif op in _EWISE_1FLOP:
+            c.flops += ins.elems
+        elif op in ("reduce", "reduce-window"):
+            opb = sum(comp.by_name[o].elems for o in ins.operands
+                      if o in comp.by_name)
+            c.flops += max(opb, ins.elems)
+        if not in_fusion and op not in ("parameter", "constant", "tuple",
+                                        "get-tuple-element", "bitcast"):
+            if op in ("dynamic-slice", "slice", "gather", "broadcast", "iota"):
+                # slicing reads only the sliced region ≈ result size
+                c.hbm_bytes += 2 * ins.bytes
+            elif op == "dynamic-update-slice":
+                upd = (comp.by_name[ins.operands[1]].bytes
+                       if len(ins.operands) > 1 and ins.operands[1] in comp.by_name
+                       else ins.bytes)
+                c.hbm_bytes += 2 * upd     # read region + write region
+            elif op == "scatter":
+                upd = (comp.by_name[ins.operands[-1]].bytes
+                       if ins.operands and ins.operands[-1] in comp.by_name
+                       else ins.bytes)
+                c.hbm_bytes += 3 * upd     # read idx+updates, rmw region
+            else:
+                opb = sum(comp.by_name[o].bytes for o in ins.operands
+                          if o in comp.by_name)
+                c.hbm_bytes += opb + ins.bytes
+    memo[comp.name] = c
+    return c
+
+
+def analyze_hlo(text: str) -> HloCosts:
+    comps, entry = parse_module(text)
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda k: len(comps[k].instrs)) if comps else None
+    if entry is None:
+        return HloCosts()
+    total = HloCosts()
+    total.add(_comp_costs(comps[entry], comps, {}), 1.0)
+    return total

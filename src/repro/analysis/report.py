@@ -1,0 +1,102 @@
+"""Generate EXPERIMENTS.md sections from dry-run records.
+
+    PYTHONPATH=src python -m repro.analysis.report experiments/dryrun > EXPERIMENTS.generated.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load_records(d: str) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def _fmt_bytes(b: float) -> str:
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}GB"
+    return f"{b / 1e6:.1f}MB"
+
+
+def _fmt_s(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = ["| arch | shape | mesh | swan | status | per-dev args | per-dev temps | coll bytes/dev | collectives |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        sw = "on" if r["swan"] else "—"
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | {sw} | "
+                         f"{r['status']}: {reason} | | | | |")
+            continue
+        m = r["memory"]
+        h = r["hlo_cost"]
+        per = ", ".join(f"{k}:{_fmt_bytes(v)}"
+                        for k, v in sorted(h["per_collective"].items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {sw} | ok | "
+            f"{_fmt_bytes(m['argument_bytes'])} | {_fmt_bytes(m['temp_bytes'])} | "
+            f"{_fmt_bytes(h['collective_bytes'])} | {per} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    lines = ["| arch | shape | swan | compute_s | memory_s | collective_s | bottleneck | MODEL_FLOPS | useful ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok" or r["multi_pod"]:
+            continue
+        ro = r["roofline"]
+        sw = "on" if r["swan"] else "—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {sw} | "
+            f"{_fmt_s(ro['compute_s'])} | {_fmt_s(ro['memory_s'])} | "
+            f"{_fmt_s(ro['collective_s'])} | **{ro['bottleneck']}** | "
+            f"{ro['model_flops']:.2e} | {ro['useful_flops_ratio']:.2f} | "
+            f"{ro['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def summary_stats(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    errs = [r for r in recs if r["status"] == "error"]
+    doms: Dict[str, int] = {}
+    for r in ok:
+        if not r["multi_pod"]:
+            d = r["roofline"]["bottleneck"]
+            doms[d] = doms.get(d, 0) + 1
+    out = [f"- compiled OK: **{len(ok)}** cells "
+           f"({sum(1 for r in ok if r['multi_pod'])} multi-pod, "
+           f"{sum(1 for r in ok if r['swan'])} SWAN variants)",
+           f"- skipped by §Arch-applicability: {len(skipped)}",
+           f"- errors: {len(errs)}",
+           f"- single-pod bottleneck mix: {doms}"]
+    return "\n".join(out)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load_records(d)
+    print("## Dry-run summary\n")
+    print(summary_stats(recs))
+    print("\n## Dry-run table\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline table (single-pod 16x16, per-device terms)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Roofline terms from dry-run records (TPU v5e constants).
+
+  compute_s    = flops_per_device / 197 TFLOP/s (bf16)
+  memory_s     = hbm_bytes_per_device / 819 GB/s
+  collective_s = collective_bytes_per_device / 50 GB/s/link
+
+All HLO-derived quantities are per-device (post-SPMD shapes), so the spec's
+"X/(chips × bw)" is applied with per-chip numerators directly.  MODEL_FLOPS
+uses the paper-spec formulas: 6·N·D (train) / 2·N·D (serve), N_active for
+MoE; the ratio MODEL_FLOPS / (HLO_flops × chips) exposes remat/redundancy
+waste (>1 means HLO under-counts — e.g. analyzer misses; <1 means extra
+compiled compute such as recompute or attention FLOPs outside 6·N·D).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_ADVICE = {
+    "compute": ("increase arithmetic efficiency: larger per-chip tiles "
+                "(reduce model-axis sharding), fuse elementwise chains, "
+                "or drop remat recompute"),
+    "memory": ("cut HBM traffic: SWAN-compress the KV cache / quantize "
+               "weights / enlarge fusion regions so activations stay on-chip"),
+    "collective": ("reshard to shrink collectives: move the sharded axis, "
+                   "overlap collectives with compute, or compress the wire "
+                   "format (int8 gradient sync)"),
+}
+
+
+def model_flops(cfg, shape, n_tokens: Optional[int] = None) -> float:
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    toks = shape.global_batch           # one new token per sequence
+    return 2.0 * n_active * toks
+
+
+def kernel_model_bytes(cfg, shape, swan) -> int:
+    """Per-device HBM bytes the fused Pallas decode kernel streams: the
+    packed payload + ring buffer + params, each exactly once (BlockSpec-
+    derived — every input tile is fetched once per grid point and the grid
+    covers the cache once).  This is the TPU-target number the XLA ref path
+    upper-bounds."""
+    n_dev = 256
+    n_attn = sum(1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "attn")
+    B, S = shape.global_batch, shape.seq_len
+    per_vec = swan.k_max * (1 if swan.quantize else 2)
+    if swan.mode == "topk":
+        per_vec += swan.k_max                      # int8 indices
+    if swan.quantize:
+        per_vec += 4
+    sparse = 2 * n_attn * B * cfg.n_kv_heads * S * per_vec
+    buf = 2 * n_attn * B * cfg.n_kv_heads * swan.buffer * cfg.d_head * 2
+    params = cfg.n_active_params() * 2
+    return (sparse + buf + params) // n_dev
+
+
+def roofline_report(record: Dict[str, Any], cfg, shape,
+                    swan=None) -> Dict[str, Any]:
+    hlo = record["hlo_cost"]
+    n_dev = record["n_devices"]
+    compute_s = hlo["flops"] / PEAK_FLOPS
+    memory_s = hlo["hbm_bytes"] / HBM_BW
+    collective_s = hlo["collective_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    total_hlo_flops = hlo["flops"] * n_dev
+    step_s = max(terms.values())
+    ideal_s = mf / (n_dev * PEAK_FLOPS)
+    out = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / total_hlo_flops if total_hlo_flops else 0.0,
+        "roofline_fraction": ideal_s / step_s if step_s else 0.0,
+        "advice": _ADVICE[bottleneck],
+    }
+    if swan is not None and shape.kind == "decode":
+        kb = kernel_model_bytes(cfg, shape, swan)
+        out["kernel_model_bytes"] = kb
+        out["kernel_model_memory_s"] = kb / HBM_BW
+    return out

@@ -1,0 +1,45 @@
+"""Architecture registry.
+
+``get_config(arch_id)`` / ``get_smoke_config(arch_id)`` resolve the ten
+assigned architectures (plus the paper's own evaluation family, which is
+llama3-8b).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    MambaConfig, ModelConfig, MoEConfig, OptimizerConfig, RWKVConfig,
+    ServeConfig, ShapeConfig, SwanConfig, TrainConfig, SHAPES,
+    shape_applicable,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "deepseek-moe-16b":     "repro.configs.deepseek_moe_16b",
+    "qwen2-moe-a2.7b":      "repro.configs.qwen2_moe_a2_7b",
+    "llama3-8b":            "repro.configs.llama3_8b",
+    "olmo-1b":              "repro.configs.olmo_1b",
+    "llama3-405b":          "repro.configs.llama3_405b",
+    "yi-9b":                "repro.configs.yi_9b",
+    "internvl2-1b":         "repro.configs.internvl2_1b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "whisper-small":        "repro.configs.whisper_small",
+    "rwkv6-3b":             "repro.configs.rwkv6_3b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch])
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()

@@ -1,0 +1,320 @@
+"""Configuration dataclasses for models, SWAN, shapes, training and serving.
+
+Everything in the framework is driven by these frozen dataclasses.  Each
+assigned architecture contributes one module in ``repro.configs`` exposing
+``config()`` (the full published configuration) and ``smoke_config()`` (a
+reduced same-family configuration used by CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration (routed + shared experts)."""
+    n_routed: int                 # number of routed experts
+    n_shared: int                 # number of always-on shared experts
+    top_k: int                    # experts activated per token
+    d_expert: int                 # hidden dim of each expert FFN
+    capacity_factor: float = 1.25  # token capacity per expert = cf * tokens * top_k / E
+    router_aux_weight: float = 0.01  # load-balance auxiliary loss weight
+    router_z_weight: float = 1e-3    # router logit z-loss weight
+    moe_every: int = 1            # MoE FFN on layers where (idx % moe_every == moe_offset)
+    moe_offset: int = 0
+    shard_experts: bool = True    # EP: shard expert dim over the 'model' axis
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Mamba-1 selective SSM block configuration (used by Jamba)."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0              # 0 -> ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV-6 (Finch) configuration."""
+    head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class SwanConfig:
+    """SWAN KV-cache compression configuration.
+
+    ``k_max`` is the allocation-time number of retained dimensions (real HBM
+    footprint).  ``k_key``/``k_value`` are the *runtime* active dimensions
+    (<= k_max); packed tails beyond them are zeroed, so they can be tuned per
+    request without recompilation (paper's runtime tunability, restated for
+    XLA static shapes).
+    """
+    enabled: bool = True
+    k_max: int = 64               # allocated retained dims per vector
+    buffer: int = 128             # dense ring-buffer length b (recent tokens)
+    mode: str = "topk"            # "topk" (paper-faithful) | "truncate" (TPU-native dense low-rank)
+    quantize: bool = False        # 8-bit values (paper's 8-bit variant)
+    quant_dtype: str = "int8"     # "int8" (+ per-vector scale, robust) |
+                                  # "fp8" (float8_e4m3fn direct cast — the
+                                  # paper's literal '8-bit float', Eq.1 2k+2)
+    k_key: Optional[int] = None   # runtime active dims for keys   (None -> k_max)
+    k_value: Optional[int] = None  # runtime active dims for values (None -> k_max)
+    compress_cross_attn: bool = False  # whisper extension: winnow static cross-attn cache
+
+    @property
+    def kk(self) -> int:
+        return self.k_max if self.k_key is None else self.k_key
+
+    @property
+    def kv(self) -> int:
+        return self.k_max if self.k_value is None else self.k_value
+
+    def validate(self, d_head: int) -> None:
+        if self.k_max > d_head:
+            raise ValueError(f"k_max={self.k_max} > d_head={d_head}")
+        if self.kk > self.k_max or self.kv > self.k_max:
+            raise ValueError("runtime k exceeds allocated k_max")
+        if self.mode not in ("topk", "truncate"):
+            raise ValueError(f"unknown winnow mode {self.mode!r}")
+        if self.quant_dtype not in ("int8", "fp8"):
+            raise ValueError(f"unknown quant dtype {self.quant_dtype!r}")
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    # --- normalisation / activations ----------------------------------
+    norm: str = "rmsnorm"         # rmsnorm | layernorm | nonparam_ln
+    act: str = "silu"             # silu -> SwiGLU MLP; gelu -> GELU MLP
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    mlp_bias: bool = False
+    # --- positional ----------------------------------------------------
+    pos: str = "rope"             # rope | learned | none
+    rope_theta: float = 10000.0
+    max_position: int = 1 << 20
+    tie_embeddings: bool = False
+    # --- family-specific ------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    attn_period: int = 1          # hybrid: attention on layers where idx % attn_period == attn_offset
+    attn_offset: int = 0
+    # --- encoder-decoder -------------------------------------------------
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0          # fixed encoder frame count (whisper stub: 1500)
+    # --- vlm --------------------------------------------------------------
+    n_prefix_tokens: int = 0      # patch-embedding prefix length (internvl stub)
+    # --- runtime / compilation -------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"    # full (save nothing) | dots (save matmul operands)
+    scan_layers: bool = True
+    # --- sharding profile -------------------------------------------------
+    tp_style: str = "heads"       # heads | fsdp_model (tiny archs: model axis used for param storage)
+    fsdp_data: bool = False       # additionally shard params/opt over 'data' (405B-class)
+    seq_shard: bool = False       # sequence-parallel activations on 'model' axis
+    opt_state_dtype: str = "float32"  # bf16 for >=100B configs (state compression)
+    grad_accum: int = 1           # microbatch accumulation steps for train_4k
+
+    # --- derived ----------------------------------------------------------
+    @property
+    def q_group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.rwkv is not None
+
+    def layer_kind(self, idx: int) -> str:
+        """Return 'attn' or 'mamba' for mixer at layer ``idx``."""
+        if self.rwkv is not None:
+            return "rwkv"
+        if self.mamba is None:
+            return "attn"
+        return "attn" if idx % self.attn_period == self.attn_offset else "mamba"
+
+    def ffn_kind(self, idx: int) -> str:
+        if self.moe is None:
+            return "dense"
+        return "moe" if idx % self.moe.moe_every == self.moe.moe_offset else "dense"
+
+    def n_params(self) -> int:
+        """Analytical parameter count (embedding + blocks + head)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        n = V * d                       # token embedding
+        if not self.tie_embeddings:
+            n += V * d                  # output head
+        if self.pos == "learned":
+            n += self.max_position_learned() * d
+        enc_layers = self.n_encoder_layers if self.is_encoder_decoder else 0
+        for idx in range(self.n_layers + enc_layers):
+            is_enc = idx >= self.n_layers
+            li = idx if not is_enc else idx - self.n_layers
+            kind = "attn" if is_enc else self.layer_kind(li)
+            if kind == "attn":
+                n += self._attn_params()
+                if self.is_encoder_decoder and not is_enc:
+                    n += self._attn_params()   # cross attention
+            elif kind == "mamba":
+                n += self._mamba_params()
+            elif kind == "rwkv":
+                n += self._rwkv_params()
+            fk = "dense" if is_enc else self.ffn_kind(li)
+            if fk == "dense":
+                n += self._mlp_params(ff)
+            else:
+                m = self.moe
+                n += m.n_routed * self._mlp_params(m.d_expert)
+                n += m.n_shared * self._mlp_params(m.d_expert)
+                n += d * m.n_routed     # router
+        return n
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE top-k counting)."""
+        if self.moe is None:
+            return self.n_params()
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        n = V * d + (0 if self.tie_embeddings else V * d)
+        for idx in range(self.n_layers):
+            kind = self.layer_kind(idx)
+            if kind == "attn":
+                n += self._attn_params()
+            elif kind == "mamba":
+                n += self._mamba_params()
+            if self.ffn_kind(idx) == "dense":
+                n += self._mlp_params(ff)
+            else:
+                m = self.moe
+                n += (m.top_k + m.n_shared) * self._mlp_params(m.d_expert)
+                n += d * m.n_routed
+        return n
+
+    def max_position_learned(self) -> int:
+        return min(self.max_position, 1 << 16)
+
+    def _attn_params(self) -> int:
+        d, H, Kv, dh = self.d_model, self.n_heads, self.n_kv_heads, self.d_head
+        n = d * H * dh + 2 * d * Kv * dh + H * dh * d
+        if self.qkv_bias:
+            n += H * dh + 2 * Kv * dh
+        return n
+
+    def _mlp_params(self, ff: int) -> int:
+        mult = 3 if self.act == "silu" else 2   # swiglu has gate+up+down
+        return mult * self.d_model * ff
+
+    def _mamba_params(self) -> int:
+        m = self.mamba
+        d_in = m.expand * self.d_model
+        dt_rank = m.dt_rank or -(-self.d_model // 16)
+        n = self.d_model * 2 * d_in                 # in_proj (x & z)
+        n += d_in * m.d_conv                        # causal conv
+        n += d_in * (dt_rank + 2 * m.d_state)       # x -> dt, B, C
+        n += dt_rank * d_in                         # dt_proj
+        n += d_in * m.d_state + d_in                # A_log, D
+        n += d_in * self.d_model                    # out_proj
+        return n
+
+    def _rwkv_params(self) -> int:
+        d = self.d_model
+        # time-mix: r,k,v,g,o projections + decay/first + token-shift mixers (lora-ish small)
+        return 5 * d * d + 4 * d + 2 * (d * 64)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned shape set for LM-family archs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    "train",   4_096,   256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768,  32),
+    "decode_32k":  ShapeConfig("decode_32k",  "decode",  32_768,  128),
+    "long_500k":   ShapeConfig("long_500k",   "decode",  524_288, 1),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch, shape) cell is runnable; returns (ok, reason)."""
+    if shape.name == "long_500k":
+        sub_quadratic = model.rwkv is not None or model.mamba is not None
+        if not sub_quadratic:
+            return False, ("pure full-attention arch: long_500k needs sub-quadratic "
+                           "attention (see DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Train / serve configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig
+    seq_len: int = 4096
+    global_batch: int = 256
+    steps: int = 1000
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    seed: int = 0
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    log_every: int = 10
+    grad_compression: str = "none"   # none | int8
+    loss_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    model: ModelConfig
+    swan: SwanConfig = field(default_factory=SwanConfig)
+    max_seq: int = 32_768
+    batch: int = 128
+    prefill_chunk: int = 2048
+    seed: int = 0

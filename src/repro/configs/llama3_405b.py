@@ -1,0 +1,28 @@
+"""Llama-3-405B — dense GQA decoder [arXiv:2407.21783].
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+Needs FSDP over data + TP over model + sequence sharding + grad accumulation
++ bf16 optimizer state to fit a 256-chip v5e pod.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b", family="dense",
+        n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, d_head=128,
+        d_ff=53248, vocab_size=128256,
+        norm="rmsnorm", act="silu", rope_theta=500000.0,
+        tp_style="heads", fsdp_data=True, seq_shard=True,
+        opt_state_dtype="bfloat16", grad_accum=16,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b-smoke", family="dense",
+        n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+        d_ff=192, vocab_size=256,
+        norm="rmsnorm", act="silu", rope_theta=500000.0,
+        fsdp_data=True, seq_shard=True, opt_state_dtype="bfloat16",
+    )

@@ -1,0 +1,25 @@
+"""Llama-3-8B — dense GQA decoder [arXiv:2407.21783].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256, RoPE theta 5e5.
+This is the paper's own primary evaluation model family (Llama-3.1-8B).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-8b", family="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+        d_ff=14336, vocab_size=128256,
+        norm="rmsnorm", act="silu", rope_theta=500000.0,
+        tp_style="heads",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-8b-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, vocab_size=256,
+        norm="rmsnorm", act="silu", rope_theta=500000.0,
+    )

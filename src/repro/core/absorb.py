@@ -1,0 +1,75 @@
+"""SWAN weight absorption (§4.2): fold P_VO into W_V / W_O offline.
+
+After absorption:
+  * value vectors are produced directly in the rotated space
+    (Ŵ_V = W_V · P_VO per KV head),
+  * the output projection undoes the rotation
+    (Ŵ_O^(j) = P_VO,expandedᵀ · W_O^(j) per query head),
+so the value-side rotation has ZERO runtime cost (paper Lemma A.2 proves the
+combination is exactly lossless).
+
+P_QK cannot be absorbed (RoPE does not commute with a static matrix) and is
+applied at runtime by ``repro.core.winnow.rotate_q/rotate_k``.
+
+All functions accept either a single layer's attention params or a stacked
+[L, ...] tree (scan-over-layers layout) — the leading-axis handling is
+automatic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _absorb_wv(wv: jnp.ndarray, p_vo: jnp.ndarray, n_kv: int, d_head: int) -> jnp.ndarray:
+    """wv [d, Kv·dh] x p_vo [Kv, dh, dh] -> Ŵ_V [d, Kv·dh]."""
+    d = wv.shape[0]
+    w = wv.reshape(d, n_kv, d_head)
+    w = jnp.einsum("dje,jef->djf", w.astype(jnp.float32),
+                   p_vo.astype(jnp.float32))
+    return w.reshape(d, n_kv * d_head).astype(wv.dtype)
+
+
+def _absorb_bv(bv: jnp.ndarray, p_vo: jnp.ndarray, n_kv: int, d_head: int) -> jnp.ndarray:
+    b = bv.reshape(n_kv, d_head)
+    b = jnp.einsum("je,jef->jf", b.astype(jnp.float32), p_vo.astype(jnp.float32))
+    return b.reshape(-1).astype(bv.dtype)
+
+
+def _absorb_wo(wo: jnp.ndarray, p_vo: jnp.ndarray, n_heads: int, n_kv: int,
+               d_head: int) -> jnp.ndarray:
+    """wo [H·dh, d]: each head slice W_O^(j) [dh, d] gets P_VOᵀ premultiplied,
+    with P_VO repeated for each query head in the KV group."""
+    d = wo.shape[-1]
+    G = n_heads // n_kv
+    w = wo.reshape(n_kv, G, d_head, d)
+    w = jnp.einsum("jef,jged->jgfd", p_vo.astype(jnp.float32),
+                   w.astype(jnp.float32))   # (P_VOᵀ W_O)[f,d] = Σ_e P[e,f]·W[e,d]
+    return w.reshape(n_heads * d_head, d).astype(wo.dtype)
+
+
+def absorb_vo(attn_params: Params, p_vo: jnp.ndarray, n_heads: int,
+              n_kv: int, d_head: int) -> Params:
+    """Return attention params with Ŵ_V / Ŵ_O (and b̂_v).  Handles both a
+    single layer ([d, ...] weights, p_vo [Kv, dh, dh]) and stacked layers
+    ([L, d, ...] weights, p_vo [L, Kv, dh, dh])."""
+    stacked = attn_params["wv"].ndim == 3
+    out = dict(attn_params)
+    if stacked:
+        import jax
+        out["wv"] = jax.vmap(lambda w, p: _absorb_wv(w, p, n_kv, d_head))(
+            attn_params["wv"], p_vo)
+        out["wo"] = jax.vmap(lambda w, p: _absorb_wo(w, p, n_heads, n_kv, d_head))(
+            attn_params["wo"], p_vo)
+        if "bv" in attn_params:
+            out["bv"] = jax.vmap(lambda b, p: _absorb_bv(b, p, n_kv, d_head))(
+                attn_params["bv"], p_vo)
+    else:
+        out["wv"] = _absorb_wv(attn_params["wv"], p_vo, n_kv, d_head)
+        out["wo"] = _absorb_wo(attn_params["wo"], p_vo, n_heads, n_kv, d_head)
+        if "bv" in attn_params:
+            out["bv"] = _absorb_bv(attn_params["bv"], p_vo, n_kv, d_head)
+    return out

@@ -1,0 +1,172 @@
+"""SWAN hybrid KV cache (§4.3, Figure 1): dense ring buffer + packed sparse.
+
+Layout per attention layer (model stacks a leading L axis when scanning):
+
+  sparse (historical, winnowed) — indexed directly by token position:
+    k_vals [B, Kv, S, k_max]   (cfg dtype, or int8 when quantized)
+    k_idx  [B, Kv, S, k_max]   int8   (topk mode only)
+    k_scale[B, Kv, S]          f32    (quantized only)         (same for v_*)
+  buffer (recent, dense):
+    buf_k / buf_v [B, Kv, b, dh]
+    buf_pos [b] int32  — token position held in each ring slot (-1 = empty)
+
+Ring semantics: token ``t`` lives in slot ``t % b``.  At decode step ``pos``
+the slot's previous occupant (token ``pos - b``) is winnowed and written to
+the sparse cache at its own position — Algorithm 1's pop-oldest, with XLA
+fixed shapes.  While ``pos < b`` the evicted slot is empty (buf_pos = -1);
+the clamped sparse write lands in the still-invalid region (< sp_len mask)
+so no guard select over the big arrays is needed.
+
+Memory accounting matches paper Eq. 1: the packed payload per vector is
+k·(2+1) bytes (16-bit vals + int8 idx) or k·(1+1) (+scale) when quantized.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.winnow import winnow_vector
+
+Params = Dict[str, Any]
+
+
+def _val_dtype(cfg, swan):
+    if swan.quantize:
+        return jnp.float8_e4m3fn if swan.quant_dtype == "fp8" else jnp.int8
+    return jnp.dtype(cfg.dtype)
+
+
+def init_swan_cache(cfg, swan, batch: int, max_seq: int) -> Params:
+    """Allocate one layer's hybrid cache."""
+    Kv, dh, b, k = cfg.n_kv_heads, cfg.d_head, swan.buffer, swan.k_max
+    vdt = _val_dtype(cfg, swan)
+    side = lambda: _side(batch, Kv, max_seq, k, vdt, swan)
+    return {
+        "k": side(), "v": side(),
+        "buf_k": jnp.zeros((batch, Kv, b, dh), jnp.dtype(cfg.dtype)),
+        "buf_v": jnp.zeros((batch, Kv, b, dh), jnp.dtype(cfg.dtype)),
+        "buf_pos": jnp.full((b,), -1, jnp.int32),
+    }
+
+
+def _side(B, Kv, S, k, vdt, swan) -> Params:
+    d: Params = {"vals": jnp.zeros((B, Kv, S, k), vdt)}
+    if swan.mode == "topk":
+        d["idx"] = jnp.zeros((B, Kv, S, k), jnp.int8)
+    if swan.quantize and swan.quant_dtype == "int8":
+        d["scale"] = jnp.zeros((B, Kv, S), jnp.float32)
+    return d
+
+
+def cache_bytes(cfg, swan, batch: int, max_seq: int) -> int:
+    """Physical bytes of one layer's hybrid cache (cf. paper Eq. 1)."""
+    Kv, dh, b, k = cfg.n_kv_heads, cfg.d_head, swan.buffer, swan.k_max
+    val_b = 1 if swan.quantize else jnp.dtype(cfg.dtype).itemsize
+    per_vec = k * val_b
+    if swan.mode == "topk":
+        per_vec += k                      # int8 indices
+    if swan.quantize and swan.quant_dtype == "int8":
+        per_vec += 4                      # f32 scale (fp8 needs none)
+    sparse = 2 * batch * Kv * max_seq * per_vec
+    buffer = 2 * batch * Kv * b * dh * jnp.dtype(cfg.dtype).itemsize
+    return sparse + buffer
+
+
+def dense_cache_bytes(cfg, batch: int, max_seq: int) -> int:
+    Kv, dh = cfg.n_kv_heads, cfg.d_head
+    return 2 * batch * Kv * max_seq * dh * jnp.dtype(cfg.dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Updates
+# ---------------------------------------------------------------------------
+
+def _write_sparse(side: Params, packed: Params, idx3) -> Params:
+    """Write packed vectors [B, Kv, n, ...] at sparse position idx3 (scalar)."""
+    out = dict(side)
+    out["vals"] = jax.lax.dynamic_update_slice(
+        side["vals"], packed["vals"].astype(side["vals"].dtype),
+        (0, 0, idx3, 0))
+    if "idx" in side:
+        out["idx"] = jax.lax.dynamic_update_slice(
+            side["idx"], packed["idx"], (0, 0, idx3, 0))
+    if "scale" in side:
+        out["scale"] = jax.lax.dynamic_update_slice(
+            side["scale"], packed["scale"], (0, 0, idx3))
+    return out
+
+
+def swan_cache_insert_decode(cache: Params, swan, cfg, k_hat: jnp.ndarray,
+                             v_hat: jnp.ndarray, pos, k_act=None) -> Params:
+    """One decode step: evict+winnow the ring slot's occupant, insert the new
+    rotated k̂/v̂ [B, 1, Kv, dh] at position ``pos``."""
+    b = swan.buffer
+    if b == 0:   # paper's bt=0 ablation: winnow immediately, no ring
+        out = dict(cache)
+        kt = k_hat.transpose(0, 2, 1, 3)
+        vt = v_hat.transpose(0, 2, 1, 3)
+        out["k"] = _write_sparse(cache["k"], winnow_vector(kt, swan, "k", k_act), pos)
+        out["v"] = _write_sparse(cache["v"], winnow_vector(vt, swan, "v", k_act), pos)
+        return out
+    slot = jnp.mod(pos, b)
+    old_pos = cache["buf_pos"][slot]
+    write_idx = jnp.maximum(old_pos, 0)
+
+    out = dict(cache)
+    # --- evict & winnow old occupant (garbage while old_pos < 0: masked) ---
+    old_k = jax.lax.dynamic_slice_in_dim(cache["buf_k"], slot, 1, axis=2)
+    old_v = jax.lax.dynamic_slice_in_dim(cache["buf_v"], slot, 1, axis=2)
+    out["k"] = _write_sparse(cache["k"], winnow_vector(old_k, swan, "k", k_act), write_idx)
+    out["v"] = _write_sparse(cache["v"], winnow_vector(old_v, swan, "v", k_act), write_idx)
+    # --- insert new token into the ring -----------------------------------
+    kt = k_hat.transpose(0, 2, 1, 3).astype(cache["buf_k"].dtype)  # [B,Kv,1,dh]
+    vt = v_hat.transpose(0, 2, 1, 3).astype(cache["buf_v"].dtype)
+    out["buf_k"] = jax.lax.dynamic_update_slice(cache["buf_k"], kt, (0, 0, slot, 0))
+    out["buf_v"] = jax.lax.dynamic_update_slice(cache["buf_v"], vt, (0, 0, slot, 0))
+    out["buf_pos"] = jax.lax.dynamic_update_slice(
+        cache["buf_pos"], jnp.asarray(pos, jnp.int32)[None], (slot,))
+    return out
+
+
+def swan_cache_insert_prefill(cache: Params, swan, cfg, k_hat: jnp.ndarray,
+                              v_hat: jnp.ndarray, k_act=None) -> Params:
+    """Bulk insert a prefill of S tokens (positions 0..S-1).
+
+    Tokens [0, S-b) are winnowed into the sparse cache; the last min(S, b)
+    tokens land dense in the ring at their natural slots (t % b).
+    """
+    from repro.sharding.api import shard
+    B, S = k_hat.shape[:2]
+    b = swan.buffer
+    n_sp = max(S - b, 0) if b else S
+    out = dict(cache)
+    kt = k_hat.transpose(0, 2, 1, 3)     # [B, Kv, S, dh]
+    vt = v_hat.transpose(0, 2, 1, 3)
+    # pin the pre-winnow tensors to the sparse cache's (seq over 'model')
+    # sharding: the per-token top-k then computes shard-locally and the
+    # packed writes stay local (§Perf cell D — removes the all-gathers
+    # GSPMD otherwise inserts around the bulk winnow)
+    kt = shard(kt, "kv_cache")
+    vt = shard(vt, "kv_cache")
+    if n_sp:
+        out["k"] = _write_sparse(cache["k"],
+                                 winnow_vector(kt[:, :, :n_sp], swan, "k", k_act), 0)
+        out["v"] = _write_sparse(cache["v"],
+                                 winnow_vector(vt[:, :, :n_sp], swan, "v", k_act), 0)
+    if b == 0:
+        return out
+    tail = jnp.arange(n_sp, S)
+    slots = tail % b
+    out["buf_k"] = cache["buf_k"].at[:, :, slots].set(
+        kt[:, :, n_sp:].astype(cache["buf_k"].dtype))
+    out["buf_v"] = cache["buf_v"].at[:, :, slots].set(
+        vt[:, :, n_sp:].astype(cache["buf_v"].dtype))
+    out["buf_pos"] = cache["buf_pos"].at[slots].set(tail.astype(jnp.int32))
+    return out
+
+
+def sparse_len(swan, pos) -> jnp.ndarray:
+    """Number of valid sparse entries at decode position ``pos``."""
+    return jnp.maximum(pos + 1 - swan.buffer, 0)

@@ -1,0 +1,123 @@
+"""SWAN offline calibration: joint-subspace SVD projection matrices (§4.1).
+
+For every attention layer ``l`` and KV-head ``j`` we build two orthogonal
+bases:
+
+  P_QK[l,j] = right-singular basis of  S_QK = concat(Q_grouped, K)
+  P_VO[l,j] = right-singular basis of  S_VO = concat(V, W_O_groupedᵀ)
+
+where Q/K are collected *after* RoPE (their state just before the attention
+score computation) and the W_O slices are grouped exactly like the query
+heads (G = H/Kv heads per KV head).
+
+The SVD is computed via the Gram matrix eigendecomposition
+(``eigh(SᵀS)``, eigenvalues descending) which is equivalent for the
+right-singular vectors and much cheaper than a full SVD of an
+[n_tokens·(G+1), d_h] matrix.
+
+Columns of P are ordered by decreasing singular value, so energy is
+concentrated in the *leading* rotated dimensions — the property both the
+paper's top-k winnowing and our TPU-native truncation mode exploit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def gram_basis_eigs(s: jnp.ndarray):
+    """(P [d,d], eigenvalues [d] descending) of the Gram matrix of s [N,d]."""
+    s = s.astype(jnp.float32)
+    gram = s.T @ s                                   # [d, d]
+    gram = gram + 1e-6 * jnp.eye(s.shape[-1], dtype=jnp.float32)
+    eigvals, eigvecs = jnp.linalg.eigh(gram)          # ascending
+    return eigvecs[:, ::-1], eigvals[::-1]
+
+
+def gram_basis(s: jnp.ndarray) -> jnp.ndarray:
+    """Right-singular basis of s [N, d]; columns by descending σ."""
+    return gram_basis_eigs(s)[0]
+
+
+def _group_queries(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """q [B, S, H, dh] -> [Kv, B·S·G, dh] (paper §4.1.1 reshape)."""
+    B, S, H, dh = q.shape
+    G = H // n_kv
+    q = q.reshape(B, S, n_kv, G, dh)
+    return q.transpose(2, 0, 1, 3, 4).reshape(n_kv, B * S * G, dh)
+
+
+def _group_wo(wo: jnp.ndarray, n_heads: int, n_kv: int, d_head: int) -> jnp.ndarray:
+    """wo [H·dh, d] -> [Kv, G·d, dh]: per-KV-group stack of W_O^(j)ᵀ slices."""
+    d = wo.shape[-1]
+    G = n_heads // n_kv
+    per_head = wo.reshape(n_heads, d_head, d)          # [H, dh, d]
+    grouped = per_head.reshape(n_kv, G, d_head, d)
+    return grouped.transpose(0, 1, 3, 2).reshape(n_kv, G * d, d_head)
+
+
+def layer_projections(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      wo: jnp.ndarray, n_heads: int, n_kv: int,
+                      d_head: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute (P_QK [Kv, dh, dh], P_VO [Kv, dh, dh]) for one layer.
+
+    q: [B, S, H, dh] (post-RoPE), k/v: [B, S, Kv, dh], wo: [H·dh, d].
+    """
+    B, S = k.shape[:2]
+    qg = _group_queries(q, n_kv)                       # [Kv, BSG, dh]
+    kg = k.transpose(2, 0, 1, 3).reshape(n_kv, B * S, d_head)
+    vg = v.transpose(2, 0, 1, 3).reshape(n_kv, B * S, d_head)
+    wog = _group_wo(wo, n_heads, n_kv, d_head)         # [Kv, G·d, dh]
+
+    s_qk = jnp.concatenate([qg, kg], axis=1)           # [Kv, BSG+BS, dh]
+    s_vo = jnp.concatenate([vg, wog], axis=1)          # [Kv, BS+G·d, dh]
+    p_qk, e_qk = jax.vmap(gram_basis_eigs)(s_qk)
+    p_vo, e_vo = jax.vmap(gram_basis_eigs)(s_vo)
+    return p_qk, p_vo, e_qk, e_vo
+
+
+def compute_projections(qkv_per_layer: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+                        wo_per_layer: jnp.ndarray, n_heads: int, n_kv: int,
+                        d_head: int) -> Params:
+    """Vectorised over the (stacked) layer axis.
+
+    qkv_per_layer: (q [L,B,S,H,dh], k [L,B,S,Kv,dh], v [L,B,S,Kv,dh]);
+    wo_per_layer: [L, H·dh, d].
+    Returns {"p_qk": [L,Kv,dh,dh], "p_vo": [L,Kv,dh,dh]} (float32).
+    """
+    q, k, v = qkv_per_layer
+    fn = lambda q_, k_, v_, wo_: layer_projections(q_, k_, v_, wo_,
+                                                   n_heads, n_kv, d_head)
+    p_qk, p_vo, e_qk, e_vo = jax.vmap(fn)(q, k, v, wo_per_layer)
+    # spectra [L,Kv,dh] enable the adaptive per-layer-k extension
+    return {"p_qk": p_qk, "p_vo": p_vo,
+            "spectrum_qk": e_qk, "spectrum_vo": e_vo}
+
+
+def random_orthogonal(key, shape_prefix: Tuple[int, ...], d: int) -> jnp.ndarray:
+    """Random orthogonal bases (paper Table 3 'Random Projection' ablation)."""
+    n = 1
+    for s in shape_prefix:
+        n *= s
+    keys = jax.random.split(key, n)
+
+    def one(k):
+        g = jax.random.normal(k, (d, d), jnp.float32)
+        qmat, r = jnp.linalg.qr(g)
+        return qmat * jnp.sign(jnp.diagonal(r))[None, :]
+
+    out = jax.vmap(one)(keys)
+    return out.reshape(*shape_prefix, d, d)
+
+
+def check_orthogonal(p: jnp.ndarray, atol: float = 1e-3) -> jnp.ndarray:
+    """Max |PᵀP − I| over all bases in a stacked array."""
+    d = p.shape[-1]
+    eye = jnp.eye(d, dtype=jnp.float32)
+    prod = jnp.einsum("...ij,...ik->...jk", p.astype(jnp.float32),
+                      p.astype(jnp.float32))
+    return jnp.max(jnp.abs(prod - eye))

@@ -1,0 +1,147 @@
+"""SWAN winnowing: runtime rotation, magnitude pruning, packing, quantization.
+
+Two winnow modes (DESIGN.md §2):
+  * ``topk``     — paper-faithful: keep the k_max largest-|·| dims per vector,
+                   store (values, int8 indices).  Packed fixed-width layout
+                   (byte-identical to the paper's CSR payload, Eq. 1).
+  * ``truncate`` — TPU-native beyond-paper mode: keep the *first* k_max dims
+                   of the SVD-rotated vector (dense low-rank slice, no index
+                   storage).
+
+Runtime tunability: ``k_active <= k_max`` zeroes the packed tail, so the
+effective retention can be changed per request without recompilation.
+
+Quantization (paper §4.3 / Eq. 1 8-bit variant): symmetric int8 with a
+per-vector float16 scale.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Runtime rotation (P_QK — cannot be absorbed because of RoPE, §4.2)
+# ---------------------------------------------------------------------------
+
+def rotate_q(q: jnp.ndarray, p_qk: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """q [B, S, H, dh] x p_qk [Kv, dh, dh] -> q̂ [B, S, Kv, G, dh]."""
+    B, S, H, dh = q.shape
+    G = H // n_kv
+    qg = q.reshape(B, S, n_kv, G, dh)
+    return jnp.einsum("bsjgd,jde->bsjge", qg, p_qk.astype(q.dtype))
+
+
+def rotate_k(k: jnp.ndarray, p_qk: jnp.ndarray) -> jnp.ndarray:
+    """k [B, S, Kv, dh] x p_qk [Kv, dh, dh] -> k̂ [B, S, Kv, dh]."""
+    return jnp.einsum("bsjd,jde->bsje", k, p_qk.astype(k.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Pruning / packing
+# ---------------------------------------------------------------------------
+
+def topk_pack(x: jnp.ndarray, k_max: int,
+              k_active: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-vector magnitude top-k (paper Algorithm 1 lines 7-11).
+
+    x: [..., dh] -> (vals [..., k_max] same dtype, idx [..., k_max] int8).
+    If ``k_active`` (traced scalar ok) is given, packed columns >= k_active
+    are zeroed — the runtime compression knob.
+
+    Implemented as a stable co-sort (values and indices ride along the
+    |x| keys) rather than top_k + take_along_axis: GSPMD replicates batch
+    dims around the gather, all-gathering the full [B,Kv,S,dh] pre-winnow
+    tensor per layer (§Perf cell D — 312 GB/device of collectives in the
+    32k prefill before this change).  Stable sort keeps lax.top_k's
+    lowest-index tie-breaking, so outputs are bit-identical.
+    """
+    dh = x.shape[-1]
+    if k_max > dh:
+        raise ValueError(f"k_max={k_max} > d_head={dh}")
+    mag = jnp.abs(x.astype(jnp.float32))
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    _, vals, idx = jax.lax.sort((-mag, x, iota), dimension=-1, num_keys=1,
+                                is_stable=True)
+    vals, idx = vals[..., :k_max], idx[..., :k_max]
+    if k_active is not None:
+        live = jnp.arange(k_max) < k_active
+        vals = jnp.where(live, vals, 0)
+    return vals, idx.astype(jnp.int8)
+
+
+def truncate_pack(x: jnp.ndarray, k_max: int,
+                  k_active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Keep leading k_max rotated dims (dense low-rank).  [..., dh] -> [..., k_max]."""
+    vals = x[..., :k_max]
+    if k_active is not None:
+        live = jnp.arange(k_max) < k_active
+        vals = jnp.where(live, vals, 0)
+    return vals
+
+
+def unpack_dense(vals: jnp.ndarray, idx: Optional[jnp.ndarray],
+                 dh: int) -> jnp.ndarray:
+    """Reference decompression (oracle/tests ONLY — the serving path never
+    materialises this in HBM).  [..., k] -> [..., dh]."""
+    if idx is None:   # truncate mode
+        pad = [(0, 0)] * (vals.ndim - 1) + [(0, dh - vals.shape[-1])]
+        return jnp.pad(vals, pad)
+    dense = jnp.zeros((*vals.shape[:-1], dh), vals.dtype)
+    return jnp.put_along_axis(dense, idx.astype(jnp.int32), vals, axis=-1,
+                              inplace=False)
+
+
+# ---------------------------------------------------------------------------
+# Quantization (int8 symmetric, per-vector scale)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(vals: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[..., k] -> (int8 [..., k], scale f32 [...])."""
+    absmax = jnp.max(jnp.abs(vals.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(vals.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Combined winnow step used by the hybrid cache
+# ---------------------------------------------------------------------------
+
+def winnow_vector(x: jnp.ndarray, swan, which: str,
+                  k_act: Optional[jnp.ndarray] = None) -> Params:
+    """Winnow rotated vectors x [..., dh] per the SwanConfig.
+
+    which: 'k' or 'v' (separate runtime retention knobs, paper Table 2).
+    ``k_act``: optional traced override of the runtime retention — used by
+    the adaptive per-layer-k extension (repro.core.adaptive).
+    Returns dict with 'vals' (+ 'idx' for topk, + 'scale' if quantized).
+    """
+    if k_act is None:
+        k_active = swan.kk if which == "k" else swan.kv
+        k_act = None if k_active == swan.k_max else jnp.asarray(k_active)
+    if swan.mode == "topk":
+        vals, idx = topk_pack(x, swan.k_max, k_act)
+        out: Params = {"vals": vals, "idx": idx}
+    else:
+        out = {"vals": truncate_pack(x, swan.k_max, k_act)}
+    if swan.quantize:
+        if swan.quant_dtype == "fp8":
+            # paper's literal "8-bit float": direct cast, no scale (Eq. 1:
+            # 2k+2 bytes/vector); e4m3 range (±448) covers rotated K/V
+            out["vals"] = out["vals"].astype(jnp.float8_e4m3fn)
+        else:
+            q, scale = quantize_int8(out["vals"])
+            out["vals"] = q
+            out["scale"] = scale
+    return out

@@ -1,0 +1,15 @@
+"""Jitted wrapper for the flash_prefill kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_prefill.flash_prefill import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = True):
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)

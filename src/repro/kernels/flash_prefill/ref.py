@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash_prefill: dense causal attention with GQA."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_reference(q, k, v, causal: bool = True):
+    B, Sq, H, dh = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    ke = jnp.repeat(k, G, axis=2)
+    ve = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   ke.astype(jnp.float32)) / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, ve.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Jitted public wrapper for the swan_decode Pallas kernel.
+
+``swan_decode_attention_kernel(q_hat, cache, swan, cfg, pos)`` mirrors
+``repro.core.swan_attention.swan_decode_attention`` but runs the fused
+Pallas kernel (interpret on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hybrid_cache import sparse_len
+from repro.kernels.swan_decode.swan_decode import swan_decode_pallas
+
+
+@partial(jax.jit, static_argnames=("swan", "cfg", "block_s", "interpret"))
+def swan_decode_attention_kernel(q_hat, cache, swan, cfg, pos,
+                                 block_s: int = 256, interpret: bool = True):
+    if swan.mode != "topk":
+        raise NotImplementedError("kernel path covers the paper-faithful "
+                                  "'topk' mode; truncate mode is a dense "
+                                  "low-rank matmul (plain XLA is optimal)")
+    sp = sparse_len(swan, pos)
+    ks = cache["k"].get("scale")
+    vs = cache["v"].get("scale")
+    return swan_decode_pallas(
+        q_hat, cache["k"]["vals"], cache["k"]["idx"],
+        cache["v"]["vals"], cache["v"]["idx"],
+        cache["buf_k"], cache["buf_v"], cache["buf_pos"],
+        jnp.asarray(pos, jnp.int32), jnp.asarray(sp, jnp.int32),
+        k_scale=ks, v_scale=vs,
+        block_s=block_s, interpret=interpret)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the swan_decode kernel: full decompression + exact
+softmax over [sparse ‖ buffer] (never used in serving)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def swan_decode_reference(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
+                          buf_pos, pos, sp_len, k_scale=None, v_scale=None):
+    B, Kv, G, dh = q.shape
+    S = k_vals.shape[2]
+
+    def dense(vals, idx, scale):
+        v = vals.astype(jnp.float32)
+        if scale is not None:
+            v = v * scale[..., None]
+        out = jnp.zeros((*v.shape[:-1], dh), jnp.float32)
+        return jnp.put_along_axis(out, idx.astype(jnp.int32), v, axis=-1,
+                                  inplace=False)
+
+    kd = dense(k_vals, k_idx, k_scale)                  # [B,Kv,S,dh]
+    vd = dense(v_vals, v_idx, v_scale)
+    qf = q.astype(jnp.float32)
+    s_sp = jnp.einsum("bjgd,bjtd->bjgt", qf, kd) / math.sqrt(dh)
+    sp_ok = jnp.arange(S)[None, None, None, :] < sp_len
+    s_sp = jnp.where(sp_ok, s_sp, -jnp.inf)
+
+    s_b = jnp.einsum("bjgd,bjtd->bjgt", qf,
+                     buf_k.astype(jnp.float32)) / math.sqrt(dh)
+    b_ok = (buf_pos >= 0) & (buf_pos <= pos)
+    s_b = jnp.where(b_ok[None, None, None, :], s_b, -jnp.inf)
+
+    s = jnp.concatenate([s_sp, s_b], axis=-1)
+    w = jax.nn.softmax(s, axis=-1)
+    v_all = jnp.concatenate([vd, buf_v.astype(jnp.float32)], axis=2)
+    o = jnp.einsum("bjgt,bjtd->bjgd", w, v_all)
+    return o.astype(q.dtype)

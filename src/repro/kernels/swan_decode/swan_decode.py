@@ -1,0 +1,166 @@
+"""Pallas TPU kernel: SWAN hybrid-cache decode attention.
+
+The kernel consumes the *compressed* cache directly (paper's
+"decompression-free" claim, TPU-native): each grid step DMAs one packed
+sparse tile (vals [BS,k] + idx [BS,k] int8, optionally int8 vals + f32
+scales) from HBM into VMEM, expands it **in registers** via a one-hot
+fori-loop (never materialising a dense cache in HBM), and feeds two MXU
+matmuls (scores, weighted values) through a flash-style online-softmax
+accumulator held in VMEM scratch.  The final grid step folds in the dense
+ring buffer.
+
+Grid: (B, Kv, S/BS) — the sequence axis iterates innermost so the scratch
+accumulators carry across sparse tiles.
+
+VMEM budget per step (defaults BS=256, k≤128, dh=128, f32):
+  packed tiles 2·(BS·k·4 + BS·k) ≈ 640 KB, expansion buffer BS·dh·4 =
+  128 KB, buffer tile b·dh·4 ≈ 64 KB, accumulators G·dh·4 — comfortably
+  inside the ~16 MB v5e VMEM with headroom for double buffering.
+dh=128 matches the lane width; BS is sublane-aligned; the j-loop expansion
+is VPU work that overlaps the HBM-bound tile streaming (decode is
+bandwidth-bound, so these FLOPs are free — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _expand_packed(vals, idx, bs: int, dh: int, k_max: int):
+    """One-hot in-register expansion: [BS,k] (+idx) -> dense [BS,dh] f32."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bs, dh), 1)
+
+    def body(j, acc):
+        v = jax.lax.dynamic_slice(vals, (0, j), (bs, 1))       # [BS,1]
+        i = jax.lax.dynamic_slice(idx, (0, j), (bs, 1))
+        return acc + v * (iota == i).astype(jnp.float32)
+
+    return jax.lax.fori_loop(0, k_max, body,
+                             jnp.zeros((bs, dh), jnp.float32))
+
+
+def _swan_decode_kernel(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
+                        ks_ref, vs_ref, bk_ref, bv_ref, bp_ref, o_ref,
+                        m_sc, l_sc, acc_sc, *, bs: int, dh: int, k_max: int,
+                        n_sblocks: int, quantized: bool):
+    sb = pl.program_id(2)
+    G = q_ref.shape[2]
+    scale = 1.0 / math.sqrt(dh)
+    pos = meta_ref[0]
+    sp_len = meta_ref[1]
+
+    @pl.when(sb == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)                        # [G, dh]
+
+    # ---- sparse tile ------------------------------------------------------
+    kv = kv_ref[0, 0].astype(jnp.float32)                      # [BS, k]
+    vv = vv_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        kv = kv * ks_ref[0, 0][:, None]
+        vv = vv * vs_ref[0, 0][:, None]
+    ki = ki_ref[0, 0].astype(jnp.int32)
+    vi = vi_ref[0, 0].astype(jnp.int32)
+    k_dense = _expand_packed(kv, ki, bs, dh, k_max)            # [BS, dh]
+    v_dense = _expand_packed(vv, vi, bs, dh, k_max)
+
+    s = jax.lax.dot_general(q, k_dense, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    t_pos = sb * bs + jax.lax.broadcasted_iota(jnp.int32, (G, bs), 1)
+    s = jnp.where(t_pos < sp_len, s, NEG_INF)
+
+    m_prev, l_prev = m_sc[...], l_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(t_pos < sp_len, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+    acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+        p, v_dense, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    # ---- final step: dense ring buffer + write-out -------------------------
+    @pl.when(sb == n_sblocks - 1)
+    def _finalize():
+        bk = bk_ref[0, 0].astype(jnp.float32)                  # [b, dh]
+        bv = bv_ref[0, 0].astype(jnp.float32)
+        bpos = bp_ref[...]                                     # [b]
+        s_b = jax.lax.dot_general(q, bk, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32) * scale
+        valid = (bpos >= 0) & (bpos <= pos)
+        s_b = jnp.where(valid[None, :], s_b, NEG_INF)
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_fin = jnp.maximum(m_prev, s_b.max(axis=1, keepdims=True))
+        p_b = jnp.where(valid[None, :], jnp.exp(s_b - m_fin), 0.0)
+        corr = jnp.exp(m_prev - m_fin)
+        l_fin = l_prev * corr + p_b.sum(axis=1, keepdims=True)
+        acc = acc_sc[...] * corr + jax.lax.dot_general(
+            p_b, bv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[0, 0] = (acc / jnp.maximum(l_fin, 1e-30)).astype(o_ref.dtype)
+
+
+def swan_decode_pallas(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
+                       buf_pos, pos, sp_len, k_scale=None, v_scale=None,
+                       *, block_s: int = 256, interpret: bool = True):
+    """q [B,Kv,G,dh]; packed sparse [B,Kv,S,k]; buffer [B,Kv,b,dh].
+
+    Returns o [B,Kv,G,dh].  ``interpret=True`` validates on CPU; on TPU set
+    False for the compiled kernel.
+    """
+    B, Kv, G, dh = q.shape
+    S, k_max = k_vals.shape[2], k_vals.shape[3]
+    b = buf_k.shape[2]
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    n_sblocks = S // bs
+    quantized = k_scale is not None
+    if not quantized:   # dummy scale operands keep one kernel signature
+        k_scale = jnp.ones((B, Kv, S), jnp.float32)
+        v_scale = jnp.ones((B, Kv, S), jnp.float32)
+    meta = jnp.asarray([pos, sp_len], jnp.int32)
+
+    kernel = functools.partial(
+        _swan_decode_kernel, bs=bs, dh=dh, k_max=k_max,
+        n_sblocks=n_sblocks, quantized=quantized)
+    grid = (B, Kv, n_sblocks)
+    specs = [
+        pl.BlockSpec((2,), lambda b_, j, s: (0,)),                     # meta
+        pl.BlockSpec((1, 1, G, dh), lambda b_, j, s: (b_, j, 0, 0)),   # q
+        pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),  # k_vals
+        pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),  # k_idx
+        pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),  # v_vals
+        pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),  # v_idx
+        pl.BlockSpec((1, 1, bs), lambda b_, j, s: (b_, j, s)),         # k_scale
+        pl.BlockSpec((1, 1, bs), lambda b_, j, s: (b_, j, s)),         # v_scale
+        pl.BlockSpec((1, 1, b, dh), lambda b_, j, s: (b_, j, 0, 0)),   # buf_k
+        pl.BlockSpec((1, 1, b, dh), lambda b_, j, s: (b_, j, 0, 0)),   # buf_v
+        pl.BlockSpec((b,), lambda b_, j, s: (0,)),                     # buf_pos
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=specs,
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b_, j, s: (b_, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # m
+            pltpu.VMEM((G, 1), jnp.float32),   # l
+            pltpu.VMEM((G, dh), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(meta, q, k_vals, k_idx, v_vals, v_idx, k_scale, v_scale,
+      buf_k, buf_v, buf_pos)

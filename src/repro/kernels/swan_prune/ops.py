@@ -1,0 +1,13 @@
+"""Jitted wrapper for the swan_prune kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.swan_prune.swan_prune import swan_prune_pallas
+
+
+@partial(jax.jit, static_argnames=("k_max", "tile", "interpret"))
+def swan_prune(x, p_rot, k_max: int, tile: int = 256, interpret: bool = True):
+    return swan_prune_pallas(x, p_rot, k_max, tile=tile, interpret=interpret)

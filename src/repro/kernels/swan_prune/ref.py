@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for swan_prune: rotate via einsum + lax.top_k pack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swan_prune_reference(x, p_rot, k_max: int):
+    """x [B,Kv,S,dh], p_rot [Kv,dh,dh] -> (vals, idx int8)."""
+    xh = jnp.einsum("bjsd,jde->bjse", x.astype(jnp.float32),
+                    p_rot.astype(jnp.float32))
+    _, idx = jax.lax.top_k(jnp.abs(xh), k_max)
+    vals = jnp.take_along_axis(xh, idx, axis=-1)
+    return vals.astype(x.dtype), idx.astype(jnp.int8)

@@ -1,0 +1,252 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell and extract roofline terms from the compiled artifact.
+
+MUST be run as a script/module (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line below executes before any other import so jax sees 512
+placeholder host devices.  Do NOT import this module from code that already
+initialised jax with a different device count.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape decode_32k [--multi-pod] [--swan]
+  python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512").strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis.hlo import analyze_hlo                    # noqa: E402
+from repro.analysis.roofline import roofline_report           # noqa: E402
+from repro.configs import (SHAPES, SwanConfig, get_config,    # noqa: E402
+                           shape_applicable)
+from repro.configs.base import OptimizerConfig                # noqa: E402
+from repro.launch.io import decode_input_specs, train_input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.models import get_model, swan_applicable           # noqa: E402
+from repro.optim.adamw import init_opt_state                  # noqa: E402
+from repro.runtime.train_loop import make_train_step          # noqa: E402
+from repro.sharding.api import use_rules                      # noqa: E402
+from repro.sharding.serve_specs import (batch_pspecs,         # noqa: E402
+                                        sanitize_tree,
+                                        serve_state_pspecs)
+from repro.sharding.specs import activation_rules, params_pspecs  # noqa: E402
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), tree_specs)
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def default_swan(cfg, mode: str = "topk", quantize: bool = False) -> SwanConfig:
+    """Paper-faithful default: 50% retention, 128-token buffer (Fig. 2b)."""
+    return SwanConfig(k_max=cfg.d_head // 2, buffer=128, mode=mode,
+                      quantize=quantize)
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               swan_on: bool, swan_mode: str = "topk",
+               swan_quantize: bool = False,
+               overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; return the record for EXPERIMENTS.md."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "swan": swan_on, "status": "skipped", "reason": reason}
+    if swan_on and not swan_applicable(cfg):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "swan": swan_on, "status": "skipped",
+                "reason": "SWAN inapplicable (no KV cache)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    api = get_model(cfg)
+    rules = activation_rules(cfg, mesh)
+    swan = default_swan(cfg, swan_mode, swan_quantize) if swan_on else None
+    t0 = time.monotonic()
+
+    params_abs = api.abstract_params(cfg)
+    p_specs = sanitize_tree(params_pspecs(params_abs, cfg, mesh), params_abs, mesh)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, OptimizerConfig(), cfg.grad_accum)
+        opt_abs = jax.eval_shape(
+            lambda p: init_opt_state(p, OptimizerConfig()), params_abs)
+        o_specs = {"m": p_specs, "v": p_specs, "step": P()}
+        batch_abs = train_input_specs(cfg, shape.global_batch, shape.seq_len)
+        b_specs = batch_pspecs(batch_abs, mesh)
+        with use_rules(rules):
+            lowered = jax.jit(step, donate_argnums=(0, 1), in_shardings=(
+                _shardings(p_specs, mesh), _shardings(o_specs, mesh),
+                _shardings(b_specs, mesh))).lower(params_abs, opt_abs, batch_abs)
+    else:
+        cache_len = shape.seq_len + cfg.n_prefix_tokens   # vlm prefix rows
+        state_abs = jax.eval_shape(
+            lambda: api.init_serve_state(cfg, swan, shape.global_batch,
+                                         cache_len))
+        s_specs = serve_state_pspecs(state_abs, mesh)
+        proj_abs = None
+        if swan_on:
+            n_proj = _n_proj_layers(cfg)
+            proj_abs = {"p_qk": jax.ShapeDtypeStruct(
+                (n_proj, cfg.n_kv_heads, cfg.d_head, cfg.d_head), jnp.float32)}
+        if shape.kind == "prefill":
+            batch_abs = train_input_specs(cfg, shape.global_batch, shape.seq_len)
+            b_specs = batch_pspecs(batch_abs, mesh)
+
+            def fn(p, batch, state, proj):
+                return api.prefill(p, cfg, batch, state, swan, proj)
+
+            with use_rules(rules):
+                lowered = jax.jit(fn, donate_argnums=(2,), in_shardings=(
+                    _shardings(p_specs, mesh), _shardings(b_specs, mesh),
+                    _shardings(s_specs, mesh),
+                    _shardings(_abstract_specs(proj_abs), mesh),
+                )).lower(params_abs, batch_abs, state_abs, proj_abs)
+        else:  # decode
+            tok_abs = decode_input_specs(cfg, shape.global_batch)["token"]
+            tok_spec = batch_pspecs({"t": tok_abs}, mesh)["t"]
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def fn(p, token, pos, state, proj):
+                return api.decode_step(p, cfg, token, pos, state, swan, proj)
+
+            with use_rules(rules):
+                lowered = jax.jit(fn, donate_argnums=(3,), in_shardings=(
+                    _shardings(p_specs, mesh),
+                    NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()),
+                    _shardings(s_specs, mesh),
+                    _shardings(_abstract_specs(proj_abs), mesh),
+                )).lower(params_abs, tok_abs, pos_abs, state_abs, proj_abs)
+
+    t_lower = time.monotonic() - t0
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    ca = ca if isinstance(ca, dict) else (ca[0] if ca else {})
+    hlo = analyze_hlo(compiled.as_text())
+    record = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "swan": swan_on, "status": "ok",
+        "n_devices": mesh.devices.size,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "xla_cost": {"flops": ca.get("flops", -1.0),
+                     "bytes_accessed": ca.get("bytes accessed", -1.0)},
+        "hlo_cost": {"flops": hlo.flops, "hbm_bytes": hlo.hbm_bytes,
+                     "collective_bytes": hlo.collective_bytes,
+                     "collective_count": hlo.collective_count,
+                     "per_collective": hlo.per_collective},
+    }
+    record["roofline"] = roofline_report(record, cfg, shape, swan)
+    return record
+
+
+def _n_proj_layers(cfg) -> int:
+    if cfg.mamba is not None:
+        return cfg.n_layers // cfg.attn_period
+    return cfg.n_layers
+
+
+def _abstract_specs(proj_abs):
+    if proj_abs is None:
+        return None
+    return {"p_qk": P()}
+
+
+def iter_cells(multi_pod: bool, swan_variants: bool = True):
+    from repro.configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            yield arch, shape_name, multi_pod, False
+            if (swan_variants and shape.kind != "train"
+                    and swan_applicable(cfg)
+                    and shape_applicable(cfg, shape)[0]):
+                yield arch, shape_name, multi_pod, True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--swan", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--swan-mode", default="topk", choices=["topk", "truncate"])
+    ap.add_argument("--swan-quantize", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=val (int), e.g. grad_accum=4")
+    ap.add_argument("--tag", default="", help="suffix for the output file")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = int(v) if v.lstrip("-").isdigit() else v
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = (list(iter_cells(args.multi_pod)) if args.all
+             else [(args.arch, args.shape, args.multi_pod, args.swan)])
+    n_fail = 0
+    for arch, shape_name, mp, swan_on in cells:
+        tag = f"{arch}__{shape_name}__{'mp' if mp else 'sp'}{'__swan' if swan_on else ''}"
+        if args.tag:
+            tag += f"__{args.tag}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip existing] {tag}", flush=True)
+            continue
+        print(f"[cell] {tag} ...", flush=True)
+        try:
+            rec = build_cell(arch, shape_name, mp, swan_on,
+                             swan_mode=args.swan_mode,
+                             swan_quantize=args.swan_quantize,
+                             overrides=overrides or None)
+        except Exception as e:   # a failing cell is a bug — record & continue
+            rec = {"arch": arch, "shape": shape_name, "multi_pod": mp,
+                   "swan": swan_on, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            n_fail += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s"
+                     f" coll={r['collective_s']:.2e}s dom={r['bottleneck']}"
+                     f" (compile {rec['compile_s']}s)")
+        print(f"[done] {tag}: {status}{extra}", flush=True)
+    print(f"dry-run finished, failures: {n_fail}", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

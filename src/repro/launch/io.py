@@ -1,0 +1,54 @@
+"""Model input specs: ShapeDtypeStruct stand-ins + concrete batch builders.
+
+``input_specs(cfg, shape)`` returns the abstract inputs for a (arch × shape)
+cell — weak-type-correct, shardable, zero allocation — used by the dry-run.
+``make_batch`` materialises small concrete batches for smoke tests.
+
+Modality frontends are STUBS per the assignment: [vlm] gets precomputed
+patch embeddings, [audio] precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def train_input_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    return {"token": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
+               ) -> Dict[str, Any]:
+    """Concrete deterministic batch for smoke tests / examples."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, Any] = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                              jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_prefix_tokens, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.dtype))
+    if cfg.is_encoder_decoder:
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.encoder_seq, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.dtype))
+    return out

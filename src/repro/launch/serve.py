@@ -1,0 +1,75 @@
+"""Serving launcher: calibrate SWAN on a checkpoint (or fresh weights) and
+run batched generation.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --swan --k 8 --buffer 16 --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import SwanConfig, get_config, get_smoke_config
+from repro.launch.io import make_batch
+from repro.models import get_model, swan_applicable
+from repro.runtime.serve_loop import ServeSession, calibrate_swan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", help="restore params from a checkpoint")
+    ap.add_argument("--swan", action="store_true")
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--buffer", type=int, default=128)
+    ap.add_argument("--mode", default="topk", choices=["topk", "truncate"])
+    ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--max-seq", type=int, default=512)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt_dir:
+        ck = Checkpointer(args.ckpt_dir)
+        step = ck.latest_step()
+        if step is not None:
+            state = ck.restore(step, {"params": params})
+            params = state["params"]
+            print(f"restored checkpoint step {step}")
+
+    swan = projections = None
+    if args.swan:
+        if not swan_applicable(cfg):
+            raise SystemExit(f"SWAN inapplicable to {cfg.name} "
+                             "(see DESIGN.md §Arch-applicability)")
+        b = min(args.buffer, args.max_seq // 4)
+        swan = SwanConfig(k_max=args.k or cfg.d_head // 2, buffer=b,
+                          mode=args.mode, quantize=args.quantize)
+        projections = calibrate_swan(api, cfg, params,
+                                     make_batch(cfg, 4, 64, seed=3))
+        params = api.absorb(params, cfg, projections)
+        print(f"SWAN: k_max={swan.k_max}/{cfg.d_head} buffer={b} "
+              f"mode={swan.mode} int8={swan.quantize}")
+
+    sess = ServeSession(cfg, params, swan=swan, projections=projections,
+                        max_seq=args.max_seq, batch=args.batch)
+    prompt = make_batch(cfg, args.batch, args.prompt_len, seed=11)
+    out = sess.generate(prompt, args.tokens, temperature=args.temperature)
+    for i in range(min(args.batch, 2)):
+        print(f"seq {i}: {out[i].tolist()}")
+    rep = sess.cache_report()
+    extra = f" ({rep['saving']:.0%} vs dense)" if "saving" in rep else ""
+    print(f"cache [{rep['mode']}]: {rep['bytes'] / 1e6:.2f} MB{extra}")
+
+
+if __name__ == "__main__":
+    main()

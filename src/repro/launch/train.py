@@ -1,0 +1,60 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+        --steps 50 --batch 8 --seq 128 [--data tokens.bin]
+
+Full-config multi-pod launches use the same code path with the production
+mesh (runs on real TPU slices; on this CPU container use --smoke).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import (OptimizerConfig, TrainConfig, get_config,
+                           get_smoke_config)
+from repro.data.pipeline import FileStream
+from repro.runtime.train_loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--data", help="binary token file (default: synthetic)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8"])
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.grad_accum:
+        cfg = cfg.replace(grad_accum=args.grad_accum)
+    tc = TrainConfig(
+        model=cfg, seq_len=args.seq, global_batch=args.batch,
+        steps=args.steps,
+        optimizer=OptimizerConfig(lr=args.lr, decay_steps=args.steps,
+                                  state_dtype=cfg.opt_state_dtype),
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
+        log_every=max(args.steps // 20, 1),
+        grad_compression=args.grad_compression)
+    stream = None
+    if args.data:
+        stream = FileStream(args.data, cfg.vocab_size, args.batch, args.seq)
+    out = Trainer(tc, stream=stream).run()
+    for row in out["log"]:
+        print(f"step {row['step']:6d}  loss {row['loss']:.4f}  "
+              f"gnorm {row['grad_norm']:.3f}  lr {row['lr']:.2e}")
+    if out["stragglers"]:
+        print(f"watchdog: {len(out['stragglers'])} straggler steps flagged")
+    print(f"finished at step {out['step']}; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.registry import ModelApi, get_model, swan_applicable  # noqa: F401

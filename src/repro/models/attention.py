@@ -1,0 +1,248 @@
+"""Multi-head / grouped-query attention with RoPE and KV caches.
+
+Three execution paths:
+  * ``attn_forward``      — full (train / prefill / encoder) attention.
+    Uses a memory-O(S·Bq) blocked online-softmax implementation for long
+    sequences (pure JAX lax.scan; GSPMD-shardable) and plain dense attention
+    for short ones.
+  * ``attn_decode_dense`` — single-token decode against a dense KV cache.
+  * SWAN decode lives in ``repro.core.swan_attention`` (hybrid cache).
+
+Parameter layout (per layer):
+  wq: [d, H*dh]   wk: [d, Kv*dh]   wv: [d, Kv*dh]   wo: [H*dh, d]
+  (+ optional biases bq/bk/bv/bo)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, split_keys
+
+Params = Dict[str, Any]
+
+DENSE_ATTN_MAX_SEQ = 2048     # above this, use blocked attention
+ATTN_BLOCK = 512              # kv block for blocked attention
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_attn_params(key, cfg) -> Params:
+    d, H, Kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = split_keys(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p: Params = {
+        "wq": dense_init(ks[0], d, H * dh, dtype),
+        "wk": dense_init(ks[1], d, Kv * dh, dtype),
+        "wv": dense_init(ks[2], d, Kv * dh, dtype),
+        "wo": dense_init(ks[3], H * dh, d, dtype, scale=(H * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((Kv * dh,), dtype)
+        p["bv"] = jnp.zeros((Kv * dh,), dtype)
+    if cfg.attn_out_bias:
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def project_qkv(p: Params, cfg, x: jnp.ndarray,
+                positions: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> q [B, S, H, dh], k/v [B, S, Kv, dh]; RoPE applied."""
+    B, S, _ = x.shape
+    H, Kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Kv, dh)
+    v = v.reshape(B, S, Kv, dh)
+    if cfg.pos == "rope" and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def output_proj(p: Params, o: jnp.ndarray) -> jnp.ndarray:
+    """o: [B, S, H, dh] -> [B, S, d]."""
+    B, S = o.shape[:2]
+    y = o.reshape(B, S, -1) @ p["wo"]
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jnp.ndarray, group: int) -> jnp.ndarray:
+    """[B, S, Kv, dh] -> [B, S, Kv*G, dh] by repeating each kv head G times."""
+    if group == 1:
+        return k
+    B, S, Kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, Kv, group, dh)).reshape(B, S, Kv * group, dh)
+
+
+def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    mask: Optional[jnp.ndarray], causal: bool,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """Plain softmax attention.  q: [B,Sq,H,dh], k/v: [B,Sk,Kv,dh]."""
+    B, Sq, H, dh = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    k = _expand_kv(k, H // Kv)
+    v = _expand_kv(v, H // Kv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(dh)
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        qp = jnp.arange(Sq)[:, None] + q_offset
+        kp = jnp.arange(Sk)[None, :]
+        scores = jnp.where((kp <= qp)[None, None], scores, neg)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return o
+
+
+def blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool, q_offset: int = 0,
+                      block: int = ATTN_BLOCK) -> jnp.ndarray:
+    """Online-softmax attention, O(Sq·block) memory.  Pure JAX; shardable.
+
+    Scans over KV blocks carrying (m, l, acc) flash-attention stats.
+    """
+    B, Sq, H, dh = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    k = _expand_kv(k, H // Kv)
+    v = _expand_kv(v, H // Kv)
+    nb = -(-Sk // block)
+    pad = nb * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, block, H, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, H, dh).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32)
+    q_pos = jnp.arange(Sq) + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        bi, kblk, vblk = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32)) * scale
+        k_pos = bi * block + jnp.arange(block)
+        valid = k_pos[None, :] < Sk
+        if causal:
+            valid = valid & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(valid[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nb), kb, vb))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)   # [B,Sq,H,dh]
+
+
+def attn_forward(p: Params, cfg, x: jnp.ndarray,
+                 positions: Optional[jnp.ndarray] = None,
+                 causal: bool = True,
+                 kv_x: Optional[jnp.ndarray] = None,
+                 kv_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full attention forward.  ``kv_x`` given -> cross attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if kv_x is None:
+        q, k, v = project_qkv(p, cfg, x, positions)
+    else:
+        q, _, _ = project_qkv(p, cfg, x, positions)
+        # recompute: cross attention keys/values from encoder stream
+        Sk = kv_x.shape[1]
+        kf = kv_x @ p["wk"]
+        vf = kv_x @ p["wv"]
+        if "bk" in p:
+            kf, vf = kf + p["bk"], vf + p["bv"]
+        k = kf.reshape(B, Sk, cfg.n_kv_heads, cfg.d_head)
+        v = vf.reshape(B, Sk, cfg.n_kv_heads, cfg.d_head)
+        causal = False
+    if max(q.shape[1], k.shape[1]) > DENSE_ATTN_MAX_SEQ:
+        o = blocked_attention(q, k, v, causal=causal)
+    else:
+        o = dense_attention(q, k, v, mask=None, causal=causal)
+    return output_proj(p, o)
+
+
+# ---------------------------------------------------------------------------
+# Dense KV cache (baseline decode path)
+# ---------------------------------------------------------------------------
+
+def init_dense_cache(cfg, batch: int, max_seq: int, dtype=None) -> Params:
+    """Cache layout [B, Kv, S, dh]: S shards over 'model' for serving."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    Kv, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((batch, Kv, max_seq, dh), dtype),
+        "v": jnp.zeros((batch, Kv, max_seq, dh), dtype),
+    }
+
+
+def dense_cache_insert(cache: Params, k: jnp.ndarray, v: jnp.ndarray,
+                       pos) -> Params:
+    """Insert [B, S_new, Kv, dh] at position ``pos`` (scalar)."""
+    kt = k.transpose(0, 2, 1, 3).astype(cache["k"].dtype)   # [B,Kv,S,dh]
+    vt = v.transpose(0, 2, 1, 3).astype(cache["v"].dtype)
+    idx = (0, 0, pos, 0)
+    return {
+        "k": jax.lax.dynamic_update_slice(cache["k"], kt, idx),
+        "v": jax.lax.dynamic_update_slice(cache["v"], vt, idx),
+    }
+
+
+def attn_decode_dense(p: Params, cfg, x: jnp.ndarray, pos,
+                      cache: Params) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode with dense cache.  x: [B, 1, d]; pos: scalar int."""
+    B = x.shape[0]
+    H, Kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+    q, k, v = project_qkv(p, cfg, x, positions)
+    cache = dense_cache_insert(cache, k, v, pos)
+    S = cache["k"].shape[2]
+    kc = cache["k"]                                   # [B,Kv,S,dh] storage dtype
+    vc = cache["v"]
+    qh = q.reshape(B, Kv, H // Kv, dh)
+    # cache operands stay in storage dtype (bf16): converting the whole
+    # cache to f32 would double decode HBM traffic; dots accumulate f32.
+    scores = jnp.einsum("bngd,bnsd->bngs", qh.astype(kc.dtype), kc,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    valid = jnp.arange(S)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bngs,bnsd->bngd", w.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, H, dh).astype(x.dtype)
+    return output_proj(p, o), cache

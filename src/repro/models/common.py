@@ -1,0 +1,130 @@
+"""Shared model building blocks: norms, RoPE, initialisers, dtype helpers.
+
+All modules are pure functions over parameter pytrees (nested dicts of
+jnp arrays).  Parameter creation is always via an ``init_*`` function taking
+a PRNG key so that ``jax.eval_shape`` can derive abstract parameter trees
+for the dry-run without allocating anything.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LLM inits)."""
+    std = scale if scale is not None else d_in ** -0.5
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out), jnp.float32) * std
+    return w.astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return w.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+def init_norm(key, cfg, d: int) -> Params:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), dt(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), dt(cfg.param_dtype)),
+                "bias": jnp.zeros((d,), dt(cfg.param_dtype))}
+    if cfg.norm == "nonparam_ln":   # OLMo: no learnable affine
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Normalise in fp32, cast back to activation dtype."""
+    xdtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+        x = x * p["scale"].astype(jnp.float32)
+    else:  # layernorm / nonparam_ln
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+        if cfg.norm == "layernorm":
+            x = x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return x.astype(xdtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary positional embedding (RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies [d_head//2], float32."""
+    exponents = np.arange(0, d_head, 2, dtype=np.float32) / d_head
+    return jnp.asarray(1.0 / (theta ** exponents))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply RoPE.  x: [..., seq, n_heads, d_head]; positions: [..., seq].
+
+    Uses the "half-split" convention (llama): rotate pairs
+    (x[..., :d/2], x[..., d/2:]).
+    """
+    d_head = x.shape[-1]
+    inv = rope_freqs(d_head, theta)                    # [d/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # [..., S, 1, d/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu_sq":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def causal_mask(sq: int, sk: int, offset: int = 0) -> jnp.ndarray:
+    """Boolean [sq, sk] mask; True = attend.  offset = key positions that
+    precede the first query position (for chunked prefill)."""
+    q_pos = jnp.arange(sq)[:, None] + offset
+    k_pos = jnp.arange(sk)[None, :]
+    return k_pos <= q_pos
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,302 @@
+"""Whisper-style encoder-decoder transformer (audio family).
+
+The conv audio frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings [B, F, d_model] (``input_specs`` supplies them).
+
+Serving: encoder runs once; cross-attention K/V are computed once per layer
+(static cache).  The decoder self-attention cache is dense or SWAN-hybrid.
+Beyond-paper extension (SwanConfig.compress_cross_attn): the static
+cross-attn K/V can be winnowed once at encode time — a pure memory win since
+those entries are never "recent context" (no ring buffer needed).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import absorb as absorb_mod
+from repro.core import hybrid_cache as hc
+from repro.core import swan_attention as swa
+from repro.core.winnow import rotate_k, rotate_q, winnow_vector, unpack_dense, dequantize_int8
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import apply_norm, embed_init, init_norm, split_keys
+from repro.models.transformer import _swan_layer_decode, _swan_layer_prefill
+from repro.sharding.api import shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _enc_layer(key, cfg) -> Params:
+    ks = split_keys(key, 4)
+    return {"ln1": init_norm(ks[0], cfg, cfg.d_model),
+            "attn": attn.init_attn_params(ks[1], cfg),
+            "ln2": init_norm(ks[2], cfg, cfg.d_model),
+            "mlp": mlp_mod.init_mlp_params(ks[3], cfg, cfg.d_ff)}
+
+
+def _dec_layer(key, cfg) -> Params:
+    ks = split_keys(key, 6)
+    return {"ln1": init_norm(ks[0], cfg, cfg.d_model),
+            "attn": attn.init_attn_params(ks[1], cfg),
+            "ln_x": init_norm(ks[2], cfg, cfg.d_model),
+            "cross": attn.init_attn_params(ks[3], cfg),
+            "ln2": init_norm(ks[4], cfg, cfg.d_model),
+            "mlp": mlp_mod.init_mlp_params(ks[5], cfg, cfg.d_ff)}
+
+
+def init_lm_params(key, cfg) -> Params:
+    ks = split_keys(key, 8)
+    enc_layers = [_enc_layer(k, cfg) for k in
+                  split_keys(ks[0], cfg.n_encoder_layers)]
+    dec_layers = [_dec_layer(k, cfg) for k in split_keys(ks[1], cfg.n_layers)]
+    stack = lambda ls: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ls)
+    return {
+        "enc": {"pos_embed": embed_init(ks[2], cfg.encoder_seq, cfg.d_model,
+                                        jnp.dtype(cfg.param_dtype)),
+                "layers": stack(enc_layers),
+                "ln_f": init_norm(ks[3], cfg, cfg.d_model)},
+        "dec": {"embed": embed_init(ks[4], cfg.vocab_size, cfg.d_model,
+                                    jnp.dtype(cfg.param_dtype)),
+                "pos_embed": embed_init(ks[5], cfg.max_position_learned(),
+                                        cfg.d_model, jnp.dtype(cfg.param_dtype)),
+                "layers": stack(dec_layers),
+                "ln_f": init_norm(ks[6], cfg, cfg.d_model)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def encode(p: Params, cfg, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames [B, F, d] (stub embeddings) -> encoder output [B, F, d]."""
+    B, F, _ = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + p["enc"]["pos_embed"][None, :F].astype(x.dtype)
+    x = shard(x, "enc_out")
+
+    def body(x, lp):
+        h = apply_norm(lp["ln1"], cfg, x)
+        h = attn.attn_forward(lp["attn"], cfg, h, None, causal=False)
+        x = x + h
+        h = mlp_mod.mlp_forward(lp["mlp"], cfg, apply_norm(lp["ln2"], cfg, x))
+        return x + h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, p["enc"]["layers"])
+    return apply_norm(p["enc"]["ln_f"], cfg, x)
+
+
+def _dec_layer_fwd(lp: Params, cfg, x, positions, enc_out):
+    h = apply_norm(lp["ln1"], cfg, x)
+    h = attn.attn_forward(lp["attn"], cfg, h, positions)
+    x = x + h
+    h = apply_norm(lp["ln_x"], cfg, x)
+    h = attn.attn_forward(lp["cross"], cfg, h, None, kv_x=enc_out)
+    x = x + h
+    h = mlp_mod.mlp_forward(lp["mlp"], cfg, apply_norm(lp["ln2"], cfg, x))
+    return x + h
+
+
+def lm_forward(p: Params, cfg, tokens: jnp.ndarray,
+               frames: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    enc_out = encode(p, cfg, frames)
+    B, S = tokens.shape
+    x = jnp.take(p["dec"]["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = x + jnp.take(p["dec"]["pos_embed"],
+                     jnp.minimum(positions, p["dec"]["pos_embed"].shape[0] - 1),
+                     axis=0).astype(x.dtype)
+    x = shard(x, "residual")
+
+    def body(x, lp):
+        return _dec_layer_fwd(lp, cfg, x, positions, enc_out), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, p["dec"]["layers"])
+    x = apply_norm(p["dec"]["ln_f"], cfg, x)
+    logits = x @ p["dec"]["embed"].T.astype(x.dtype)    # whisper ties head
+    return shard(logits, "logits"), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SWAN calibration for decoder self-attention
+# ---------------------------------------------------------------------------
+
+def collect_qkv(p: Params, cfg, tokens: jnp.ndarray, frames: jnp.ndarray):
+    enc_out = encode(p, cfg, frames)
+    B, S = tokens.shape
+    x = jnp.take(p["dec"]["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = x + jnp.take(p["dec"]["pos_embed"],
+                     jnp.minimum(positions, p["dec"]["pos_embed"].shape[0] - 1),
+                     axis=0).astype(x.dtype)
+
+    def body(x, lp):
+        h = apply_norm(lp["ln1"], cfg, x)
+        cap = attn.project_qkv(lp["attn"], cfg, h, positions)
+        return _dec_layer_fwd(lp, cfg, x, positions, enc_out), cap
+
+    _, (q, k, v) = jax.lax.scan(body, x, p["dec"]["layers"])
+    return q, k, v, p["dec"]["layers"]["attn"]["wo"]
+
+
+def absorb_swan(p: Params, cfg, projections: Params) -> Params:
+    out = {"enc": p["enc"], "dec": dict(p["dec"])}
+    layers = dict(p["dec"]["layers"])
+    layers["attn"] = absorb_mod.absorb_vo(layers["attn"], projections["p_vo"],
+                                          cfg.n_heads, cfg.n_kv_heads, cfg.d_head)
+    out["dec"]["layers"] = layers
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_serve_state(cfg, swan, batch: int, max_seq: int) -> Params:
+    L = cfg.n_layers
+    use_swan = swan is not None and swan.enabled
+    if use_swan:
+        self_c = hc.init_swan_cache(cfg, swan, batch, max_seq)
+    else:
+        self_c = attn.init_dense_cache(cfg, batch, max_seq)
+    bcast = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (L, *x.shape)), t)
+    Kv, dh, F = cfg.n_kv_heads, cfg.d_head, cfg.encoder_seq
+    if use_swan and swan.compress_cross_attn:
+        cross = {"k": hc._side(batch, Kv, F, swan.k_max, hc._val_dtype(cfg, swan), swan),
+                 "v": hc._side(batch, Kv, F, swan.k_max, hc._val_dtype(cfg, swan), swan)}
+    else:
+        cross = {"k": jnp.zeros((batch, Kv, F, dh), jnp.dtype(cfg.dtype)),
+                 "v": jnp.zeros((batch, Kv, F, dh), jnp.dtype(cfg.dtype))}
+    return {"self": bcast(self_c), "cross": bcast(cross)}
+
+
+def _cross_kv(lp: Params, cfg, enc_out: jnp.ndarray):
+    B, F, _ = enc_out.shape
+    k = enc_out @ lp["wk"]
+    v = enc_out @ lp["wv"]
+    if "bk" in lp:
+        k, v = k + lp["bk"], v + lp["bv"]
+    k = k.reshape(B, F, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = v.reshape(B, F, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    return k, v   # [B, Kv, F, dh]
+
+
+def _cross_attend(lp: Params, cfg, x: jnp.ndarray, cross: Params) -> jnp.ndarray:
+    """Decode-time cross attention against the (possibly winnowed) cache."""
+    B = x.shape[0]
+    H, Kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ lp["wq"]
+    if "bq" in lp:
+        q = q + lp["bq"]
+    q = q.reshape(B, -1, H, dh)
+    if isinstance(cross["k"], dict):       # winnowed static cache
+        def expand(side):
+            vals = side["vals"]
+            if "scale" in side:
+                vals = dequantize_int8(vals, side["scale"], jnp.float32)
+            return unpack_dense(vals.astype(jnp.float32), side.get("idx"), dh)
+        kc, vc = expand(cross["k"]), expand(cross["v"])
+    else:
+        kc, vc = (cross["k"].astype(jnp.float32),
+                  cross["v"].astype(jnp.float32))
+    qh = q.reshape(B, -1, Kv, H // Kv, dh).transpose(0, 2, 3, 1, 4)  # [B,Kv,G,Sq,dh]
+    s = jnp.einsum("bngqd,bnsd->bngqs", qh.astype(jnp.float32), kc) / math.sqrt(dh)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqs,bnsd->bngqd", w, vc)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, -1, H, dh).astype(x.dtype)
+    return attn.output_proj(lp, o)
+
+
+def prefill(p: Params, cfg, tokens: jnp.ndarray, state: Params,
+            swan=None, projections=None, frames: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Params]:
+    enc_out = encode(p, cfg, frames)
+    B, S = tokens.shape
+    x = jnp.take(p["dec"]["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = x + jnp.take(p["dec"]["pos_embed"],
+                     jnp.minimum(positions, p["dec"]["pos_embed"].shape[0] - 1),
+                     axis=0).astype(x.dtype)
+    use_swan = swan is not None and swan.enabled
+    pq = (projections["p_qk"] if use_swan
+          else jnp.zeros((cfg.n_layers, 1), jnp.float32))
+
+    def body(x, xs):
+        lp, st, pq_l = xs
+        new_st = dict(st)
+        h = apply_norm(lp["ln1"], cfg, x)
+        if use_swan:
+            h, new_st["self"] = _swan_layer_prefill(lp, pq_l, st["self"], cfg,
+                                                    swan, h, positions)
+        else:
+            q, k, v = attn.project_qkv(lp["attn"], cfg, h, positions)
+            new_st["self"] = attn.dense_cache_insert(st["self"], k, v, 0)
+            o = attn.dense_attention(q, k, v, None, causal=True) \
+                if S <= attn.DENSE_ATTN_MAX_SEQ else \
+                attn.blocked_attention(q, k, v, causal=True)
+            h = attn.output_proj(lp["attn"], o)
+        x = x + h
+        # build (and optionally winnow) the static cross cache
+        kc, vc = _cross_kv(lp["cross"], cfg, enc_out)
+        if isinstance(st["cross"]["k"], dict):
+            new_st["cross"] = {
+                "k": dict(winnow_vector(kc, swan, "k")),
+                "v": dict(winnow_vector(vc, swan, "v")),
+            }
+        else:
+            new_st["cross"] = {"k": kc.astype(st["cross"]["k"].dtype),
+                               "v": vc.astype(st["cross"]["v"].dtype)}
+        h = apply_norm(lp["ln_x"], cfg, x)
+        h = _cross_attend(lp["cross"], cfg, h, new_st["cross"])
+        x = x + h
+        h = mlp_mod.mlp_forward(lp["mlp"], cfg, apply_norm(lp["ln2"], cfg, x))
+        return x + h, new_st
+
+    # note: _swan_layer_prefill / decode use lp["attn"] internally
+    x, state = jax.lax.scan(body, x, (p["dec"]["layers"], state, pq))
+    x = apply_norm(p["dec"]["ln_f"], cfg, x[:, -1:])
+    return x @ p["dec"]["embed"].T.astype(x.dtype), state
+
+
+def decode_step(p: Params, cfg, token: jnp.ndarray, pos, state: Params,
+                swan=None, projections=None) -> Tuple[jnp.ndarray, Params]:
+    B = token.shape[0]
+    x = jnp.take(p["dec"]["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    pe = jnp.take(p["dec"]["pos_embed"],
+                  jnp.minimum(pos, p["dec"]["pos_embed"].shape[0] - 1), axis=0)
+    x = x + pe[None, None].astype(x.dtype)
+    use_swan = swan is not None and swan.enabled
+    pq = (projections["p_qk"] if use_swan
+          else jnp.zeros((cfg.n_layers, 1), jnp.float32))
+
+    def body(x, xs):
+        lp, st, pq_l = xs
+        new_st = dict(st)
+        h = apply_norm(lp["ln1"], cfg, x)
+        if use_swan:
+            h, new_st["self"] = _swan_layer_decode(lp, pq_l, st["self"], cfg,
+                                                   swan, h, pos)
+        else:
+            h, new_st["self"] = attn.attn_decode_dense(lp["attn"], cfg, h,
+                                                       pos, st["self"])
+        x = x + h
+        h = apply_norm(lp["ln_x"], cfg, x)
+        h = _cross_attend(lp["cross"], cfg, h, st["cross"])
+        x = x + h
+        h = mlp_mod.mlp_forward(lp["mlp"], cfg, apply_norm(lp["ln2"], cfg, x))
+        return x + h, new_st
+
+    x, state = jax.lax.scan(body, x, (p["dec"]["layers"], state, pq))
+    x = apply_norm(p["dec"]["ln_f"], cfg, x)
+    return (x @ p["dec"]["embed"].T.astype(x.dtype))[:, 0], state

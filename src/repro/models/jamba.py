@@ -1,0 +1,293 @@
+"""Jamba: hybrid Mamba + attention + MoE decoder (1:7 attn:mamba, MoE e=2).
+
+Layers are organised in groups of ``attn_period`` (8): within a group the
+pattern is static (attention at ``attn_offset``, mamba elsewhere; MoE on odd
+global indices), so the model scans over *groups* with the 8 sub-layers
+unrolled — compact HLO for 72 layers, heterogeneous structure preserved.
+
+SWAN applies to the attention layers only (all sequence-proportional state);
+mamba layers keep O(1) recurrent state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import absorb as absorb_mod
+from repro.core import hybrid_cache as hc
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models.common import apply_norm, embed_init, init_norm, split_keys
+from repro.models.transformer import (_swan_layer_decode, _swan_layer_prefill)
+from repro.sharding.api import shard
+
+Params = Dict[str, Any]
+
+
+def _group_size(cfg) -> int:
+    return cfg.attn_period
+
+
+def n_groups(cfg) -> int:
+    assert cfg.n_layers % _group_size(cfg) == 0
+    return cfg.n_layers // _group_size(cfg)
+
+
+def init_group(key, cfg, g: int) -> Params:
+    P = _group_size(cfg)
+    ks = split_keys(key, P)
+    group: Params = {}
+    for pidx in range(P):
+        li = g * P + pidx
+        lks = split_keys(ks[pidx], 4)
+        lp: Params = {"ln1": init_norm(lks[0], cfg, cfg.d_model),
+                      "ln2": init_norm(lks[2], cfg, cfg.d_model)}
+        if cfg.layer_kind(li) == "attn":
+            lp["attn"] = attn.init_attn_params(lks[1], cfg)
+        else:
+            lp["mamba"] = mb.init_mamba_params(lks[1], cfg)
+        if cfg.ffn_kind(li) == "moe":
+            lp["experts"] = moe_mod.init_moe_params(lks[3], cfg)
+        else:
+            lp["mlp"] = mlp_mod.init_mlp_params(lks[3], cfg, cfg.d_ff)
+        group[f"pos{pidx}"] = lp
+    return group
+
+
+def init_lm_params(key, cfg) -> Params:
+    G = n_groups(cfg)
+    ks = split_keys(key, G + 3)
+    groups = [init_group(ks[g], cfg, g) for g in range(G)]
+    return {
+        "embed": embed_init(ks[-3], cfg.vocab_size, cfg.d_model,
+                            jnp.dtype(cfg.param_dtype)),
+        "groups": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups),
+        "ln_f": init_norm(ks[-2], cfg, cfg.d_model),
+        "head": embed_init(ks[-1], cfg.vocab_size, cfg.d_model,
+                           jnp.dtype(cfg.param_dtype)).T,
+    }
+
+
+def _sublayer(lp: Params, cfg, x, positions, aux):
+    h = apply_norm(lp["ln1"], cfg, x)
+    if "attn" in lp:
+        h = attn.attn_forward(lp["attn"], cfg, h, positions)
+    else:
+        h = mb.mamba_forward(lp["mamba"], cfg, h)
+    x = shard(x + h, "residual")
+    h = apply_norm(lp["ln2"], cfg, x)
+    if "experts" in lp:
+        h, a = moe_mod.moe_forward(lp["experts"], cfg, h)
+        aux = aux + a["moe_load_balance"] + a["moe_router_z"]
+    else:
+        h = mlp_mod.mlp_forward(lp["mlp"], cfg, h)
+    return shard(x + h, "residual"), aux
+
+
+def lm_forward(p: Params, cfg, tokens: jnp.ndarray,
+               prefix_embeds=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S = tokens.shape
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = shard(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    P = _group_size(cfg)
+
+    def body(carry, gp):
+        x, aux = carry
+        for pidx in range(P):
+            x, aux = _sublayer(gp[f"pos{pidx}"], cfg, x, positions, aux)
+        return (x, aux), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               p["groups"])
+    x = apply_norm(p["ln_f"], cfg, x)
+    return shard(x @ p["head"].astype(x.dtype), "logits"), aux
+
+
+# ---------------------------------------------------------------------------
+# SWAN calibration (attention layers only)
+# ---------------------------------------------------------------------------
+
+def collect_qkv(p: Params, cfg, tokens: jnp.ndarray, prefix_embeds=None):
+    """Returns per-attention-layer (q, k, v, wo) stacked over groups."""
+    B, S = tokens.shape
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    P = _group_size(cfg)
+    apos = cfg.attn_offset
+
+    def body(carry, gp):
+        x, aux = carry
+        cap = None
+        for pidx in range(P):
+            lp = gp[f"pos{pidx}"]
+            if pidx == apos:
+                h = apply_norm(lp["ln1"], cfg, x)
+                cap = attn.project_qkv(lp["attn"], cfg, h, positions)
+            x, aux = _sublayer(lp, cfg, x, positions, aux)
+        return (x, aux), cap
+
+    (_, _), (q, k, v) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), p["groups"])
+    wo = p["groups"][f"pos{apos}"]["attn"]["wo"]
+    return q, k, v, wo
+
+
+def absorb_swan(p: Params, cfg, projections: Params) -> Params:
+    apos = cfg.attn_offset
+    out = dict(p)
+    groups = dict(p["groups"])
+    gp = dict(groups[f"pos{apos}"])
+    gp["attn"] = absorb_mod.absorb_vo(gp["attn"], projections["p_vo"],
+                                      cfg.n_heads, cfg.n_kv_heads, cfg.d_head)
+    groups[f"pos{apos}"] = gp
+    out["groups"] = groups
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_serve_state(cfg, swan, batch: int, max_seq: int) -> Params:
+    G = n_groups(cfg)
+    P = _group_size(cfg)
+    use_swan = swan is not None and swan.enabled
+    if use_swan:
+        acache = hc.init_swan_cache(cfg, swan, batch, max_seq)
+    else:
+        acache = attn.init_dense_cache(cfg, batch, max_seq)
+    mstate = mb.init_mamba_state(cfg, batch)
+    state: Params = {"attn": jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (G, *x.shape)), acache)}
+    for pidx in range(P):
+        if pidx != cfg.attn_offset:
+            state[f"mamba{pidx}"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (G, *x.shape)), mstate)
+    return state
+
+
+def _ffn(lp, cfg, x):
+    h = apply_norm(lp["ln2"], cfg, x)
+    if "experts" in lp:
+        # serving: no-drop dispatch (prefill ≡ incremental decode)
+        h, _ = moe_mod.moe_forward(lp["experts"], cfg, h, no_drop=True)
+    else:
+        h = mlp_mod.mlp_forward(lp["mlp"], cfg, h)
+    return x + h
+
+
+def prefill(p: Params, cfg, tokens: jnp.ndarray, state: Params,
+            swan=None, projections=None, prefix_embeds=None
+            ) -> Tuple[jnp.ndarray, Params]:
+    B, S = tokens.shape
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    P = _group_size(cfg)
+    apos = cfg.attn_offset
+    use_swan = swan is not None and swan.enabled
+    pq = (projections["p_qk"] if use_swan
+          else jnp.zeros((n_groups(cfg), 1), jnp.float32))
+
+    def body(x, xs):
+        gp, st, pq_g = xs
+        new_st = dict(st)
+        for pidx in range(P):
+            lp = gp[f"pos{pidx}"]
+            h = apply_norm(lp["ln1"], cfg, x)
+            if pidx == apos:
+                if use_swan:
+                    h, new_st["attn"] = _swan_layer_prefill(
+                        lp, pq_g, st["attn"], cfg, swan, h, positions)
+                else:
+                    q, k, v = attn.project_qkv(lp["attn"], cfg, h, positions)
+                    new_st["attn"] = attn.dense_cache_insert(st["attn"], k, v, 0)
+                    if S > attn.DENSE_ATTN_MAX_SEQ:
+                        o = attn.blocked_attention(q, k, v, causal=True)
+                    else:
+                        o = attn.dense_attention(q, k, v, None, causal=True)
+                    h = attn.output_proj(lp["attn"], o)
+            else:
+                h = mb.mamba_forward(lp["mamba"], cfg, h)
+                # rebuild the recurrent state as if prefill ran sequentially
+                new_st[f"mamba{pidx}"] = _mamba_state_from_prefill(
+                    lp["mamba"], cfg, apply_norm(lp["ln1"], cfg, x))
+            x = x + h
+            x = _ffn(lp, cfg, x)
+        return x, new_st
+
+    x, state = jax.lax.scan(body, x, (p["groups"], state, pq))
+    x = apply_norm(p["ln_f"], cfg, x[:, -1:])
+    return x @ p["head"].astype(x.dtype), state
+
+
+def _mamba_state_from_prefill(mp: Params, cfg, x: jnp.ndarray) -> Params:
+    """Run the chunked scan once more, keeping only the final state + conv tail."""
+    B, S, d = x.shape
+    m = cfg.mamba
+    xz = x @ mp["w_in"]
+    u, _ = jnp.split(xz, 2, axis=-1)
+    upad = jnp.pad(u, ((0, 0), (m.d_conv - 1, 0), (0, 0)))
+    conv_tail = upad[:, -(m.d_conv - 1):] if m.d_conv > 1 else upad[:, :0]
+    uc = sum(upad[:, i:i + S] * mp["conv_w"][i][None, None]
+             for i in range(m.d_conv)) + mp["conv_b"]
+    uc = jax.nn.silu(uc)
+    dt, Bm, Cm = mb._ssm_inputs(mp, cfg, uc)
+    A = -jnp.exp(mp["a_log"])
+    h = jnp.zeros((B, m.expand * d, m.d_state), jnp.float32)
+    chunk = mb.CHUNK
+    nb = -(-S // chunk)
+    pad = nb * chunk - S
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        uc = jnp.pad(uc, ((0, 0), (0, pad), (0, 0)))
+    resh = lambda t: t.reshape(B, nb, chunk, -1).transpose(1, 0, 2, 3)
+
+    def step(h, inp):
+        dt_c, B_c, C_c, u_c = inp
+        _, h = mb._chunk_scan(dt_c, A, B_c, C_c, u_c.astype(jnp.float32), h)
+        return h, None
+
+    h, _ = jax.lax.scan(step, h, (resh(dt), resh(Bm), resh(Cm), resh(uc)))
+    return {"h": h, "conv": conv_tail.astype(jnp.dtype(cfg.dtype))}
+
+
+def decode_step(p: Params, cfg, token: jnp.ndarray, pos, state: Params,
+                swan=None, projections=None) -> Tuple[jnp.ndarray, Params]:
+    x = jnp.take(p["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    P = _group_size(cfg)
+    apos = cfg.attn_offset
+    use_swan = swan is not None and swan.enabled
+    pq = (projections["p_qk"] if use_swan
+          else jnp.zeros((n_groups(cfg), 1), jnp.float32))
+
+    def body(x, xs):
+        gp, st, pq_g = xs
+        new_st = dict(st)
+        for pidx in range(P):
+            lp = gp[f"pos{pidx}"]
+            h = apply_norm(lp["ln1"], cfg, x)
+            if pidx == apos:
+                if use_swan:
+                    h, new_st["attn"] = _swan_layer_decode(
+                        lp, pq_g, st["attn"], cfg, swan, h, pos)
+                else:
+                    h, new_st["attn"] = attn.attn_decode_dense(
+                        lp["attn"], cfg, h, pos, st["attn"])
+            else:
+                h, new_st[f"mamba{pidx}"] = mb.mamba_decode_step(
+                    lp["mamba"], cfg, h, st[f"mamba{pidx}"])
+            x = x + h
+            x = _ffn(lp, cfg, x)
+        return x, new_st
+
+    x, state = jax.lax.scan(body, x, (p["groups"], state, pq))
+    x = apply_norm(p["ln_f"], cfg, x)
+    return (x @ p["head"].astype(x.dtype))[:, 0], state

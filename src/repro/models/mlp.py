@@ -1,0 +1,46 @@
+"""Dense feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init, split_keys
+
+Params = Dict[str, Any]
+
+
+def init_mlp_params(key, cfg, d_ff: int) -> Params:
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 3)
+    if cfg.act == "silu":   # SwiGLU: gate, up, down
+        p = {
+            "w_gate": dense_init(ks[0], d, d_ff, dtype),
+            "w_up":   dense_init(ks[1], d, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d, dtype, scale=d_ff ** -0.5),
+        }
+    else:                    # 2-matrix MLP (gelu / relu_sq)
+        p = {
+            "w_up":   dense_init(ks[0], d, d_ff, dtype),
+            "w_down": dense_init(ks[1], d_ff, d, dtype, scale=d_ff ** -0.5),
+        }
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp_forward(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    act = act_fn(cfg.act)
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_up"]
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = act(h)
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y

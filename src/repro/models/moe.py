@@ -1,0 +1,125 @@
+"""Mixture-of-experts FFN with routed + shared experts.
+
+Dispatch is the capacity-based scatter/gather formulation (Switch-style,
+without the O(T·E·C) one-hot dispatch tensor):
+
+  1. router logits -> top-k experts per token
+  2. position-in-expert via a cumulative sum over the flattened (token, slot)
+     assignment order; tokens beyond an expert's capacity are dropped
+  3. tokens scattered into an [E, C, d] buffer, batched expert matmuls,
+     gathered back weighted by the (renormalised) gate values.
+
+Expert weights carry a leading E axis so EP = shard that axis over 'model'
+(XLA inserts the all-to-all equivalents around the scatter/gather).  For
+expert counts not divisible by the mesh (qwen2-moe: 60), the expert axis is
+replicated and the expert *hidden* axis is tensor-parallel instead.
+
+Aux losses (load-balance + router z-loss) are returned for the train loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init, split_keys
+
+Params = Dict[str, Any]
+
+
+def init_moe_params(key, cfg) -> Params:
+    m = cfg.moe
+    d, dx = cfg.d_model, m.d_expert
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 5)
+    E = m.n_routed
+
+    def stack(key, d_in, d_out, n, scale=None):
+        keys = jax.random.split(key, n)
+        return jnp.stack([dense_init(k, d_in, d_out, dtype, scale) for k in keys])
+
+    p: Params = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": stack(ks[1], d, dx, E),
+        "w_up":   stack(ks[2], d, dx, E),
+        "w_down": stack(ks[3], dx, d, E, scale=dx ** -0.5),
+    }
+    if m.n_shared:
+        sk = split_keys(ks[4], 3)
+        S, ds = m.n_shared, m.n_shared * dx
+        # shared experts fused into one wide FFN (equivalent & faster)
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], d, ds, dtype),
+            "w_up":   dense_init(sk[1], d, ds, dtype),
+            "w_down": dense_init(sk[2], ds, d, dtype, scale=ds ** -0.5),
+        }
+    return p
+
+
+def moe_forward(p: Params, cfg, x: jnp.ndarray, no_drop: bool = False
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B, S, d] -> (y [B, S, d], aux losses).
+
+    ``no_drop=True`` (serving paths): for small token counts (decode steps,
+    short prefills) capacity = T·K, so no token is ever dropped — makes
+    prefill ≡ incremental decode exactly (capacity dropping is batch-order
+    dependent: fine for training, breaks serving determinism).  For long
+    prefills the exact bound would cost an O(T·K·E·d) buffer, so a doubled
+    capacity factor is used instead (drops become vanishingly rare).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_routed, m.top_k
+    act = act_fn(cfg.act)
+    tokens = x.reshape(T, d)
+
+    logits = tokens.astype(jnp.float32) @ p["router"]            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                # [T, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- capacity bookkeeping -----------------------------------------
+    if no_drop and T * K <= 4096:
+        C = T * K
+    else:
+        cf = m.capacity_factor * (2.0 if no_drop else 1.0)
+        C = max(int(cf * T * K / E), 1)
+    flat_e = gate_idx.reshape(-1)                                 # [T*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)           # [T*K, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot                # 1-based ranks
+    pos_in_e = (pos_in_e.sum(axis=-1) - 1)                        # [T*K]
+    keep = pos_in_e < C
+    # dropped tokens scatter to a sacrificial slot (C) that is sliced off
+    safe_pos = jnp.where(keep, pos_in_e, C)
+
+    token_ids = jnp.repeat(jnp.arange(T), K)                      # [T*K]
+    buf = jnp.zeros((E, C + 1, d), tokens.dtype)
+    buf = buf.at[flat_e, safe_pos].set(tokens[token_ids])
+    buf = buf[:, :C]                                              # [E, C, d]
+
+    # ---- expert computation (batched over E) ---------------------------
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # [E, C, d]
+
+    # ---- gather back ----------------------------------------------------
+    out_buf = jnp.pad(out_buf, ((0, 0), (0, 1), (0, 0)))          # dropped -> 0
+    gathered = out_buf[flat_e, safe_pos]                          # [T*K, d]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = gate_vals.reshape(-1)[:, None].astype(gathered.dtype)
+    y = jax.ops.segment_sum(gathered * w, token_ids, num_segments=T)
+
+    if m.n_shared:
+        sp = p["shared"]
+        hs = act(tokens @ sp["w_gate"]) * (tokens @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+
+    # ---- aux losses ------------------------------------------------------
+    me = jnp.mean(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=(0, 1))  # fraction routed
+    pe = jnp.mean(probs, axis=0)                                   # mean router prob
+    aux_lb = E * jnp.sum(me * pe) * m.router_aux_weight
+    aux_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_weight
+    aux = {"moe_load_balance": aux_lb, "moe_router_z": aux_z}
+    return y.reshape(B, S, d), aux

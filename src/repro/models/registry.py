@@ -1,0 +1,133 @@
+"""Uniform model API across the four family implementations.
+
+Every family exposes:
+  init_params / abstract_params / forward / loss /
+  init_serve_state / prefill / decode_step /
+  collect_qkv / absorb (None when SWAN is inapplicable — rwkv6)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, jamba, rwkv_model
+from repro.models import transformer as tfm
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    init_params: Callable
+    forward: Callable                 # (p, cfg, batch) -> (logits, aux)
+    init_serve_state: Callable        # (cfg, swan, batch, max_seq) -> state
+    prefill: Callable                 # (p, cfg, batch, state, swan, proj) -> (logits, state)
+    decode_step: Callable             # (p, cfg, token, pos, state, swan, proj) -> (logits, state)
+    collect_qkv: Optional[Callable]   # calibration capture
+    absorb: Optional[Callable]
+
+    def abstract_params(self, cfg):
+        return jax.eval_shape(lambda: self.init_params(jax.random.PRNGKey(0), cfg))
+
+    def loss(self, p, cfg, batch):
+        logits, aux = self.forward(p, cfg, batch)
+        return _xent_loss(logits, aux, cfg, batch)
+
+
+def _xent_loss(logits, aux, cfg, batch):
+    tokens = batch["tokens"]
+    n_prefix = logits.shape[1] - tokens.shape[1]
+    if n_prefix > 0:
+        logits = logits[:, n_prefix:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    zloss = 1e-4 * (logz ** 2).mean()
+    loss = nll + zloss + aux
+    return loss, {"nll": nll, "aux": aux, "z": zloss}
+
+
+# ---------------------------------------------------------------------------
+# Family adapters (normalise batch handling)
+# ---------------------------------------------------------------------------
+
+def _tfm_forward(p, cfg, batch):
+    return tfm.lm_forward(p, cfg, batch["tokens"], batch.get("prefix_embeds"))
+
+
+def _tfm_prefill(p, cfg, batch, state, swan=None, proj=None):
+    return tfm.lm_prefill(p, cfg, batch["tokens"], state, swan, proj,
+                          batch.get("prefix_embeds"))
+
+
+def _jamba_forward(p, cfg, batch):
+    return jamba.lm_forward(p, cfg, batch["tokens"])
+
+
+def _jamba_prefill(p, cfg, batch, state, swan=None, proj=None):
+    return jamba.prefill(p, cfg, batch["tokens"], state, swan, proj)
+
+
+def _rwkv_forward(p, cfg, batch):
+    return rwkv_model.lm_forward(p, cfg, batch["tokens"])
+
+
+def _rwkv_prefill(p, cfg, batch, state, swan=None, proj=None):
+    return rwkv_model.prefill(p, cfg, batch["tokens"], state, swan, proj)
+
+
+def _encdec_forward(p, cfg, batch):
+    return encdec.lm_forward(p, cfg, batch["tokens"], batch["frames"])
+
+
+def _encdec_prefill(p, cfg, batch, state, swan=None, proj=None):
+    return encdec.prefill(p, cfg, batch["tokens"], state, swan, proj,
+                          frames=batch["frames"])
+
+
+def _encdec_collect(p, cfg, batch):
+    return encdec.collect_qkv(p, cfg, batch["tokens"], batch["frames"])
+
+
+def _tfm_collect(p, cfg, batch):
+    return tfm.collect_qkv(p, cfg, batch["tokens"], batch.get("prefix_embeds"))
+
+
+def _jamba_collect(p, cfg, batch):
+    return jamba.collect_qkv(p, cfg, batch["tokens"])
+
+
+_FAMILIES = {
+    "dense": ModelApi(tfm.init_lm_params, _tfm_forward, tfm.init_caches,
+                      _tfm_prefill, tfm.lm_decode_step, _tfm_collect,
+                      tfm.absorb_swan),
+    "moe":   ModelApi(tfm.init_lm_params, _tfm_forward, tfm.init_caches,
+                      _tfm_prefill, tfm.lm_decode_step, _tfm_collect,
+                      tfm.absorb_swan),
+    "vlm":   ModelApi(tfm.init_lm_params, _tfm_forward, tfm.init_caches,
+                      _tfm_prefill, tfm.lm_decode_step, _tfm_collect,
+                      tfm.absorb_swan),
+    "hybrid": ModelApi(jamba.init_lm_params, _jamba_forward,
+                       jamba.init_serve_state, _jamba_prefill,
+                       jamba.decode_step, _jamba_collect, jamba.absorb_swan),
+    "ssm":   ModelApi(rwkv_model.init_lm_params, _rwkv_forward,
+                      rwkv_model.init_serve_state, _rwkv_prefill,
+                      rwkv_model.decode_step, None, None),
+    "encdec": ModelApi(encdec.init_lm_params, _encdec_forward,
+                       encdec.init_serve_state, _encdec_prefill,
+                       encdec.decode_step, _encdec_collect,
+                       encdec.absorb_swan),
+}
+
+
+def get_model(cfg) -> ModelApi:
+    return _FAMILIES[cfg.family]
+
+
+def swan_applicable(cfg) -> bool:
+    return get_model(cfg).collect_qkv is not None

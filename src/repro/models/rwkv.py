@@ -1,0 +1,220 @@
+"""RWKV-6 (Finch) — attention-free time-mix with data-dependent decay.
+
+Per head (dk = dv = head_dim):
+
+  y_t = r_t · (diag(u)·k_t v_tᵀ + S_t) ;   S_{t+1} = diag(w_t)·S_t + k_t v_tᵀ
+
+with the Finch hallmark: the per-channel decay w_t = exp(−exp(base + LoRA(x)))
+is *data-dependent*.  Training uses a chunked formulation (like mamba.py):
+per-channel cumulative log-decays give an attention-like intra-chunk kernel
+plus an O(1) carried state — no token-level scan in the compiled graph.
+
+Simplifications vs the full Finch recipe (documented in DESIGN.md): static
+learnable token-shift mixing coefficients (Finch uses data-dependent ddlerp);
+everything else (decay LoRA, bonus u, per-head GroupNorm, receptance-gated
+squared-ReLU channel-mix) is faithful.
+
+SWAN is inapplicable (no KV cache); serve state is O(1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+Params = Dict[str, Any]
+
+CHUNK = 64
+DECAY_LORA = 64
+
+
+def init_time_mix_params(key, cfg) -> Params:
+    d = cfg.d_model
+    H, dk = cfg.n_heads, cfg.rwkv.head_dim
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 8)
+    decay_speed = jnp.array(
+        [-6.0 + 5.0 * (i / max(d - 1, 1)) ** 0.9 for i in range(d)], jnp.float32)
+    return {
+        "mix": jnp.full((5, d), 0.5, jnp.float32),    # r,k,v,g,w shift mixes
+        "w_r":  dense_init(ks[0], d, d, dtype),
+        "w_k6": dense_init(ks[1], d, d, dtype),
+        "w_v6": dense_init(ks[2], d, d, dtype),
+        "w_g":  dense_init(ks[3], d, d, dtype),
+        "w_o6": dense_init(ks[4], d, d, dtype, scale=d ** -0.5),
+        "decay_w": decay_speed,                        # base log-log decay
+        "decay_lora_a": dense_init(ks[5], d, DECAY_LORA, dtype),
+        "decay_lora_b": dense_init(ks[6], DECAY_LORA, d, dtype, scale=0.01),
+        "bonus_u": jnp.zeros((H, dk), jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "gn_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_channel_mix_params(key, cfg) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 3)
+    return {
+        "mix": jnp.full((2, d), 0.5, jnp.float32),     # k, r shift mixes
+        "w_up":   dense_init(ks[0], d, ff, dtype),
+        "w_down": dense_init(ks[1], ff, d, dtype, scale=ff ** -0.5),
+        "w_r":    dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _shift_mix(x: jnp.ndarray, x_prev: jnp.ndarray, mix: jnp.ndarray):
+    """lerp(x, token-shifted x, mix).  x: [B,S,d]; x_prev: [B,1,d] carry."""
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    return x + (shifted - x) * mix[None, None]
+
+
+def _heads(x: jnp.ndarray, H: int, dk: int) -> jnp.ndarray:
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, dk)
+
+
+def _group_norm(y: jnp.ndarray, p: Params, eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head LayerNorm over dv (RWKV's GroupNorm(H))  y: [B,S,H,dv]."""
+    mu = y.mean(-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    B, S, H, dv = y.shape
+    yn = yn.reshape(B, S, H * dv)
+    return yn * p["gn_scale"][None, None] + p["gn_bias"][None, None]
+
+
+def _rkvgw(p: Params, cfg, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Projections with token shift.  Returns r,k,v [B,S,H,dk], g [B,S,d],
+    logw [B,S,H,dk] (negative log decays)."""
+    H, dk = cfg.n_heads, cfg.rwkv.head_dim
+    mix = p["mix"].astype(x.dtype)
+    xr = _shift_mix(x, x_prev, mix[0])
+    xk = _shift_mix(x, x_prev, mix[1])
+    xv = _shift_mix(x, x_prev, mix[2])
+    xg = _shift_mix(x, x_prev, mix[3])
+    xw = _shift_mix(x, x_prev, mix[4])
+    r = _heads(xr @ p["w_r"], H, dk)
+    k = _heads(xk @ p["w_k6"], H, dk)
+    v = _heads(xv @ p["w_v6"], H, dk)
+    g = jax.nn.silu(xg @ p["w_g"])
+    lora = jnp.tanh(xw @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    logw = -jnp.exp(p["decay_w"][None, None].astype(jnp.float32) +
+                    lora.astype(jnp.float32))           # [B,S,d], < 0
+    return r, k, v, g, _heads(logw, H, dk)
+
+
+def _chunk_wkv(r, k, v, logw, u, h0):
+    """One chunk.  r,k,v,logw: [B,Q,H,dk] (f32); u: [H,dk]; h0: [B,H,dk,dv].
+    Returns (y [B,Q,H,dv], h_out)."""
+    B, Q, H, dk = r.shape
+    cum = jnp.cumsum(logw, axis=1)                        # Σ_{s<=t} logw_s
+    cum_prev = cum - logw                                 # Σ_{s<t}  logw_s
+    # intra-chunk kernel: A[t,τ] = Σ_i r_t[i] k_τ[i] exp(cum_prev_t − cum_τ)[i], τ<t
+    rel = cum_prev[:, :, None] - cum[:, None, :]          # [B,t,τ,H,dk]
+    decay = jnp.exp(rel)
+    strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    A = jnp.einsum("bthi,bshi,btshi->bhts", r, k,
+                   jnp.where(strict[None, :, :, None, None], decay, 0.0))
+    y = jnp.einsum("bhts,bshj->bthj", A, v)
+    # diagonal bonus term
+    y = y + jnp.einsum("bthi,hi,bthi,bthj->bthj", r, u, k, v)
+    # inter-chunk state contribution
+    y = y + jnp.einsum("bthi,bthi,bhij->bthj", r, jnp.exp(cum_prev), h0)
+    # carried state
+    w_tail = jnp.exp(cum[:, -1:, :, :] - cum)             # Π_{s>τ} w_s
+    h_out = h0 * jnp.exp(cum[:, -1])[..., None] + \
+        jnp.einsum("bshi,bshi,bshj->bhij", w_tail, k, v)
+    return y, h_out
+
+
+def time_mix_forward(p: Params, cfg, x: jnp.ndarray, chunk: int = CHUNK,
+                     return_state: bool = False):
+    """x: [B,S,d] -> [B,S,d] (training / prefill).
+
+    ``return_state=True`` also returns the final recurrent state (used by
+    the parallel prefill to seed subsequent decode).  Tail padding is
+    state-safe by construction: zero-padded k contributes nothing and
+    zero-padded logw means decay exp(0)=1 (identity transition).
+    """
+    B, S, d = x.shape
+    H, dk = cfg.n_heads, cfg.rwkv.head_dim
+    x_prev = jnp.zeros((B, 1, d), x.dtype)
+    r, k, v, g, logw = _rkvgw(p, cfg, x, x_prev)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["bonus_u"].astype(jnp.float32)
+
+    nb = -(-S // chunk)
+    pad = nb * chunk - S
+    if pad:
+        padfn = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rf, kf, vf, logw = padfn(rf), padfn(kf), padfn(vf), padfn(logw)
+    resh = lambda t: t.reshape(B, nb, chunk, H, dk).transpose(1, 0, 2, 3, 4)
+
+    def step(h, inp):
+        rc, kc, vc, wc = inp
+        y, h = _chunk_wkv(rc, kc, vc, wc, u, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, dk, dk), jnp.float32)
+    h_fin, ys = jax.lax.scan(step, h0, (resh(rf), resh(kf), resh(vf), resh(logw)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nb * chunk, H, dk)[:, :S]
+    y = _group_norm(y, p).astype(x.dtype)
+    out = (y * g) @ p["w_o6"]
+    if return_state:
+        return out, h_fin
+    return out
+
+
+def channel_mix_forward(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, d = x.shape
+    x_prev = jnp.zeros((B, 1, d), x.dtype)
+    mix = p["mix"].astype(x.dtype)
+    xk = _shift_mix(x, x_prev, mix[0])
+    xr = _shift_mix(x, x_prev, mix[1])
+    h = jnp.square(jax.nn.relu(xk @ p["w_up"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (h @ p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_state(cfg, batch: int) -> Params:
+    H, dk = cfg.n_heads, cfg.rwkv.head_dim
+    d = cfg.d_model
+    return {
+        "S": jnp.zeros((batch, H, dk, dk), jnp.float32),
+        "x_tm": jnp.zeros((batch, 1, d), jnp.dtype(cfg.dtype)),
+        "x_cm": jnp.zeros((batch, 1, d), jnp.dtype(cfg.dtype)),
+    }
+
+
+def time_mix_decode(p: Params, cfg, x: jnp.ndarray,
+                    state: Params) -> Tuple[jnp.ndarray, Params]:
+    """x: [B,1,d] one token."""
+    r, k, v, g, logw = _rkvgw(p, cfg, x, state["x_tm"])
+    rf, kf, vf = (t.astype(jnp.float32)[:, 0] for t in (r, k, v))  # [B,H,dk]
+    w = jnp.exp(logw[:, 0])                                        # [B,H,dk]
+    u = p["bonus_u"].astype(jnp.float32)
+    S = state["S"]
+    kv = kf[..., :, None] * vf[..., None, :]                       # [B,H,dk,dv]
+    y = jnp.einsum("bhi,bhij->bhj", rf, u[None, :, :, None] * kv + S)
+    S_new = S * w[..., None] + kv
+    y = _group_norm(y[:, None], p).astype(x.dtype)
+    out = (y * g) @ p["w_o6"]
+    return out, {**state, "S": S_new, "x_tm": x}
+
+
+def channel_mix_decode(p: Params, cfg, x: jnp.ndarray,
+                       state: Params) -> Tuple[jnp.ndarray, Params]:
+    mix = p["mix"].astype(x.dtype)
+    shifted = state["x_cm"]
+    xk = x + (shifted - x) * mix[0][None, None]
+    xr = x + (shifted - x) * mix[1][None, None]
+    h = jnp.square(jax.nn.relu(xk @ p["w_up"]))
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (h @ p["w_down"])
+    return out, {**state, "x_cm": x}

@@ -1,0 +1,110 @@
+"""RWKV-6 full model: embed -> [time-mix + channel-mix] x L -> head.
+
+No KV cache exists; serving state is O(1) per layer (SWAN inapplicable —
+DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv
+from repro.models.common import apply_norm, embed_init, init_norm, split_keys
+from repro.sharding.api import shard
+
+Params = Dict[str, Any]
+
+
+def init_layer(key, cfg) -> Params:
+    ks = split_keys(key, 4)
+    return {
+        "ln1": init_norm(ks[0], cfg, cfg.d_model),
+        "tm": rwkv.init_time_mix_params(ks[1], cfg),
+        "ln2": init_norm(ks[2], cfg, cfg.d_model),
+        "cm": rwkv.init_channel_mix_params(ks[3], cfg),
+    }
+
+
+def init_lm_params(key, cfg) -> Params:
+    ks = split_keys(key, cfg.n_layers + 3)
+    layers = [init_layer(ks[i], cfg) for i in range(cfg.n_layers)]
+    return {
+        "embed": embed_init(ks[-3], cfg.vocab_size, cfg.d_model,
+                            jnp.dtype(cfg.param_dtype)),
+        "layers": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers),
+        "ln_f": init_norm(ks[-2], cfg, cfg.d_model),
+        "head": embed_init(ks[-1], cfg.vocab_size, cfg.d_model,
+                           jnp.dtype(cfg.param_dtype)).T,
+    }
+
+
+def lm_forward(p: Params, cfg, tokens: jnp.ndarray,
+               prefix_embeds=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = shard(x, "residual")
+
+    def body(carry, lp):
+        x, = carry
+        x = x + rwkv.time_mix_forward(lp["tm"], cfg, apply_norm(lp["ln1"], cfg, x))
+        x = shard(x, "residual")
+        x = x + rwkv.channel_mix_forward(lp["cm"], cfg, apply_norm(lp["ln2"], cfg, x))
+        return (shard(x, "residual"),), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x,), _ = jax.lax.scan(body_fn, (x,), p["layers"])
+    x = apply_norm(p["ln_f"], cfg, x)
+    return shard(x @ p["head"].astype(x.dtype), "logits"), jnp.zeros((), jnp.float32)
+
+
+def init_serve_state(cfg, swan, batch: int, max_seq: int) -> Params:
+    if swan is not None and swan.enabled:
+        raise ValueError("SWAN is inapplicable to rwkv6 (no KV cache); "
+                         "see DESIGN.md §Arch-applicability")
+    one = rwkv.init_rwkv_state(cfg, batch)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)
+
+
+def decode_step(p: Params, cfg, token: jnp.ndarray, pos, states: Params,
+                swan=None, projections=None) -> Tuple[jnp.ndarray, Params]:
+    x = jnp.take(p["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+
+    def body(x, xs):
+        lp, st = xs
+        h, st = rwkv.time_mix_decode(lp["tm"], cfg, apply_norm(lp["ln1"], cfg, x), st)
+        x = x + h
+        h, st = rwkv.channel_mix_decode(lp["cm"], cfg, apply_norm(lp["ln2"], cfg, x), st)
+        return x + h, st
+
+    x, states = jax.lax.scan(body, x, (p["layers"], states))
+    x = apply_norm(p["ln_f"], cfg, x)
+    return (x @ p["head"].astype(x.dtype))[:, 0], states
+
+
+def prefill(p: Params, cfg, tokens: jnp.ndarray, states: Params,
+            swan=None, projections=None, prefix_embeds=None
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Parallel (chunked) prefill: one forward pass rebuilds every layer's
+    recurrent state — O(S·chunk) work instead of a 32k-step token scan."""
+    B, S = tokens.shape
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = shard(x, "residual")
+
+    def body(x, xs):
+        lp, st = xs
+        new_st = dict(st)
+        xin = apply_norm(lp["ln1"], cfg, x)
+        h, S_fin = rwkv.time_mix_forward(lp["tm"], cfg, xin, return_state=True)
+        new_st["S"] = S_fin
+        new_st["x_tm"] = xin[:, -1:]
+        x = x + h
+        xin = apply_norm(lp["ln2"], cfg, x)
+        h = rwkv.channel_mix_forward(lp["cm"], cfg, xin)
+        new_st["x_cm"] = xin[:, -1:]
+        return x + h, new_st
+
+    x, states = jax.lax.scan(body, x, (p["layers"], states))
+    x = apply_norm(p["ln_f"], cfg, x[:, -1:])
+    return x @ p["head"].astype(x.dtype), states

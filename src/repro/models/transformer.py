@@ -1,0 +1,351 @@
+"""Decoder-only transformer LM (dense / MoE / VLM families).
+
+Pure-functional: parameters are nested dicts; homogeneous layer stacks are
+scanned (stacked [L, ...] leaves, MaxText-style) so 126-layer configs lower
+to compact HLO.  Supports:
+
+  * training forward (+ MoE aux losses) with remat,
+  * VLM prefix embeddings (internvl2: stub patch embeddings),
+  * SWAN calibration capture (``collect_qkv``) and weight absorption,
+  * serving: prefill + decode with dense or SWAN hybrid caches.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import absorb as absorb_mod
+from repro.core import hybrid_cache as hc
+from repro.core import swan_attention as swa
+from repro.core.winnow import rotate_k, rotate_q
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (apply_norm, embed_init, init_norm,
+                                 split_keys)
+from repro.sharding.api import shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _remat(body, cfg):
+    """Remat policy: 'full' recomputes everything in bwd (min memory, but
+    FSDP parameter all-gathers re-run in the bwd pass); 'dots' saves matmul
+    operands (incl. gathered weights) — trades temp memory for collective
+    traffic (§Perf cell B iteration)."""
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(body)
+
+
+def init_layer_params(key, cfg, layer_idx: int = 0) -> Params:
+    ks = split_keys(key, 4)
+    p: Params = {
+        "ln1": init_norm(ks[0], cfg, cfg.d_model),
+        "attn": attn.init_attn_params(ks[1], cfg),
+        "ln2": init_norm(ks[2], cfg, cfg.d_model),
+    }
+    if cfg.ffn_kind(layer_idx) == "moe":
+        p["experts"] = moe_mod.init_moe_params(ks[3], cfg)
+    else:
+        p["mlp"] = mlp_mod.init_mlp_params(ks[3], cfg, cfg.d_ff)
+    return p
+
+
+def init_lm_params(key, cfg) -> Params:
+    """All layers homogeneous here (dense / all-MoE); jamba overrides."""
+    ks = split_keys(key, cfg.n_layers + 3)
+    layers = [init_layer_params(ks[i], cfg, i) for i in range(cfg.n_layers)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+    p: Params = {
+        "embed": embed_init(ks[-3], cfg.vocab_size, cfg.d_model,
+                            jnp.dtype(cfg.param_dtype)),
+        "layers": stacked,
+        "ln_f": init_norm(ks[-2], cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(ks[-1], cfg.vocab_size, cfg.d_model,
+                               jnp.dtype(cfg.param_dtype)).T
+    if cfg.pos == "learned":
+        p["pos_embed"] = embed_init(ks[-1], cfg.max_position_learned(),
+                                    cfg.d_model, jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def abstract_params(cfg):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(lambda: init_lm_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Layer forward
+# ---------------------------------------------------------------------------
+
+def layer_forward(lp: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-norm block.  Returns (x, moe_aux_scalar)."""
+    h = apply_norm(lp["ln1"], cfg, x)
+    h = attn.attn_forward(lp["attn"], cfg, h, positions)
+    x = shard(x + h, "residual")
+    h = apply_norm(lp["ln2"], cfg, x)
+    if "experts" in lp:
+        h, aux = moe_mod.moe_forward(lp["experts"], cfg, h)
+        aux_sum = aux["moe_load_balance"] + aux["moe_router_z"]
+    else:
+        h = mlp_mod.mlp_forward(lp["mlp"], cfg, h)
+        aux_sum = jnp.zeros((), jnp.float32)
+    x = shard(x + h, "residual")
+    return x, aux_sum
+
+
+def _embed_inputs(p: Params, cfg, tokens: jnp.ndarray,
+                  prefix_embeds: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.pos == "learned":
+        x = x + jnp.take(p["pos_embed"], jnp.minimum(
+            positions, p["pos_embed"].shape[0] - 1), axis=0).astype(x.dtype)
+    return shard(x, "residual"), positions
+
+
+def lm_forward(p: Params, cfg, tokens: jnp.ndarray,
+               prefix_embeds: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] (+ optional prefix embeds [B, P, d]) -> (logits, aux)."""
+    x, positions = _embed_inputs(p, cfg, tokens, prefix_embeds)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = layer_forward(lp, cfg, x, positions)
+        return (x, aux + a), None
+
+    body_fn = _remat(body, cfg)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                   p["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], p["layers"])
+            (x, aux), _ = body_fn((x, aux), lp)
+
+    x = apply_norm(p["ln_f"], cfg, x)
+    head = p["embed"].T if cfg.tie_embeddings else p["head"]
+    logits = shard(x @ head.astype(x.dtype), "logits")
+    return logits, aux
+
+
+def lm_loss(p: Params, cfg, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy (prefix positions excluded for VLM)."""
+    tokens = batch["tokens"]
+    logits, aux = lm_forward(p, cfg, tokens, batch.get("prefix_embeds"))
+    n_prefix = 0 if batch.get("prefix_embeds") is None else batch["prefix_embeds"].shape[1]
+    logits = logits[:, n_prefix:]
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(gold) if mask is None else mask[:, 1:].astype(jnp.float32)
+    nll = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    zloss = 1e-4 * ((logz ** 2) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    loss = nll + zloss + aux
+    return loss, {"nll": nll, "aux": aux, "z": zloss}
+
+
+# ---------------------------------------------------------------------------
+# SWAN calibration + absorption
+# ---------------------------------------------------------------------------
+
+def collect_qkv(p: Params, cfg, tokens: jnp.ndarray,
+                prefix_embeds: Optional[jnp.ndarray] = None):
+    """Run the model, capturing per-layer post-RoPE q/k and v (paper §4.1.1).
+
+    Returns (q [L,B,S,H,dh], k [L,B,S,Kv,dh], v [L,B,S,Kv,dh], wo [L,H·dh,d]).
+    """
+    x, positions = _embed_inputs(p, cfg, tokens, prefix_embeds)
+
+    def body(carry, lp):
+        x, _ = carry
+        h = apply_norm(lp["ln1"], cfg, x)
+        q, k, v = attn.project_qkv(lp["attn"], cfg, h, positions)
+        x, _ = layer_forward(lp, cfg, x, positions)
+        return (x, jnp.zeros((), jnp.float32)), (q, k, v)
+
+    (_, _), (q, k, v) = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                     p["layers"])
+    return q, k, v, p["layers"]["attn"]["wo"]
+
+
+def absorb_swan(p: Params, cfg, projections: Params) -> Params:
+    """Fold P_VO into the stacked attention weights (lossless, Lemma A.2)."""
+    out = dict(p)
+    layers = dict(p["layers"])
+    layers["attn"] = absorb_mod.absorb_vo(
+        p["layers"]["attn"], projections["p_vo"],
+        cfg.n_heads, cfg.n_kv_heads, cfg.d_head)
+    out["layers"] = layers
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, swan, batch: int, max_seq: int) -> Params:
+    """Stacked [L, ...] caches; ``swan`` None -> dense baseline cache."""
+    if swan is None or not swan.enabled:
+        one = attn.init_dense_cache(cfg, batch, max_seq)
+    else:
+        one = hc.init_swan_cache(cfg, swan, batch, max_seq)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)
+
+
+def _swan_seq_ctx():
+    """(mesh, seq_axis) for split-S swan decode, from the installed rules."""
+    from repro.sharding.api import current_rules
+    rules = current_rules()
+    if rules is None:
+        return None, None
+    spec = rules.kinds.get("swan_sparse")
+    if spec is None or len(spec) < 3 or spec[2] is None:
+        return None, None
+    return rules.mesh, spec[2]
+
+
+def _swan_layer_decode(lp: Params, p_qk_l: jnp.ndarray, cache_l: Params,
+                       cfg, swan, x: jnp.ndarray, pos,
+                       k_act=None) -> Tuple[jnp.ndarray, Params]:
+    B = x.shape[0]
+    Kv, G, dh = cfg.n_kv_heads, cfg.q_group, cfg.d_head
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+    q, k, v = attn.project_qkv(lp["attn"], cfg, x, positions)   # v̂ already rotated (absorbed)
+    q_hat = rotate_q(q, p_qk_l, Kv)[:, 0]                        # [B,Kv,G,dh]
+    k_hat = rotate_k(k, p_qk_l)                                  # [B,1→S dim,Kv,dh]
+    cache_l = hc.swan_cache_insert_decode(cache_l, swan, cfg, k_hat, v, pos,
+                                          k_act=k_act)
+    mesh, seq_axis = _swan_seq_ctx()
+    o = swa.swan_decode_attention(q_hat, cache_l, swan, cfg, pos,
+                                  mesh=mesh, seq_axis=seq_axis)
+    o = o.reshape(B, 1, Kv * G, dh)
+    return attn.output_proj(lp["attn"], o), cache_l
+
+
+def _swan_layer_prefill(lp: Params, p_qk_l, cache_l, cfg, swan,
+                        x: jnp.ndarray, positions,
+                        k_act=None) -> Tuple[jnp.ndarray, Params]:
+    """Prefill: dense (lossless, Lemma A.1) attention on rotated q̂/k̂/v̂;
+    hybrid cache populated for subsequent decode."""
+    B, S, _ = x.shape
+    Kv, G, dh = cfg.n_kv_heads, cfg.q_group, cfg.d_head
+    q, k, v = attn.project_qkv(lp["attn"], cfg, x, positions)
+    q_hat = rotate_q(q, p_qk_l, Kv).reshape(B, S, Kv * G, dh)
+    k_hat = rotate_k(k, p_qk_l)
+    cache_l = hc.swan_cache_insert_prefill(cache_l, swan, cfg, k_hat, v,
+                                           k_act=k_act)
+    if S > attn.DENSE_ATTN_MAX_SEQ:
+        o = attn.blocked_attention(q_hat, k_hat, v, causal=True)
+    else:
+        o = attn.dense_attention(q_hat, k_hat, v, mask=None, causal=True)
+    return attn.output_proj(lp["attn"], o), cache_l
+
+
+def _swan_scan_xs(cfg, swan, projections, use_swan):
+    """Per-layer scan inputs: projections + (adaptive) per-layer k_active.
+    projections may carry 'k_layer' [L] from repro.core.adaptive."""
+    if not use_swan:
+        z = jnp.zeros((cfg.n_layers, 1), jnp.float32)
+        return z, jnp.zeros((cfg.n_layers,), jnp.int32)
+    pq = projections["p_qk"]
+    k_layer = projections.get("k_layer")
+    if k_layer is None:
+        k_layer = jnp.full((cfg.n_layers,), swan.kk, jnp.int32)
+    return pq, jnp.asarray(k_layer, jnp.int32)
+
+
+def _layer_ffn(lp: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    h = apply_norm(lp["ln2"], cfg, x)
+    if "experts" in lp:
+        # serving: no-drop dispatch (prefill ≡ incremental decode)
+        h, _ = moe_mod.moe_forward(lp["experts"], cfg, h, no_drop=True)
+    else:
+        h = mlp_mod.mlp_forward(lp["mlp"], cfg, h)
+    return x + h
+
+
+def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
+               swan=None, projections: Optional[Params] = None,
+               prefix_embeds: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, Params]:
+    """Process the prompt; fill caches.  Returns (last-token logits, caches)."""
+    x, positions = _embed_inputs(p, cfg, tokens, prefix_embeds)
+    use_swan = swan is not None and swan.enabled
+
+    def body(x, xs):
+        lp, cache_l, p_qk_l, k_l = xs
+        h = apply_norm(lp["ln1"], cfg, x)
+        if use_swan:
+            h, cache_l = _swan_layer_prefill(lp, p_qk_l, cache_l, cfg, swan,
+                                             h, positions, k_act=k_l)
+        else:
+            q, k, v = attn.project_qkv(lp["attn"], cfg, h, positions)
+            cache_l = attn.dense_cache_insert(cache_l, k, v, 0)
+            if x.shape[1] > attn.DENSE_ATTN_MAX_SEQ:
+                o = attn.blocked_attention(q, k, v, causal=True)
+            else:
+                o = attn.dense_attention(q, k, v, mask=None, causal=True)
+            h = attn.output_proj(lp["attn"], o)
+        x = shard(x + h, "residual")
+        x = shard(_layer_ffn(lp, cfg, x), "residual")
+        return x, cache_l
+
+    pq, k_arr = _swan_scan_xs(cfg, swan, projections, use_swan)
+    x, caches = jax.lax.scan(body, x, (p["layers"], caches, pq, k_arr))
+    x = apply_norm(p["ln_f"], cfg, x[:, -1:])
+    head = p["embed"].T if cfg.tie_embeddings else p["head"]
+    return x @ head.astype(x.dtype), caches
+
+
+def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
+                   swan=None, projections: Optional[Params] = None
+                   ) -> Tuple[jnp.ndarray, Params]:
+    """token [B] -> (logits [B, V], updated caches).  ``pos``: scalar int32."""
+    x = jnp.take(p["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.pos == "learned":
+        pe = jnp.take(p["pos_embed"],
+                      jnp.minimum(pos, p["pos_embed"].shape[0] - 1), axis=0)
+        x = x + pe[None, None].astype(x.dtype)
+    use_swan = swan is not None and swan.enabled
+
+    def body(x, xs):
+        lp, cache_l, p_qk_l, k_l = xs
+        h = apply_norm(lp["ln1"], cfg, x)
+        if use_swan:
+            h, cache_l = _swan_layer_decode(lp, p_qk_l, cache_l, cfg, swan,
+                                            h, pos, k_act=k_l)
+        else:
+            h, cache_l = attn.attn_decode_dense(lp["attn"], cfg, h, pos, cache_l)
+        x = x + h
+        x = _layer_ffn(lp, cfg, x)
+        return x, cache_l
+
+    pq, k_arr = _swan_scan_xs(cfg, swan, projections, use_swan)
+    x, caches = jax.lax.scan(body, x, (p["layers"], caches, pq, k_arr))
+    x = apply_norm(p["ln_f"], cfg, x)
+    head = p["embed"].T if cfg.tie_embeddings else p["head"]
+    return (x @ head.astype(x.dtype))[:, 0], caches

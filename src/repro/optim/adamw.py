@@ -1,0 +1,97 @@
+"""AdamW in pure JAX (no optax): decoupled weight decay, global-norm grad
+clipping, warmup + cosine decay, configurable moment dtype.
+
+State-dtype compression (``OptimizerConfig.state_dtype='bfloat16'``) halves
+optimizer memory for the 405B-class configs — one of the distributed-
+optimization tricks listed in DESIGN.md §4.  Moments are stored in the
+configured dtype but *updated* in float32 (compute-precision decoupled from
+storage-precision, same pattern as mixed-precision training).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def init_opt_state(params: Params, opt_cfg) -> Params:
+    sdt = jnp.dtype(opt_cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, sdt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(step, opt_cfg) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = opt_cfg.lr * (step + 1.0) / max(opt_cfg.warmup_steps, 1)
+    prog = jnp.clip((step - opt_cfg.warmup_steps) /
+                    max(opt_cfg.decay_steps - opt_cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = opt_cfg.min_lr_ratio + (1 - opt_cfg.min_lr_ratio) * \
+        0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < opt_cfg.warmup_steps, warm, opt_cfg.lr * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+_NO_DECAY = ("scale", "bias", "ln", "dt_bias", "decay_w", "bonus_u", "mix",
+             "gn_scale", "gn_bias", "a_log", "d_skip")
+
+
+def _decay_mask(params) -> Params:
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(getattr(k, "key", str(k)) for k in path)
+        decay = leaf.ndim >= 2 and not any(t in name for t in _NO_DECAY)
+        out.append(jnp.asarray(1.0 if decay else 0.0, jnp.float32))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def adamw_update(params: Params, grads: Params, state: Params, opt_cfg
+                 ) -> Tuple[Params, Params, Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Returns (params, state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, opt_cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_schedule(state["step"], opt_cfg)
+    b1, b2 = opt_cfg.betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mask = _decay_mask(params)
+    sdt = jnp.dtype(opt_cfg.state_dtype)
+
+    def upd(p, g, m, v, dmask):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + opt_cfg.eps)
+        update = update + opt_cfg.weight_decay * dmask * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * update).astype(p.dtype),
+                m32.astype(sdt), v32.astype(sdt))
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"], mask)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,113 @@
+"""Serving runtime: jitted prefill/decode steps + a batched generation
+session with SWAN compression plumbed through.
+
+``pos`` is a traced scalar so one compiled decode executable serves every
+step; caches are donated (in-place buffer reuse).  The SWAN runtime knobs
+(k_key / k_value) are baked per ``SwanConfig`` — changing them re-jits only
+the (cheap) decode step, never touches weights (paper's runtime tunability).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projections as proj_mod
+from repro.core.analytical import model_cache_footprint
+from repro.models import get_model, swan_applicable
+
+Params = Dict[str, Any]
+
+
+def calibrate_swan(api, cfg, params, calib_batch) -> Params:
+    """Offline calibration (paper §4.1): capture activations, joint SVD."""
+    q, k, v, wo = api.collect_qkv(params, cfg, calib_batch)
+    return proj_mod.compute_projections((q, k, v), wo, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.d_head)
+
+
+class ServeSession:
+    """Batched autoregressive generation with optional SWAN cache."""
+
+    def __init__(self, cfg, params, swan=None, projections=None,
+                 max_seq: int = 4096, batch: int = 1, jit: bool = True):
+        self.cfg = cfg
+        self.api = get_model(cfg)
+        self.swan = swan if (swan and swan.enabled and swan_applicable(cfg)) else None
+        self.projections = projections
+        self.max_seq = max_seq
+        self.batch = batch
+        if self.swan is not None:
+            self.swan.validate(cfg.d_head)
+            if projections is None:
+                raise ValueError("SWAN enabled but no projections given — "
+                                 "run calibrate_swan first")
+        self.params = params
+        self.state = self.api.init_serve_state(cfg, self.swan, batch, max_seq)
+        sw, pj = self.swan, self.projections
+
+        def prefill_fn(p, batch_in, state):
+            return self.api.prefill(p, cfg, batch_in, state, sw, pj)
+
+        def decode_fn(p, token, pos, state):
+            return self.api.decode_step(p, cfg, token, pos, state, sw, pj)
+
+        if jit:
+            self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
+            self._decode = jax.jit(decode_fn, donate_argnums=(3,))
+        else:
+            self._prefill, self._decode = prefill_fn, decode_fn
+        self.pos = 0
+
+    def prefill(self, batch_in: Params) -> jnp.ndarray:
+        logits, self.state = self._prefill(self.params, batch_in, self.state)
+        self.pos = batch_in["tokens"].shape[1]
+        return logits[:, -1]
+
+    def decode(self, token: jnp.ndarray) -> jnp.ndarray:
+        logits, self.state = self._decode(self.params, token,
+                                          jnp.asarray(self.pos, jnp.int32),
+                                          self.state)
+        self.pos += 1
+        return logits
+
+    def generate(self, batch_in: Params, n_tokens: int,
+                 temperature: float = 0.0, seed: int = 0) -> jnp.ndarray:
+        """Greedy (or sampled) generation; returns [B, n_tokens]."""
+        logits = self.prefill(batch_in)
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        tok = self._sample(logits, temperature, key)
+        for i in range(n_tokens):
+            outs.append(tok)
+            if i == n_tokens - 1:
+                break
+            logits = self.decode(tok)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, temperature, sub)
+        return jnp.stack(outs, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def cache_report(self) -> Dict[str, Any]:
+        """Physical cache accounting (paper Eq. 1 applied to this model)."""
+        if self.swan is None:
+            fp = model_cache_footprint(
+                self.cfg, _DenseLike(self.cfg.d_head), self.batch, self.max_seq)
+            return {"mode": "dense", "bytes": fp.dense_bytes}
+        fp = model_cache_footprint(self.cfg, self.swan, self.batch, self.max_seq)
+        return {"mode": f"swan[{self.swan.mode}]", "bytes": fp.swan_bytes,
+                "dense_bytes": fp.dense_bytes, "saving": fp.saving}
+
+
+class _DenseLike:
+    def __init__(self, d_head):
+        self.k_max = d_head
+        self.buffer = 0
+        self.quantize = False

@@ -1,0 +1,3 @@
+from repro.sharding.api import ShardingRules, shard, use_rules  # noqa: F401
+from repro.sharding.specs import (activation_rules, dp_axes,  # noqa: F401
+                                  params_pspecs, params_shardings)

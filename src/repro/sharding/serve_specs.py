@@ -1,0 +1,87 @@
+"""PartitionSpecs for serving state (KV caches, SWAN hybrid caches,
+recurrent states) and serve-step inputs.
+
+Decode distribution (DESIGN.md §4): caches shard batch over ('pod','data')
+and the *sequence* dim over 'model' — flash-decoding-style split-S, valid
+for any head count (incl. GQA kv < mesh) and any batch (axes that don't
+divide are dropped by the sanitizer, e.g. long_500k's batch=1).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.specs import dp_axes
+
+
+def _sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on axes that don't divide the dim size."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(ax if (dim % n == 0 and dim >= n) else None)
+    return P(*out)
+
+
+def sanitize_tree(specs, tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s, x: _sanitize(s, x.shape, mesh), specs, tree)
+
+
+def _leaf_spec(name: str, ndim: int, mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    leaf = name.split("/")[-1]
+    # stacked caches have a leading layer/group axis (never sharded)
+    if leaf in ("vals", "idx"):          # [L,B,Kv,S,k] packed sparse
+        return P(None, dp, None, "model", None)
+    if leaf == "scale":                  # [L,B,Kv,S]
+        return P(None, dp, None, "model")
+    if leaf in ("k", "v"):               # [L,B,Kv,S,dh] dense cache
+        return P(None, dp, None, "model", None)
+    if leaf in ("buf_k", "buf_v"):       # [L,B,Kv,b,dh] ring buffer
+        return P(None, dp, None, None, None)
+    if leaf == "buf_pos":                # [L,b]
+        return P(None, None)
+    if leaf == "h":                      # mamba state [G,B,d_in,N]
+        return P(None, dp, "model", None)
+    if leaf == "conv":                   # mamba conv tail [G,B,c,d_in]
+        return P(None, dp, None, "model")
+    if leaf == "S":                      # rwkv state [L,B,H,dk,dv]
+        return P(None, dp, None, None, None)
+    if leaf in ("x_tm", "x_cm"):         # rwkv shifts [L,B,1,d]
+        return P(None, dp, None, None)
+    return P(*([None] * ndim))
+
+
+def serve_state_pspecs(state, mesh: Mesh):
+    flat, tdef = jax.tree_util.tree_flatten_with_path(state)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(getattr(k, "key", str(k)) for k in path)
+        specs.append(_sanitize(_leaf_spec(name, leaf.ndim, mesh),
+                               leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def serve_state_shardings(state, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  serve_state_pspecs(state, mesh))
+
+
+def batch_pspecs(batch, mesh: Mesh):
+    dp = dp_axes(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: _sanitize(P(dp, *([None] * (x.ndim - 1))), x.shape, mesh),
+        batch)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  batch_pspecs(batch, mesh))

@@ -1,0 +1,199 @@
+"""PartitionSpec rules: parameters, optimizer state, activations, caches.
+
+Three tensor-parallel styles (ModelConfig.tp_style):
+
+  * ``heads``       — classic TP: attention heads / FFN hidden / vocab over
+                      'model'; optional FSDP over 'data' (fsdp_data) for the
+                      405B-class configs; optional sequence sharding of the
+                      residual stream over 'model' (seq_shard).
+  * ``fsdp_model``  — tiny archs whose head counts don't divide the mesh
+                      (whisper-small 12H, internvl2 14H): the 'model' axis is
+                      used as a ZeRO-3 storage axis (params sharded on their
+                      largest dim, gathered at use); activations stay
+                      batch-sharded over 'data'.
+
+Data parallelism always spans ('pod', 'data') when the pod axis exists.
+
+Parameter specs are resolved by leaf *path name* so the same table covers
+every architecture; stacked (scan-over-layers) parameter trees get the
+leading layer axis unsharded automatically (specs are matched to the
+trailing dims).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.api import ShardingRules
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+# (suffix match on leaf path) -> spec over the leaf's TRAILING dims, by style.
+# "D" marks where the fsdp_data axis goes (replaced by 'data' when enabled).
+_HEADS_TABLE = {
+    "embed":      ("model", "D"),
+    "pos_embed":  (None, "D"),
+    "head":       ("D", "model"),
+    "wq":         ("D", "model"),
+    "wk":         ("D", "model"),
+    "wv":         ("D", "model"),
+    "wo":         ("model", "D"),
+    "bq":         ("model",),
+    "bk":         ("model",),
+    "bv":         ("model",),
+    "bo":         (None,),
+    "w_gate":     ("D", "model"),
+    "w_up":       ("D", "model"),
+    "w_down":     ("model", "D"),
+    "b_up":       ("model",),
+    "b_down":     (None,),
+    "router":     (None, None),
+    "scale":      (None,),
+    "bias":       (None,),
+    # mamba
+    "w_in":       ("D", "model"),
+    "conv_w":     (None, "model"),
+    "conv_b":     ("model",),
+    "w_x":        ("model", "D"),
+    "w_dt":       ("D", "model"),
+    "dt_bias":    ("model",),
+    "a_log":      ("model", None),
+    "d_skip":     ("model",),
+    "w_out":      ("model", "D"),
+    # rwkv
+    "w_r":        ("D", "model"),
+    "w_k6":       ("D", "model"),
+    "w_v6":       ("D", "model"),
+    "w_g":        ("D", "model"),
+    "w_o6":       ("model", "D"),
+    "decay_w":    ("model",),
+    "bonus_u":    ("model",),
+    "mix":        (None, None),
+    "decay_lora_a": ("D", None),
+    "decay_lora_b": (None, "model"),
+}
+
+# MoE expert tensors (leading E axis).  EP ('model' on E) when divisible,
+# otherwise TP on the expert-hidden dim.
+_MOE_EP = {
+    "w_gate": ("model", "D", None),
+    "w_up":   ("model", "D", None),
+    "w_down": ("model", None, "D"),
+}
+_MOE_TP = {
+    "w_gate": (None, "D", "model"),
+    "w_up":   (None, "D", "model"),
+    "w_down": (None, "model", "D"),
+}
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], cfg, mesh: Mesh) -> P:
+    names = path.split("/")
+    leaf = names[-1]
+    is_expert = "experts" in names
+    style = cfg.tp_style
+
+    if style == "fsdp_model":
+        # ZeRO-3 storage: shard the largest trailing dim over ('model',)
+        # (+ 'data' is unused for storage on tiny archs).
+        if len(shape) == 0:
+            return P()
+        trailing = list(shape)
+        big = int(np.argmax(trailing))
+        axes = [None] * len(trailing)
+        if trailing[big] % mesh.shape["model"] == 0 and trailing[big] >= mesh.shape["model"]:
+            axes[big] = "model"
+        return P(*axes)
+
+    table = _HEADS_TABLE
+    if is_expert and leaf in _MOE_EP:
+        table_entry = (_MOE_EP if cfg.moe.shard_experts else _MOE_TP)[leaf]
+    else:
+        table_entry = table.get(leaf)
+        if table_entry is None:
+            return P(*([None] * len(shape)))
+    spec = []
+    for ax in table_entry:
+        if ax == "D":
+            spec.append("data" if cfg.fsdp_data else None)
+        else:
+            spec.append(ax)
+    # stacked-layer leading axes: pad with None on the left
+    while len(spec) < len(shape):
+        spec.insert(0, None)
+    spec = spec[-len(shape):] if len(spec) > len(shape) else spec
+    # drop shardings that don't divide the dim (uneven shardings are legal in
+    # GSPMD but we keep clean tiles wherever we can)
+    clean = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            clean.append(None)
+        else:
+            n = int(np.prod([mesh.shape[a] for a in ((ax,) if isinstance(ax, str) else ax)]))
+            clean.append(ax if dim % n == 0 else None)
+    return P(*clean)
+
+
+def params_pspecs(params, cfg, mesh: Mesh):
+    """Tree of PartitionSpec matching a parameter tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat[0]:
+        name = "/".join(getattr(k, "key", str(k)) for k in path)
+        specs.append(_leaf_spec(name, leaf.shape, cfg, mesh))
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def params_shardings(params, cfg, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), params_pspecs(params, cfg, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Activation rules
+# ---------------------------------------------------------------------------
+
+def activation_rules(cfg, mesh: Mesh) -> ShardingRules:
+    dp = dp_axes(mesh)
+    tp_ok = cfg.tp_style == "heads"
+    seq = "model" if (cfg.seq_shard and tp_ok) else None
+    heads_ax = "model" if (tp_ok and (cfg.n_heads * cfg.d_head) % mesh.shape["model"] == 0
+                           and cfg.n_heads % mesh.shape["model"] == 0) else None
+    ff_ax = "model" if (tp_ok and cfg.d_ff % mesh.shape["model"] == 0) else None
+    kinds: Dict[str, P] = {
+        "tokens":     P(dp, None),
+        "residual":   P(dp, seq, None),
+        # seq-sharded archs keep logits sharded on seq; otherwise vocab-TP
+        "logits":     P(dp, seq, None) if seq else P(dp, None, "model" if tp_ok else None),
+        "attn_q":     P(dp, None, heads_ax, None),
+        "attn_kv":    P(dp, None, None, None),
+        "attn_out":   P(dp, None, heads_ax, None),
+        "ffn_hidden": P(dp, None, ff_ax),
+        # decode-time: KV cache sequence dim over 'model' (flash-decoding
+        # style split-S — works for any head count, incl. GQA kv<mesh)
+        "kv_cache":   P(dp, None, "model", None),
+        "swan_sparse": P(dp, None, "model", None),
+        "swan_scale": P(dp, None, "model"),
+        "swan_buf":   P(dp, None, None, None),
+        "decode_q":   P(dp, None, None, None),
+        # mamba: channel parallel
+        "mamba_inner": P(dp, None, "model" if tp_ok else None),
+        "mamba_state": P(dp, "model" if tp_ok else None, None),
+        # rwkv: head-state parallel when divisible
+        "rwkv_state": P(dp, None, None, None),
+        "moe_buffer": P("model" if (cfg.moe and cfg.moe.shard_experts) else None,
+                        None, None),
+        "prefix":     P(dp, None, None),
+        "enc_out":    P(dp, None, None),
+    }
+    return ShardingRules(mesh, kinds)

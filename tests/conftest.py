@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests / benches must see the REAL device count (1 CPU) — the 512-way
+# dry-run flag is set only inside repro.launch.dryrun (per spec).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

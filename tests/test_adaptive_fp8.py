@@ -1,0 +1,99 @@
+"""Beyond-paper extensions: adaptive per-layer k allocation + fp8 values."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SwanConfig, get_smoke_config
+from repro.core import hybrid_cache as hc
+from repro.core import swan_attention as swa
+from repro.core.adaptive import allocate_k, spectra_from_joint, uniform_k
+
+
+def test_allocate_k_budget_and_bounds():
+    rng = np.random.default_rng(0)
+    spec = np.sort(rng.random((6, 32)), axis=1)[:, ::-1]
+    spec = spec / spec.sum(1, keepdims=True)
+    k = allocate_k(spec, avg_k=8, k_min=2, k_max=16)
+    assert k.sum() == 8 * 6
+    assert k.min() >= 2 and k.max() <= 16
+
+
+def test_allocate_k_prefers_flat_spectra():
+    """A flat-spectrum layer needs more dims than a concentrated one."""
+    concentrated = np.zeros(32)
+    concentrated[:2] = [0.9, 0.1]
+    flat = np.full(32, 1 / 32)
+    spec = np.stack([concentrated, flat])
+    k = allocate_k(spec, avg_k=8, k_min=1, k_max=31)
+    assert k[1] > k[0], k
+
+
+def test_allocate_k_uniform_when_identical():
+    spec = np.tile(np.linspace(1, 0.1, 16) / np.linspace(1, 0.1, 16).sum(),
+                   (4, 1))
+    k = allocate_k(spec, avg_k=6, k_min=1)
+    assert abs(int(k.max()) - int(k.min())) <= 1
+
+
+def test_spectra_from_joint():
+    e = jnp.asarray(np.random.default_rng(1).random((3, 2, 16)))
+    s = spectra_from_joint(e)
+    assert s.shape == (3, 16)
+    np.testing.assert_allclose(s.sum(axis=1), 1.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["topk", "truncate"])
+def test_fp8_values_match_reference(mode):
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32")
+    swan = SwanConfig(k_max=8, buffer=4, mode=mode, quantize=True,
+                      quant_dtype="fp8")
+    cache = hc.init_swan_cache(cfg, swan, 2, 32)
+    assert cache["k"]["vals"].dtype == jnp.float8_e4m3fn
+    assert "scale" not in cache["k"]
+    key = jax.random.PRNGKey(0)
+    kh = jax.random.normal(key, (2, 20, cfg.n_kv_heads, cfg.d_head))
+    vh = jax.random.normal(jax.random.PRNGKey(1),
+                           (2, 20, cfg.n_kv_heads, cfg.d_head))
+    cache = hc.swan_cache_insert_prefill(cache, swan, cfg, kh, vh)
+    q = jax.random.normal(jax.random.PRNGKey(2),
+                          (2, cfg.n_kv_heads, cfg.q_group, cfg.d_head))
+    o = swa.swan_decode_attention(q, cache, swan, cfg, 19)
+    r = swa.swan_decode_attention_reference(q, cache, swan, cfg, 19)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=5e-3)
+    assert not bool(jnp.any(jnp.isnan(o)))
+
+
+def test_fp8_eq1_bytes():
+    """fp8 matches the paper's 2k+2-class budget (no scale array)."""
+    cfg = get_smoke_config("llama3-8b")
+    b_fp8 = hc.cache_bytes(cfg, SwanConfig(k_max=8, buffer=0, quantize=True,
+                                           quant_dtype="fp8"), 1, 16)
+    b_int8 = hc.cache_bytes(cfg, SwanConfig(k_max=8, buffer=0, quantize=True,
+                                            quant_dtype="int8"), 1, 16)
+    b_fp16 = hc.cache_bytes(cfg, SwanConfig(k_max=8, buffer=0), 1, 16)
+    assert b_fp8 < b_int8 < b_fp16
+
+
+def test_per_layer_k_end_to_end():
+    """Adaptive allocation through prefill+decode == graceful, no NaN, and
+    degrades less than the worst uniform layer choice."""
+    from repro.models import transformer as tf
+    from repro.core import projections as proj
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32",
+                                                param_dtype="float32")
+    params = tf.init_lm_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 20), 0,
+                                cfg.vocab_size)
+    q, k, v, wo = tf.collect_qkv(params, cfg, tokens)
+    pj = proj.compute_projections((q, k, v), wo, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.d_head)
+    absorbed = tf.absorb_swan(params, cfg, pj)
+    swan = SwanConfig(k_max=cfg.d_head, buffer=4, mode="topk")
+    pj2 = dict(pj)
+    pj2["k_layer"] = jnp.asarray([6, 10], jnp.int32)
+    caches = tf.init_caches(cfg, swan, 2, 32)
+    lg, caches = tf.lm_prefill(absorbed, cfg, tokens, caches, swan, pj2)
+    tok = jnp.argmax(lg[:, -1], -1)
+    lg, caches = tf.lm_decode_step(absorbed, cfg, tok, 20, caches, swan, pj2)
+    assert not bool(jnp.any(jnp.isnan(lg)))

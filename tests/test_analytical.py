@@ -1,0 +1,55 @@
+"""Paper-exact analytical checks: the numeric examples of Appendix A.2.1
+and the Fig. 2a break-even thresholds must reproduce to the digit."""
+import pytest
+
+from repro.core.analytical import (breakeven_length, compression_ratio,
+                                   memory_breakeven_retention,
+                                   model_cache_footprint)
+from repro.configs import SwanConfig, get_config
+
+
+def test_appendix_a21_no_buffer():
+    assert breakeven_length(128, 32, 0) == pytest.approx(170.67, abs=0.1)
+    assert breakeven_length(128, 64, 0) == 256
+    assert breakeven_length(128, 96, 0) == 512
+
+
+def test_appendix_a21_with_buffer():
+    assert breakeven_length(128, 32, 128) == pytest.approx(298.67, abs=0.1)
+    assert breakeven_length(128, 64, 128) == 384
+    assert breakeven_length(128, 96, 128) == 640
+
+
+def test_fig2a_memory_breakeven():
+    """'For 16-bit values, savings begin only when retention < 0.66'."""
+    assert memory_breakeven_retention(128) == pytest.approx(0.661, abs=0.005)
+    # 8-bit: 'almost one-to-one'
+    assert memory_breakeven_retention(128, bits8=True) == pytest.approx(
+        0.992, abs=0.01)
+
+
+def test_fig2a_curve_points():
+    assert compression_ratio(128, 128) > 1.0        # no pruning -> overhead
+    assert compression_ratio(64, 128) == pytest.approx((3 * 64 + 2) / 256)
+    assert compression_ratio(64, 128, bits8=True) == pytest.approx(
+        (2 * 64 + 2) / 256)
+
+
+def test_llama_paper_motivating_example():
+    """Intro: Llama-2-7B-like model, 32k tokens, batch 16 -> ~256 GB dense
+    KV cache (paper quotes 256 GB for fp16 MHA 32L/4096)."""
+    cfg = get_config("llama3-8b").replace(n_kv_heads=32)   # MHA like llama2-7b
+    swan = SwanConfig(k_max=64, buffer=128)
+    fp = model_cache_footprint(cfg, swan, batch=16, seq=32_768)
+    assert 200e9 < fp.dense_bytes < 300e9
+    assert fp.saving > 0.2
+
+
+def test_50_60_percent_savings_claim():
+    """Abstract: '50-60% memory savings per-token' — k=48..64 of 128 with
+    8-bit values lands in that band."""
+    cfg = get_config("llama3-8b")
+    for k, bits8 in [(64, True), (48, True)]:
+        swan = SwanConfig(k_max=k, buffer=128, quantize=bits8)
+        fp = model_cache_footprint(cfg, swan, batch=32, seq=32_768)
+        assert 0.4 < fp.saving < 0.65, (k, bits8, fp.saving)

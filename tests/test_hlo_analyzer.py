@@ -1,0 +1,55 @@
+"""Loop-aware HLO analyzer: trip-count multiplication, collective parsing,
+dot-flop counting from shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze_hlo, parse_instr_line, parse_module
+
+
+def test_dot_flops_from_shapes():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = analyze_hlo(jax.jit(f).lower(a, b).compile().as_text())
+    expect = 2 * 64 * 128 * 32
+    assert abs(c.flops - expect) / expect < 0.05
+
+
+def test_scan_trip_count_multiplied():
+    def one(x, w):
+        return jnp.sum(x @ w)
+
+    def scanned(x, ws):
+        def body(x, w):
+            return x @ w, None
+        x, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(x)
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    wn = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+    c1 = analyze_hlo(jax.jit(one).lower(x, w1).compile().as_text())
+    cn = analyze_hlo(jax.jit(scanned).lower(x, wn).compile().as_text())
+    ratio = cn.flops / c1.flops
+    assert 10 <= ratio <= 14, ratio
+
+
+def test_instr_parser_handles_tuple_types_with_comments():
+    line = ('  %while.5 = (s32[], bf16[8,1,2048]{2,1,0}, /*index=2*/'
+            'f32[16,2048]{1,0}) while(%tuple.1), condition=%cond, '
+            'body=%body, backend_config={"known_trip_count":{"n":"16"}}')
+    ins = parse_instr_line(line)
+    assert ins is not None
+    assert ins.opcode == "while"
+    assert "known_trip_count" in ins.attrs
+
+
+def test_parse_module_roundtrip():
+    def f(x):
+        return jnp.tanh(x).sum()
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    comps, entry = parse_module(jax.jit(f).lower(x).compile().as_text())
+    assert entry is not None
+    assert comps[entry].instrs

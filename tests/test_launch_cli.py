@@ -1,0 +1,53 @@
+"""Launcher CLI smoke tests (subprocess — the way operators invoke them)."""
+import subprocess
+import sys
+
+CMD = [sys.executable, "-m"]
+ENV_CWD = "/root/repo"
+
+
+def _run(args, timeout=420):
+    return subprocess.run(
+        [sys.executable, "-m"] + args, capture_output=True, text=True,
+        timeout=timeout, cwd=ENV_CWD,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+
+
+def test_train_cli(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "olmo-1b", "--smoke",
+                "--steps", "4", "--batch", "2", "--seq", "16",
+                "--ckpt-dir", str(tmp_path), "--ckpt-every", "4"])
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "finished at step 4" in out.stdout
+    assert "loss" in out.stdout
+
+
+def test_serve_cli_swan(tmp_path):
+    out = _run(["repro.launch.serve", "--arch", "llama3-8b", "--smoke",
+                "--swan", "--k", "8", "--buffer", "8", "--batch", "2",
+                "--prompt-len", "8", "--tokens", "6", "--max-seq", "64"])
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "SWAN: k_max=8" in out.stdout
+    assert "cache [swan[topk]]" in out.stdout
+
+
+def test_serve_cli_rejects_swan_for_rwkv():
+    out = _run(["repro.launch.serve", "--arch", "rwkv6-3b", "--smoke",
+                "--swan", "--tokens", "2", "--max-seq", "32"])
+    assert out.returncode != 0
+    assert "inapplicable" in (out.stdout + out.stderr)
+
+
+def test_dryrun_cli_single_cell(tmp_path):
+    out = _run(["repro.launch.dryrun", "--arch", "olmo-1b",
+                "--shape", "decode_32k", "--swan", "--out", str(tmp_path)],
+               timeout=560)
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "ok" in out.stdout
+    import glob
+    import json
+    rec = json.load(open(glob.glob(str(tmp_path / "*.json"))[0]))
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert "roofline" in rec and "kernel_model_memory_s" in rec["roofline"]

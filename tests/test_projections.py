@@ -1,0 +1,71 @@
+"""SWAN projection construction (paper §4.1): orthogonality, energy
+ordering, GQA grouping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.projections import (check_orthogonal, compute_projections,
+                                    gram_basis, layer_projections,
+                                    random_orthogonal)
+
+
+def test_gram_basis_orthogonal():
+    s = jax.random.normal(jax.random.PRNGKey(0), (500, 64))
+    p = gram_basis(s)
+    assert float(check_orthogonal(p[None])) < 1e-3
+
+
+def test_gram_basis_energy_descending():
+    """Columns ordered by decreasing captured variance (enables truncation)."""
+    key = jax.random.PRNGKey(1)
+    # anisotropic data: descending energy must be recovered
+    scales = jnp.linspace(10.0, 0.1, 32)
+    s = jax.random.normal(key, (2000, 32)) * scales[None]
+    p = gram_basis(s)
+    energy = jnp.var(s @ p, axis=0)
+    diffs = jnp.diff(energy)
+    assert float(jnp.max(diffs)) < 1e-2
+
+
+def test_gram_basis_matches_svd():
+    s = np.random.default_rng(2).standard_normal((300, 16)).astype(np.float32)
+    p = np.asarray(gram_basis(jnp.asarray(s)))
+    _, _, vt = np.linalg.svd(s, full_matrices=True)
+    # same subspace per column up to sign
+    dots = np.abs(np.sum(p * vt.T, axis=0))
+    np.testing.assert_allclose(dots, 1.0, atol=1e-2)
+
+
+@pytest.mark.parametrize("n_heads,n_kv", [(4, 4), (8, 2), (6, 1)])
+def test_layer_projections_shapes(n_heads, n_kv):
+    dh, B, S, d = 16, 2, 24, 32
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, n_heads, dh))
+    k = jax.random.normal(key, (B, S, n_kv, dh))
+    v = jax.random.normal(key, (B, S, n_kv, dh))
+    wo = jax.random.normal(key, (n_heads * dh, d))
+    p_qk, p_vo, e_qk, e_vo = layer_projections(q, k, v, wo, n_heads, n_kv, dh)
+    assert e_qk.shape == (n_kv, dh)
+    assert p_qk.shape == (n_kv, dh, dh)
+    assert p_vo.shape == (n_kv, dh, dh)
+    assert float(check_orthogonal(p_qk)) < 1e-3
+    assert float(check_orthogonal(p_vo)) < 1e-3
+
+
+def test_compute_projections_stacked_layers():
+    L, B, S, H, Kv, dh, d = 3, 2, 16, 4, 2, 8, 32
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (L, B, S, H, dh))
+    k = jax.random.normal(key, (L, B, S, Kv, dh))
+    v = jax.random.normal(key, (L, B, S, Kv, dh))
+    wo = jax.random.normal(key, (L, H * dh, d))
+    pj = compute_projections((q, k, v), wo, H, Kv, dh)
+    assert pj["p_qk"].shape == (L, Kv, dh, dh)
+    assert float(check_orthogonal(pj["p_qk"])) < 1e-3
+
+
+def test_random_orthogonal():
+    p = random_orthogonal(jax.random.PRNGKey(0), (3, 2), 16)
+    assert p.shape == (3, 2, 16, 16)
+    assert float(check_orthogonal(p)) < 1e-4

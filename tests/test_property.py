@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) for SWAN's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytical import (breakeven_length, compression_ratio,
+                                   flops_standard, flops_swan,
+                                   sparse_vector_bytes)
+from repro.core.projections import gram_basis, random_orthogonal
+from repro.core.winnow import (dequantize_int8, quantize_int8, topk_pack,
+                               unpack_dense)
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(8, 64))
+@settings(**_SETTINGS)
+def test_rotation_preserves_dot_products(seed, n):
+    """Lemma A.1 as a property: any orthogonal P preserves q·kᵀ."""
+    key = jax.random.PRNGKey(seed)
+    p = random_orthogonal(key, (), 16)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (n, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (n, 16))
+    s0 = q @ k.T
+    s1 = (q @ p) @ (k @ p).T
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       k=st.integers(1, 16), dh=st.sampled_from([16, 32]))
+@settings(**_SETTINGS)
+def test_prune_idempotent(seed, k, dh):
+    """Winnowing an already-winnowed vector changes nothing."""
+    k = min(k, dh)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, dh))
+    v1, i1 = topk_pack(x, k)
+    d1 = unpack_dense(v1, i1, dh)
+    v2, i2 = topk_pack(d1, k)
+    d2 = unpack_dense(v2, i2, dh)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_pruning_error_monotone_in_k(seed):
+    """More retained dims -> no larger reconstruction error."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 32))
+    errs = []
+    for k in [4, 8, 16, 32]:
+        v, i = topk_pack(x, k)
+        errs.append(float(jnp.linalg.norm(unpack_dense(v, i, 32) - x)))
+    assert all(a >= b - 1e-6 for a, b in zip(errs, errs[1:]))
+    assert errs[-1] < 1e-6
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.01, 100.0))
+@settings(**_SETTINGS)
+def test_quantization_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32)) * scale
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    bound = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    assert bool(jnp.all(err <= bound + 1e-5))
+
+
+@given(dh=st.sampled_from([64, 128]), k=st.integers(1, 127),
+       b=st.integers(0, 512), L=st.integers(1, 100_000))
+@settings(**_SETTINGS)
+def test_breakeven_consistent_with_flop_model(dh, k, b, L):
+    """Eq. 2 break-even point is exactly where the Prop A.3/A.4 FLOP models
+    cross (k < dh)."""
+    k = min(k, dh - 1)
+    be = breakeven_length(dh, k, b)
+    if L > be and L > b:
+        assert flops_swan(L, dh, k, b) < flops_standard(L, dh)
+    if L < min(be, b):   # fully-buffered region: SWAN adds projection cost
+        assert flops_swan(L, dh, k, b) >= flops_standard(L, dh)
+
+
+@given(k=st.integers(1, 128), bits8=st.booleans())
+@settings(**_SETTINGS)
+def test_memory_model_eq1(k, bits8):
+    got = sparse_vector_bytes(k, bits8)
+    assert got == (2 * k + 2 if bits8 else 3 * k + 2)
+    # compression < 1 iff below the paper's break-even retention
+    ratio = compression_ratio(k, 128, bits8)
+    dense = 256
+    assert abs(ratio - got / dense) < 1e-9
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(10, 200))
+@settings(**_SETTINGS)
+def test_gram_basis_reconstruction_optimality(seed, n):
+    """Leading-j subspace captures at least as much energy as any random
+    orthogonal subspace of the same rank (Eckart–Young flavour)."""
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.normal(key, (n, 16)) * jnp.linspace(4, 0.2, 16)[None]
+    p = gram_basis(s)
+    j = 4
+    proj = s @ p[:, :j]
+    captured = float(jnp.sum(proj ** 2))
+    p_rand = random_orthogonal(jax.random.fold_in(key, 3), (), 16)
+    captured_rand = float(jnp.sum((s @ p_rand[:, :j]) ** 2))
+    assert captured >= captured_rand - 1e-3

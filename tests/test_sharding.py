@@ -1,0 +1,165 @@
+"""Sharding: spec validity for every arch, sanitizer behaviour, and a
+subprocess 8-device mini dry-run + sharded train step (the only way to get
+multiple devices in this test process-space)."""
+import json
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.models import get_model
+from repro.sharding.serve_specs import (sanitize_tree, serve_state_pspecs)
+from repro.sharding.specs import params_pspecs
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_constructible(arch):
+    """Every full-config param leaf gets a spec that (a) builds a
+    NamedSharding and (b) divides the dim sizes after sanitizing."""
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    params_abs = api.abstract_params(cfg)
+    mesh = make_mesh((1,), ("x",))  # placeholder; use production names below
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    specs = params_pspecs(params_abs, cfg, FakeMesh())
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    flat_p = jax.tree_util.tree_leaves(params_abs)
+    assert len(flat_s) == len(flat_p)
+    for spec, leaf in zip(flat_s, flat_p):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            n = int(np.prod([FakeMesh.shape[a] for a in axes]))
+            assert dim % n == 0, (arch, spec, leaf.shape)
+
+
+def test_sanitizer_drops_indivisible():
+    mesh = make_mesh((1,), ("model",))
+
+    class M:
+        shape = {"model": 16}
+        axis_names = ("model",)
+
+    import jax.numpy as jnp
+    from repro.sharding.serve_specs import _sanitize
+    out = _sanitize(P("model", None), (10, 4), M())
+    assert tuple(out) == (None, None)
+    out = _sanitize(P("model", None), (32, 4), M())
+    assert tuple(out)[0] == "model"
+
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import json
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import OptimizerConfig, get_smoke_config
+from repro.launch.io import make_batch
+from repro.launch.mesh import make_mesh
+from repro.models import get_model
+from repro.optim.adamw import init_opt_state
+from repro.runtime.train_loop import make_train_step
+from repro.sharding.api import use_rules
+from repro.sharding.serve_specs import batch_shardings, sanitize_tree
+from repro.sharding.specs import activation_rules, params_pspecs
+
+cfg = get_smoke_config("llama3-8b")
+mesh = make_mesh((2, 4), ("data", "model"))
+api = get_model(cfg)
+params = api.init_params(jax.random.PRNGKey(0), cfg)
+p_specs = sanitize_tree(params_pspecs(params, cfg, mesh), params, mesh)
+p_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), p_specs)
+params = jax.device_put(params, p_sh)
+opt = init_opt_state(params, OptimizerConfig())
+o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
+opt = jax.device_put(opt, o_sh)
+batch = make_batch(cfg, 4, 16)
+batch = jax.device_put(batch, batch_shardings(batch, mesh))
+step = make_train_step(cfg, OptimizerConfig(lr=1e-3), 1)
+rules = activation_rules(cfg, mesh)
+with use_rules(rules):
+    jitted = jax.jit(step)
+    params, opt, metrics = jitted(params, opt, batch)
+    params, opt, metrics = jitted(params, opt, batch)
+print(json.dumps({"loss": float(metrics["loss"]),
+                  "grad_norm": float(metrics["grad_norm"]),
+                  "n_dev": jax.device_count()}))
+"""
+
+
+def test_subprocess_8device_sharded_train():
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                         capture_output=True, text=True, timeout=420,
+                         cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["n_dev"] == 8
+    assert np.isfinite(rec["loss"]) and rec["loss"] > 0
+    assert np.isfinite(rec["grad_norm"])
+
+
+_DRYRUN_MINI = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import json
+import repro.launch.dryrun as dr
+import repro.launch.mesh as mesh_mod
+import jax
+# shrink the production mesh so the mini dry-run fits 8 host devices
+mesh_mod.make_production_mesh = lambda multi_pod=False: mesh_mod.make_mesh(
+    (2, 2, 2) if multi_pod else (2, 4),
+    ("pod", "data", "model") if multi_pod else ("data", "model"))
+dr.make_production_mesh = mesh_mod.make_production_mesh
+recs = []
+for mp in (False, True):
+    rec = dr.build_cell("olmo-1b", "decode_32k", mp, True)
+    recs.append({"status": rec["status"], "mp": mp,
+                 "dom": rec.get("roofline", {}).get("bottleneck")})
+print(json.dumps(recs))
+"""
+
+
+def test_subprocess_mini_dryrun_multipod():
+    """build_cell compiles on a small 3-axis (pod,data,model) mesh —
+    validates the multi-pod code path end-to-end inside the test suite."""
+    out = subprocess.run([sys.executable, "-c", _DRYRUN_MINI],
+                         capture_output=True, text=True, timeout=420,
+                         cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-2000:]
+    recs = json.loads(out.stdout.strip().splitlines()[-1])
+    for rec in recs:
+        assert rec["status"] == "ok", rec
+
+
+def test_serve_state_specs_cover_all_archs():
+    class M:
+        shape = {"pod": 2, "data": 16, "model": 16}
+        axis_names = ("pod", "data", "model")
+
+    from repro.configs import SwanConfig
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        api = get_model(cfg)
+        state = jax.eval_shape(lambda: api.init_serve_state(cfg, None, 2, 32))
+        specs = serve_state_pspecs(state, M())
+        assert len(jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))) == \
+            len(jax.tree_util.tree_leaves(state))

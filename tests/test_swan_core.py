@@ -1,0 +1,172 @@
+"""SWAN core behaviour: Lemma A.1/A.2 losslessness, winnow/pack, hybrid
+cache semantics, end-to-end full-retention exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SwanConfig, get_smoke_config
+from repro.core import hybrid_cache as hc
+from repro.core import projections as proj
+from repro.core.winnow import (dequantize_int8, quantize_int8, rotate_k,
+                               rotate_q, topk_pack, truncate_pack,
+                               unpack_dense)
+from repro.models import transformer as tfm
+
+
+@pytest.fixture(scope="module")
+def calibrated():
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32",
+                                                param_dtype="float32")
+    params = tfm.init_lm_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                cfg.vocab_size)
+    q, k, v, wo = tfm.collect_qkv(params, cfg, tokens)
+    pj = proj.compute_projections((q, k, v), wo, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.d_head)
+    absorbed = tfm.absorb_swan(params, cfg, pj)
+    return cfg, params, absorbed, pj, tokens
+
+
+def test_rotation_preserves_scores_lemma_a1(calibrated):
+    """Lemma A.1: q̂·k̂ᵀ == q·kᵀ for orthogonal P_QK."""
+    cfg, params, _, pj, tokens = calibrated
+    q, k, v, _ = tfm.collect_qkv(params, cfg, tokens)
+    l = 0
+    p_qk = pj["p_qk"][l]
+    qh = rotate_q(q[l], p_qk, cfg.n_kv_heads)        # [B,S,Kv,G,dh]
+    kh = rotate_k(k[l], p_qk)
+    B, S, Kv, G, dh = qh.shape
+    s_rot = jnp.einsum("bsjgd,btjd->bjgst", qh, kh)
+    q_grouped = q[l].reshape(B, S, Kv, G, dh)
+    s_orig = jnp.einsum("bsjgd,btjd->bjgst", q_grouped, k[l])
+    np.testing.assert_allclose(np.asarray(s_rot), np.asarray(s_orig),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_absorption_lossless_lemma_a2(calibrated):
+    """Lemma A.2: absorbed Ŵ_V/Ŵ_O give identical logits."""
+    cfg, params, absorbed, _, tokens = calibrated
+    lg1, _ = tfm.lm_forward(params, cfg, tokens)
+    lg2, _ = tfm.lm_forward(absorbed, cfg, tokens)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_full_retention_serving_exact(calibrated):
+    """k_max = d_head keeps SWAN serving bit-comparable to dense serving."""
+    cfg, params, absorbed, pj, tokens = calibrated
+    swan = SwanConfig(k_max=cfg.d_head, buffer=8, mode="topk")
+    sc = tfm.init_caches(cfg, swan, 2, 48)
+    dc = tfm.init_caches(cfg, None, 2, 48)
+    lg_s, sc = tfm.lm_prefill(absorbed, cfg, tokens, sc, swan, pj)
+    lg_d, dc = tfm.lm_prefill(params, cfg, tokens, dc)
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_d), atol=2e-4,
+                               rtol=1e-3)
+    tok = jnp.argmax(lg_d[:, -1], -1)
+    for i in range(12):   # through buffer eviction (b=8)
+        lg_s, sc = tfm.lm_decode_step(absorbed, cfg, tok, 24 + i, sc, swan, pj)
+        lg_d, dc = tfm.lm_decode_step(params, cfg, tok, 24 + i, dc)
+        np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_d),
+                                   atol=5e-4, rtol=1e-3)
+        tok = jnp.argmax(lg_d, -1)
+
+
+# ---------------------------------------------------------------------------
+# Winnowing primitives
+# ---------------------------------------------------------------------------
+
+def test_topk_pack_roundtrip_full_k():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 16))
+    vals, idx = topk_pack(x, 16)
+    np.testing.assert_allclose(np.asarray(unpack_dense(vals, idx, 16)),
+                               np.asarray(x), atol=0)
+
+
+def test_topk_pack_keeps_largest():
+    x = jnp.asarray([[1.0, -5.0, 0.1, 3.0]])
+    vals, idx = topk_pack(x, 2)
+    assert set(np.asarray(idx[0]).tolist()) == {1, 3}
+    dense = unpack_dense(vals, idx, 4)
+    np.testing.assert_allclose(np.asarray(dense), [[0.0, -5.0, 0.0, 3.0]])
+
+
+def test_runtime_k_active_zeroes_tail():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    vals, idx = topk_pack(x, 8, k_active=jnp.asarray(3))
+    assert bool(jnp.all(vals[:, 3:] == 0))
+    assert not bool(jnp.all(vals[:, :3] == 0))
+
+
+def test_truncate_pack():
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+    vals = truncate_pack(x, 6)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(x[:, :6]))
+    dense = unpack_dense(vals, None, 16)
+    assert dense.shape == (4, 16)
+    assert bool(jnp.all(dense[:, 6:] == 0))
+
+
+def test_quantize_int8_bound():
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 64)) * 3
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s)
+    err = jnp.abs(deq - x)
+    bound = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    assert bool(jnp.all(err <= bound * 0.5 + 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# Hybrid cache semantics
+# ---------------------------------------------------------------------------
+
+def test_prefill_then_decode_equals_all_prefill():
+    """Cache built by prefill(S) + decode == cache built by prefill(S+1)."""
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32")
+    swan = SwanConfig(k_max=8, buffer=4, mode="topk")
+    key = jax.random.PRNGKey(0)
+    S = 11
+    kh = jax.random.normal(key, (1, S + 1, cfg.n_kv_heads, cfg.d_head))
+    vh = jax.random.normal(jax.random.PRNGKey(9), (1, S + 1, cfg.n_kv_heads, cfg.d_head))
+
+    c1 = hc.init_swan_cache(cfg, swan, 1, 32)
+    c1 = hc.swan_cache_insert_prefill(c1, swan, cfg, kh, vh)
+
+    c2 = hc.init_swan_cache(cfg, swan, 1, 32)
+    c2 = hc.swan_cache_insert_prefill(c2, swan, cfg, kh[:, :S], vh[:, :S])
+    c2 = hc.swan_cache_insert_decode(c2, swan, cfg, kh[:, S:], vh[:, S:], S)
+
+    # sparse region [0, S+1-b) and buffer contents must agree
+    n_sp = S + 1 - swan.buffer
+    np.testing.assert_allclose(np.asarray(c1["k"]["vals"][:, :, :n_sp]),
+                               np.asarray(c2["k"]["vals"][:, :, :n_sp]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1["k"]["idx"][:, :, :n_sp]),
+                               np.asarray(c2["k"]["idx"][:, :, :n_sp]))
+    order1 = np.argsort(np.asarray(c1["buf_pos"]))
+    order2 = np.argsort(np.asarray(c2["buf_pos"]))
+    np.testing.assert_allclose(
+        np.asarray(c1["buf_k"])[:, :, order1],
+        np.asarray(c2["buf_k"])[:, :, order2], atol=1e-6)
+
+
+def test_ring_buffer_eviction_order():
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32")
+    swan = SwanConfig(k_max=4, buffer=4, mode="topk")
+    cache = hc.init_swan_cache(cfg, swan, 1, 16)
+    for pos in range(10):
+        k1 = jnp.full((1, 1, cfg.n_kv_heads, cfg.d_head), float(pos + 1))
+        cache = hc.swan_cache_insert_decode(cache, swan, cfg, k1, k1, pos)
+    bp = np.asarray(cache["buf_pos"])
+    assert sorted(bp.tolist()) == [6, 7, 8, 9]       # last b=4 positions
+    assert int(hc.sparse_len(swan, 9)) == 6           # 0..5 winnowed
+
+
+def test_cache_bytes_matches_eq1():
+    cfg = get_smoke_config("llama3-8b")
+    swan = SwanConfig(k_max=8, buffer=4, mode="topk")
+    got = hc.cache_bytes(cfg, swan, batch=2, max_seq=32)
+    per_vec = 8 * 2 + 8                              # bf16 vals + int8 idx
+    expect = 2 * 2 * cfg.n_kv_heads * 32 * per_vec + \
+        2 * 2 * cfg.n_kv_heads * 4 * cfg.d_head * 2
+    assert got == expect
