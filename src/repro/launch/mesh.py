@@ -8,16 +8,29 @@ count (1 CPU here).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:   # newer jax; older releases have neither AxisType nor axis_types
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _mk(shape, axes):
+    if not hasattr(jax, "make_mesh"):   # pre-0.4.35: build the Mesh directly
+        from jax.experimental import mesh_utils
+        from jax.sharding import Mesh
+        return Mesh(mesh_utils.create_device_mesh(shape), axes)
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small ones, e.g. (2, 4))."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return _mk(tuple(shape), tuple(axes))

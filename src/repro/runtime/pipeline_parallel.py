@@ -84,7 +84,9 @@ def pipeline_apply(layer_fn: Callable, stage_params: Params, x: jnp.ndarray,
         outputs = jnp.where(stage == n_stages - 1, outputs, 0.0)
         return jax.lax.psum(outputs, axis)
 
+    from repro.sharding.api import shard_map_compat
+
     in_specs = (P(axis), P())       # stage params sharded; input replicated
-    out = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                        out_specs=P(), check_vma=False)(stage_params, micro)
+    out = shard_map_compat(local_fn, mesh, in_specs,
+                           P())(stage_params, micro)
     return out.reshape(B, *x.shape[1:])
