@@ -8,7 +8,7 @@ Layout per attention layer (model stacks a leading L axis when scanning):
     k_scale[B, Kv, S]          f32    (quantized only)         (same for v_*)
   buffer (recent, dense):
     buf_k / buf_v [B, Kv, b, dh]
-    buf_pos [b] int32  — token position held in each ring slot (-1 = empty)
+    buf_pos [B, b] int32 — token position held in each ring slot (-1 = empty)
 
 Ring semantics: token ``t`` lives in slot ``t % b``.  At decode step ``pos``
 the slot's previous occupant (token ``pos - b``) is winnowed and written to
@@ -16,6 +16,10 @@ the sparse cache at its own position — Algorithm 1's pop-oldest, with XLA
 fixed shapes.  While ``pos < b`` the evicted slot is empty (buf_pos = -1);
 the clamped sparse write lands in the still-invalid region (< sp_len mask)
 so no guard select over the big arrays is needed.
+
+``pos`` may be a scalar (lockstep batch) or a per-sequence ``[B]`` vector —
+the continuous-batching engine decodes sequences at independent positions,
+so ring state and validity masks are tracked per sequence.
 
 Memory accounting matches paper Eq. 1: the packed payload per vector is
 k·(2+1) bytes (16-bit vals + int8 idx) or k·(1+1) (+scale) when quantized.
@@ -47,8 +51,13 @@ def init_swan_cache(cfg, swan, batch: int, max_seq: int) -> Params:
         "k": side(), "v": side(),
         "buf_k": jnp.zeros((batch, Kv, b, dh), jnp.dtype(cfg.dtype)),
         "buf_v": jnp.zeros((batch, Kv, b, dh), jnp.dtype(cfg.dtype)),
-        "buf_pos": jnp.full((b,), -1, jnp.int32),
+        "buf_pos": jnp.full((batch, b), -1, jnp.int32),
     }
+
+
+def per_seq_pos(pos, batch: int) -> jnp.ndarray:
+    """Normalise a scalar-or-[B] decode position to int32 [B]."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
 
 
 def _side(B, Kv, S, k, vdt, swan) -> Params:
@@ -98,35 +107,52 @@ def _write_sparse(side: Params, packed: Params, idx3) -> Params:
     return out
 
 
+def _write_sparse_at(side: Params, packed: Params, idx_b: jnp.ndarray) -> Params:
+    """Write packed single vectors [B, Kv, 1, ...] at per-sequence sparse
+    positions ``idx_b`` [B] (decode: each sequence evicts its own token)."""
+    B = idx_b.shape[0]
+    bi = jnp.arange(B)
+    out = dict(side)
+    out["vals"] = side["vals"].at[bi, :, idx_b].set(
+        packed["vals"][:, :, 0].astype(side["vals"].dtype))
+    if "idx" in side:
+        out["idx"] = side["idx"].at[bi, :, idx_b].set(packed["idx"][:, :, 0])
+    if "scale" in side:
+        out["scale"] = side["scale"].at[bi, :, idx_b].set(packed["scale"][:, :, 0])
+    return out
+
+
 def swan_cache_insert_decode(cache: Params, swan, cfg, k_hat: jnp.ndarray,
                              v_hat: jnp.ndarray, pos, k_act=None) -> Params:
     """One decode step: evict+winnow the ring slot's occupant, insert the new
-    rotated k̂/v̂ [B, 1, Kv, dh] at position ``pos``."""
+    rotated k̂/v̂ [B, 1, Kv, dh] at position ``pos`` (scalar or [B])."""
+    B = k_hat.shape[0]
     b = swan.buffer
+    pos = per_seq_pos(pos, B)
     if b == 0:   # paper's bt=0 ablation: winnow immediately, no ring
         out = dict(cache)
         kt = k_hat.transpose(0, 2, 1, 3)
         vt = v_hat.transpose(0, 2, 1, 3)
-        out["k"] = _write_sparse(cache["k"], winnow_vector(kt, swan, "k", k_act), pos)
-        out["v"] = _write_sparse(cache["v"], winnow_vector(vt, swan, "v", k_act), pos)
+        out["k"] = _write_sparse_at(cache["k"], winnow_vector(kt, swan, "k", k_act), pos)
+        out["v"] = _write_sparse_at(cache["v"], winnow_vector(vt, swan, "v", k_act), pos)
         return out
-    slot = jnp.mod(pos, b)
-    old_pos = cache["buf_pos"][slot]
-    write_idx = jnp.maximum(old_pos, 0)
+    bi = jnp.arange(B)
+    slot = jnp.mod(pos, b)                                          # [B]
+    old_pos = jnp.take_along_axis(cache["buf_pos"], slot[:, None], axis=1)[:, 0]
+    write_idx = jnp.maximum(old_pos, 0)                             # [B]
 
     out = dict(cache)
     # --- evict & winnow old occupant (garbage while old_pos < 0: masked) ---
-    old_k = jax.lax.dynamic_slice_in_dim(cache["buf_k"], slot, 1, axis=2)
-    old_v = jax.lax.dynamic_slice_in_dim(cache["buf_v"], slot, 1, axis=2)
-    out["k"] = _write_sparse(cache["k"], winnow_vector(old_k, swan, "k", k_act), write_idx)
-    out["v"] = _write_sparse(cache["v"], winnow_vector(old_v, swan, "v", k_act), write_idx)
-    # --- insert new token into the ring -----------------------------------
-    kt = k_hat.transpose(0, 2, 1, 3).astype(cache["buf_k"].dtype)  # [B,Kv,1,dh]
+    old_k = jnp.take_along_axis(cache["buf_k"], slot[:, None, None, None], axis=2)
+    old_v = jnp.take_along_axis(cache["buf_v"], slot[:, None, None, None], axis=2)
+    out["k"] = _write_sparse_at(cache["k"], winnow_vector(old_k, swan, "k", k_act), write_idx)
+    out["v"] = _write_sparse_at(cache["v"], winnow_vector(old_v, swan, "v", k_act), write_idx)
+    # --- insert new token into each sequence's ring slot -------------------
+    kt = k_hat.transpose(0, 2, 1, 3).astype(cache["buf_k"].dtype)   # [B,Kv,1,dh]
     vt = v_hat.transpose(0, 2, 1, 3).astype(cache["buf_v"].dtype)
-    out["buf_k"] = jax.lax.dynamic_update_slice(cache["buf_k"], kt, (0, 0, slot, 0))
-    out["buf_v"] = jax.lax.dynamic_update_slice(cache["buf_v"], vt, (0, 0, slot, 0))
-    out["buf_pos"] = jax.lax.dynamic_update_slice(
-        cache["buf_pos"], jnp.asarray(pos, jnp.int32)[None], (slot,))
+    out["buf_k"] = cache["buf_k"].at[bi, :, slot].set(kt[:, :, 0])
+    out["buf_v"] = cache["buf_v"].at[bi, :, slot].set(vt[:, :, 0])
+    out["buf_pos"] = cache["buf_pos"].at[bi, slot].set(pos)
     return out
 
 
@@ -163,10 +189,11 @@ def swan_cache_insert_prefill(cache: Params, swan, cfg, k_hat: jnp.ndarray,
         kt[:, :, n_sp:].astype(cache["buf_k"].dtype))
     out["buf_v"] = cache["buf_v"].at[:, :, slots].set(
         vt[:, :, n_sp:].astype(cache["buf_v"].dtype))
-    out["buf_pos"] = cache["buf_pos"].at[slots].set(tail.astype(jnp.int32))
+    out["buf_pos"] = cache["buf_pos"].at[:, slots].set(tail.astype(jnp.int32))
     return out
 
 
 def sparse_len(swan, pos) -> jnp.ndarray:
-    """Number of valid sparse entries at decode position ``pos``."""
-    return jnp.maximum(pos + 1 - swan.buffer, 0)
+    """Number of valid sparse entries at decode position ``pos`` (scalar or
+    per-sequence [B] — shape follows ``pos``)."""
+    return jnp.maximum(jnp.asarray(pos) + 1 - swan.buffer, 0)

@@ -24,7 +24,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.hybrid_cache import sparse_len
+from repro.core.hybrid_cache import per_seq_pos, sparse_len
 from repro.core.winnow import dequantize_int8, unpack_dense
 
 Params = Dict[str, Any]
@@ -57,6 +57,9 @@ def _sparse_stats(qf: jnp.ndarray, k_side: Params, v_side: Params, swan,
     No dense [S, dh] tensor is ever materialised.  In truncate mode the
     score collapses to a dense low-rank dot (pure MXU).
 
+    ``sp_len`` is per-sequence [B]: each sequence masks its own valid
+    sparse prefix (continuous batching decodes mixed-length sequences).
+
     Returns (m [B,Kv,G], l [B,Kv,G], o_unnorm [B,Kv,G,dh]) — mergeable
     partial softmax statistics.
     """
@@ -82,7 +85,8 @@ def _sparse_stats(qf: jnp.ndarray, k_side: Params, v_side: Params, swan,
             q_b, jnp.broadcast_to(kidx[:, :, None], (B, Kv, G, S, k_max)),
             axis=-1)
         s_sp = _dot_f32("bjgtk,bjtk->bjgt", q_at, kv_) * scale
-    valid = (s_offset + jnp.arange(S))[None, None, None, :] < sp_len
+    valid = ((s_offset + jnp.arange(S))[None, None, None, :]
+             < sp_len[:, None, None, None])
     s_sp = jnp.where(valid, s_sp, -jnp.inf)
 
     m = s_sp.max(-1)
@@ -115,6 +119,8 @@ def _sparse_stats_sharded(qf, cache, swan, sp_len, mesh, seq_axis: str):
     cannot fall back to gathering the compressed cache."""
     from jax.sharding import PartitionSpec as P
 
+    from repro.sharding.api import shard_map_compat
+
     B = qf.shape[0]
     S = cache["k"]["vals"].shape[2]
     n_shard = mesh.shape[seq_axis]
@@ -142,12 +148,11 @@ def _sparse_stats_sharded(qf, cache, swan, sp_len, mesh, seq_axis: str):
         o_g = jax.lax.psum(o * corr[..., None], seq_axis)
         return m_g, l_g, o_g
 
-    return jax.shard_map(
-        local_fn, mesh=mesh,
-        in_specs=(P(bspec, None, None, None), side_spec, side_spec, P()),
-        out_specs=(P(bspec, None, None), P(bspec, None, None),
-                   P(bspec, None, None, None)),
-        check_vma=False,
+    return shard_map_compat(
+        local_fn, mesh,
+        (P(bspec, None, None, None), side_spec, side_spec, P(bspec)),
+        (P(bspec, None, None), P(bspec, None, None),
+         P(bspec, None, None, None)),
     )(qf, cache["k"], cache["v"], jnp.asarray(sp_len))
 
 
@@ -156,13 +161,15 @@ def swan_decode_attention(q_hat: jnp.ndarray, cache: Params, swan, cfg,
                           ) -> jnp.ndarray:
     """q̂ [B, Kv, G, dh] (rotated, grouped) -> o [B, Kv, G, dh] (rotated).
 
-    Joint exact softmax over [winnowed sparse ‖ dense buffer].  When
+    Joint exact softmax over [winnowed sparse ‖ dense buffer].  ``pos`` may
+    be a scalar (lockstep) or per-sequence [B] (continuous batching).  When
     ``mesh``/``seq_axis`` are given the sparse part runs as an explicit
     split-S shard_map (flash-decoding)."""
     B, Kv, G, dh = q_hat.shape
     S = cache["k"]["vals"].shape[2]
     qf = q_hat.astype(jnp.float32)
-    sp_len = sparse_len(swan, pos)
+    pos = per_seq_pos(pos, B)
+    sp_len = sparse_len(swan, pos)                     # [B]
     scale = 1.0 / math.sqrt(dh)
 
     if (mesh is not None and seq_axis in mesh.axis_names
@@ -181,11 +188,11 @@ def swan_decode_attention(q_hat: jnp.ndarray, cache: Params, swan, cfg,
     bk = cache["buf_k"]                                # [B,Kv,b,dh] storage dtype
     bv = cache["buf_v"]
     s_b = _dot_f32("bjgd,bjtd->bjgt", qf.astype(bk.dtype), bk) * scale
-    b_valid = (cache["buf_pos"] >= 0) & (cache["buf_pos"] <= pos)
-    s_b = jnp.where(b_valid[None, None, None], s_b, -jnp.inf)
+    b_valid = (cache["buf_pos"] >= 0) & (cache["buf_pos"] <= pos[:, None])
+    s_b = jnp.where(b_valid[:, None, None], s_b, -jnp.inf)
     m_b = s_b.max(-1)
     m_b = jnp.where(jnp.isfinite(m_b), m_b, 0.0)
-    p_b = jnp.where(b_valid[None, None, None], jnp.exp(s_b - m_b[..., None]), 0.0)
+    p_b = jnp.where(b_valid[:, None, None], jnp.exp(s_b - m_b[..., None]), 0.0)
     l_b = p_b.sum(-1)
     o_b = _dot_f32("bjgt,bjtd->bjgd", p_b.astype(bv.dtype), bv)
 
@@ -206,6 +213,7 @@ def swan_decode_attention_reference(q_hat: jnp.ndarray, cache: Params, swan,
                                     cfg, pos) -> jnp.ndarray:
     B, Kv, G, dh = q_hat.shape
     S = cache["k"]["vals"].shape[2]
+    pos = per_seq_pos(pos, B)
 
     def side_dense(side):
         vals = side["vals"]
@@ -216,14 +224,14 @@ def swan_decode_attention_reference(q_hat: jnp.ndarray, cache: Params, swan,
     kd, vd = side_dense(cache["k"]), side_dense(cache["v"])
     qf = q_hat.astype(jnp.float32)
     s_sp = jnp.einsum("bjgd,bjtd->bjgt", qf, kd) / math.sqrt(dh)
-    sp_valid = jnp.arange(S) < sparse_len(swan, pos)
-    s_sp = jnp.where(sp_valid[None, None, None], s_sp, -jnp.inf)
+    sp_valid = jnp.arange(S)[None, :] < sparse_len(swan, pos)[:, None]
+    s_sp = jnp.where(sp_valid[:, None, None], s_sp, -jnp.inf)
 
     bk = cache["buf_k"].astype(jnp.float32)
     bv = cache["buf_v"].astype(jnp.float32)
     s_b = jnp.einsum("bjgd,bjtd->bjgt", qf, bk) / math.sqrt(dh)
-    b_valid = (cache["buf_pos"] >= 0) & (cache["buf_pos"] <= pos)
-    s_b = jnp.where(b_valid[None, None, None], s_b, -jnp.inf)
+    b_valid = (cache["buf_pos"] >= 0) & (cache["buf_pos"] <= pos[:, None])
+    s_b = jnp.where(b_valid[:, None, None], s_b, -jnp.inf)
 
     s = jnp.concatenate([s_sp, s_b], axis=-1)
     w = jax.nn.softmax(s, axis=-1)

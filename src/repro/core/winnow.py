@@ -45,13 +45,24 @@ def rotate_k(k: jnp.ndarray, p_qk: jnp.ndarray) -> jnp.ndarray:
 # Pruning / packing
 # ---------------------------------------------------------------------------
 
+def _live_mask(k_active: jnp.ndarray, k_max: int, out_ndim: int) -> jnp.ndarray:
+    """Broadcastable ``col < k_active`` mask.  ``k_active`` may be a scalar
+    (whole batch) or a leading-batch-shaped array ([B] for per-request k) —
+    its axes align with the *leading* axes of the packed [..., k_max] tensor."""
+    k_active = jnp.asarray(k_active)
+    live = jnp.arange(k_max) < k_active[..., None]
+    return live.reshape(k_active.shape
+                        + (1,) * (out_ndim - 1 - k_active.ndim) + (k_max,))
+
+
 def topk_pack(x: jnp.ndarray, k_max: int,
               k_active: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-vector magnitude top-k (paper Algorithm 1 lines 7-11).
 
     x: [..., dh] -> (vals [..., k_max] same dtype, idx [..., k_max] int8).
-    If ``k_active`` (traced scalar ok) is given, packed columns >= k_active
-    are zeroed — the runtime compression knob.
+    If ``k_active`` (traced scalar or per-sequence [B], leading-axis-aligned)
+    is given, packed columns >= k_active are zeroed — the runtime
+    compression knob.
 
     Implemented as a stable co-sort (values and indices ride along the
     |x| keys) rather than top_k + take_along_axis: GSPMD replicates batch
@@ -69,8 +80,7 @@ def topk_pack(x: jnp.ndarray, k_max: int,
                                 is_stable=True)
     vals, idx = vals[..., :k_max], idx[..., :k_max]
     if k_active is not None:
-        live = jnp.arange(k_max) < k_active
-        vals = jnp.where(live, vals, 0)
+        vals = jnp.where(_live_mask(k_active, k_max, vals.ndim), vals, 0)
     return vals, idx.astype(jnp.int8)
 
 
@@ -79,8 +89,7 @@ def truncate_pack(x: jnp.ndarray, k_max: int,
     """Keep leading k_max rotated dims (dense low-rank).  [..., dh] -> [..., k_max]."""
     vals = x[..., :k_max]
     if k_active is not None:
-        live = jnp.arange(k_max) < k_active
-        vals = jnp.where(live, vals, 0)
+        vals = jnp.where(_live_mask(k_active, k_max, vals.ndim), vals, 0)
     return vals
 
 

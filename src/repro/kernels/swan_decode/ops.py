@@ -11,7 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.hybrid_cache import sparse_len
+from repro.core.hybrid_cache import per_seq_pos, sparse_len
 from repro.kernels.swan_decode.swan_decode import swan_decode_pallas
 
 
@@ -22,6 +22,7 @@ def swan_decode_attention_kernel(q_hat, cache, swan, cfg, pos,
         raise NotImplementedError("kernel path covers the paper-faithful "
                                   "'topk' mode; truncate mode is a dense "
                                   "low-rank matmul (plain XLA is optimal)")
+    pos = per_seq_pos(pos, q_hat.shape[0])
     sp = sparse_len(swan, pos)
     ks = cache["k"].get("scale")
     vs = cache["v"].get("scale")
@@ -29,6 +30,6 @@ def swan_decode_attention_kernel(q_hat, cache, swan, cfg, pos,
         q_hat, cache["k"]["vals"], cache["k"]["idx"],
         cache["v"]["vals"], cache["v"]["idx"],
         cache["buf_k"], cache["buf_v"], cache["buf_pos"],
-        jnp.asarray(pos, jnp.int32), jnp.asarray(sp, jnp.int32),
+        pos, jnp.asarray(sp, jnp.int32),
         k_scale=ks, v_scale=vs,
         block_s=block_s, interpret=interpret)

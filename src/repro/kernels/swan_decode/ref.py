@@ -12,6 +12,8 @@ def swan_decode_reference(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
                           buf_pos, pos, sp_len, k_scale=None, v_scale=None):
     B, Kv, G, dh = q.shape
     S = k_vals.shape[2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    sp_len = jnp.broadcast_to(jnp.asarray(sp_len, jnp.int32), (B,))
 
     def dense(vals, idx, scale):
         v = vals.astype(jnp.float32)
@@ -25,13 +27,13 @@ def swan_decode_reference(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
     vd = dense(v_vals, v_idx, v_scale)
     qf = q.astype(jnp.float32)
     s_sp = jnp.einsum("bjgd,bjtd->bjgt", qf, kd) / math.sqrt(dh)
-    sp_ok = jnp.arange(S)[None, None, None, :] < sp_len
-    s_sp = jnp.where(sp_ok, s_sp, -jnp.inf)
+    sp_ok = jnp.arange(S)[None, :] < sp_len[:, None]            # [B, S]
+    s_sp = jnp.where(sp_ok[:, None, None, :], s_sp, -jnp.inf)
 
     s_b = jnp.einsum("bjgd,bjtd->bjgt", qf,
                      buf_k.astype(jnp.float32)) / math.sqrt(dh)
-    b_ok = (buf_pos >= 0) & (buf_pos <= pos)
-    s_b = jnp.where(b_ok[None, None, None, :], s_b, -jnp.inf)
+    b_ok = (buf_pos >= 0) & (buf_pos <= pos[:, None])           # [B, b]
+    s_b = jnp.where(b_ok[:, None, None, :], s_b, -jnp.inf)
 
     s = jnp.concatenate([s_sp, s_b], axis=-1)
     w = jax.nn.softmax(s, axis=-1)

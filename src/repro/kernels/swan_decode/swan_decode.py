@@ -54,8 +54,8 @@ def _swan_decode_kernel(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
     sb = pl.program_id(2)
     G = q_ref.shape[2]
     scale = 1.0 / math.sqrt(dh)
-    pos = meta_ref[0]
-    sp_len = meta_ref[1]
+    pos = meta_ref[0, 0]          # this sequence's decode position
+    sp_len = meta_ref[0, 1]       # this sequence's valid sparse length
 
     @pl.when(sb == 0)
     def _init():
@@ -97,7 +97,7 @@ def _swan_decode_kernel(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
     def _finalize():
         bk = bk_ref[0, 0].astype(jnp.float32)                  # [b, dh]
         bv = bv_ref[0, 0].astype(jnp.float32)
-        bpos = bp_ref[...]                                     # [b]
+        bpos = bp_ref[0]                                       # [b] (this seq)
         s_b = jax.lax.dot_general(q, bk, (((1,), (1,)), ((), ())),
                                   preferred_element_type=jnp.float32) * scale
         valid = (bpos >= 0) & (bpos <= pos)
@@ -116,7 +116,9 @@ def _swan_decode_kernel(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
 def swan_decode_pallas(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
                        buf_pos, pos, sp_len, k_scale=None, v_scale=None,
                        *, block_s: int = 256, interpret: bool = True):
-    """q [B,Kv,G,dh]; packed sparse [B,Kv,S,k]; buffer [B,Kv,b,dh].
+    """q [B,Kv,G,dh]; packed sparse [B,Kv,S,k]; buffer [B,Kv,b,dh];
+    buf_pos [B,b].  ``pos``/``sp_len`` are scalars or per-sequence [B]
+    (continuous batching: each sequence masks its own ring + sparse prefix).
 
     Returns o [B,Kv,G,dh].  ``interpret=True`` validates on CPU; on TPU set
     False for the compiled kernel.
@@ -126,19 +128,23 @@ def swan_decode_pallas(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
     b = buf_k.shape[2]
     bs = min(block_s, S)
     assert S % bs == 0, (S, bs)
+    assert buf_pos.shape == (B, b), buf_pos.shape
     n_sblocks = S // bs
     quantized = k_scale is not None
     if not quantized:   # dummy scale operands keep one kernel signature
         k_scale = jnp.ones((B, Kv, S), jnp.float32)
         v_scale = jnp.ones((B, Kv, S), jnp.float32)
-    meta = jnp.asarray([pos, sp_len], jnp.int32)
+    meta = jnp.stack([
+        jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
+        jnp.broadcast_to(jnp.asarray(sp_len, jnp.int32), (B,)),
+    ], axis=1)                                                 # [B, 2]
 
     kernel = functools.partial(
         _swan_decode_kernel, bs=bs, dh=dh, k_max=k_max,
         n_sblocks=n_sblocks, quantized=quantized)
     grid = (B, Kv, n_sblocks)
     specs = [
-        pl.BlockSpec((2,), lambda b_, j, s: (0,)),                     # meta
+        pl.BlockSpec((1, 2), lambda b_, j, s: (b_, 0)),                # meta
         pl.BlockSpec((1, 1, G, dh), lambda b_, j, s: (b_, j, 0, 0)),   # q
         pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),  # k_vals
         pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),  # k_idx
@@ -148,7 +154,7 @@ def swan_decode_pallas(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
         pl.BlockSpec((1, 1, bs), lambda b_, j, s: (b_, j, s)),         # v_scale
         pl.BlockSpec((1, 1, b, dh), lambda b_, j, s: (b_, j, 0, 0)),   # buf_k
         pl.BlockSpec((1, 1, b, dh), lambda b_, j, s: (b_, j, 0, 0)),   # buf_v
-        pl.BlockSpec((b,), lambda b_, j, s: (0,)),                     # buf_pos
+        pl.BlockSpec((1, b), lambda b_, j, s: (b_, 0)),                # buf_pos
     ]
     return pl.pallas_call(
         kernel,

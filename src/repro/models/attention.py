@@ -223,14 +223,29 @@ def dense_cache_insert(cache: Params, k: jnp.ndarray, v: jnp.ndarray,
     }
 
 
+def dense_cache_insert_decode(cache: Params, k: jnp.ndarray, v: jnp.ndarray,
+                              pos_b: jnp.ndarray) -> Params:
+    """Insert one token per sequence ([B, 1, Kv, dh]) at per-sequence
+    positions ``pos_b`` [B] (continuous batching: sequences decode at
+    independent offsets)."""
+    bi = jnp.arange(pos_b.shape[0])
+    kt = k.transpose(0, 2, 1, 3).astype(cache["k"].dtype)   # [B,Kv,1,dh]
+    vt = v.transpose(0, 2, 1, 3).astype(cache["v"].dtype)
+    return {
+        "k": cache["k"].at[bi, :, pos_b].set(kt[:, :, 0]),
+        "v": cache["v"].at[bi, :, pos_b].set(vt[:, :, 0]),
+    }
+
+
 def attn_decode_dense(p: Params, cfg, x: jnp.ndarray, pos,
                       cache: Params) -> Tuple[jnp.ndarray, Params]:
-    """One-token decode with dense cache.  x: [B, 1, d]; pos: scalar int."""
+    """One-token decode with dense cache.  x: [B, 1, d]; pos: scalar or [B]."""
     B = x.shape[0]
     H, Kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]                                 # [B, 1]
     q, k, v = project_qkv(p, cfg, x, positions)
-    cache = dense_cache_insert(cache, k, v, pos)
+    cache = dense_cache_insert_decode(cache, k, v, pos)
     S = cache["k"].shape[2]
     kc = cache["k"]                                   # [B,Kv,S,dh] storage dtype
     vc = cache["v"]
@@ -239,7 +254,7 @@ def attn_decode_dense(p: Params, cfg, x: jnp.ndarray, pos,
     # cache to f32 would double decode HBM traffic; dots accumulate f32.
     scores = jnp.einsum("bngd,bnsd->bngs", qh.astype(kc.dtype), kc,
                         preferred_element_type=jnp.float32) / math.sqrt(dh)
-    valid = jnp.arange(S)[None, None, None, :] <= pos
+    valid = jnp.arange(S)[None, None, None, :] <= pos[:, None, None, None]
     scores = jnp.where(valid, scores, jnp.finfo(jnp.float32).min)
     w = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bngs,bnsd->bngd", w.astype(vc.dtype), vc,

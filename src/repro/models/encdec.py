@@ -272,10 +272,11 @@ def prefill(p: Params, cfg, tokens: jnp.ndarray, state: Params,
 def decode_step(p: Params, cfg, token: jnp.ndarray, pos, state: Params,
                 swan=None, projections=None) -> Tuple[jnp.ndarray, Params]:
     B = token.shape[0]
+    pos = hc.per_seq_pos(pos, B)
     x = jnp.take(p["dec"]["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
     pe = jnp.take(p["dec"]["pos_embed"],
                   jnp.minimum(pos, p["dec"]["pos_embed"].shape[0] - 1), axis=0)
-    x = x + pe[None, None].astype(x.dtype)
+    x = x + pe[:, None].astype(x.dtype)
     use_swan = swan is not None and swan.enabled
     pq = (projections["p_qk"] if use_swan
           else jnp.zeros((cfg.n_layers, 1), jnp.float32))

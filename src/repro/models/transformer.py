@@ -233,7 +233,8 @@ def _swan_layer_decode(lp: Params, p_qk_l: jnp.ndarray, cache_l: Params,
                        k_act=None) -> Tuple[jnp.ndarray, Params]:
     B = x.shape[0]
     Kv, G, dh = cfg.n_kv_heads, cfg.q_group, cfg.d_head
-    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+    pos = hc.per_seq_pos(pos, B)                                 # [B]
+    positions = pos[:, None]                                     # [B, 1]
     q, k, v = attn.project_qkv(lp["attn"], cfg, x, positions)   # v̂ already rotated (absorbed)
     q_hat = rotate_q(q, p_qk_l, Kv)[:, 0]                        # [B,Kv,G,dh]
     k_hat = rotate_k(k, p_qk_l)                                  # [B,1→S dim,Kv,dh]
@@ -290,9 +291,13 @@ def _layer_ffn(lp: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
 
 def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
                swan=None, projections: Optional[Params] = None,
-               prefix_embeds: Optional[jnp.ndarray] = None
-               ) -> Tuple[jnp.ndarray, Params]:
-    """Process the prompt; fill caches.  Returns (last-token logits, caches)."""
+               prefix_embeds: Optional[jnp.ndarray] = None,
+               k_active=None) -> Tuple[jnp.ndarray, Params]:
+    """Process the prompt; fill caches.  Returns (last-token logits, caches).
+
+    ``k_active``: optional traced scalar overriding the SWAN runtime
+    retention for this whole prompt (per-request k — the serve engine
+    prefills one request at a time, so a scalar suffices here)."""
     x, positions = _embed_inputs(p, cfg, tokens, prefix_embeds)
     use_swan = swan is not None and swan.enabled
 
@@ -315,6 +320,8 @@ def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
         return x, cache_l
 
     pq, k_arr = _swan_scan_xs(cfg, swan, projections, use_swan)
+    if use_swan and k_active is not None:
+        k_arr = jnp.minimum(k_arr, jnp.asarray(k_active, jnp.int32))
     x, caches = jax.lax.scan(body, x, (p["layers"], caches, pq, k_arr))
     x = apply_norm(p["ln_f"], cfg, x[:, -1:])
     head = p["embed"].T if cfg.tie_embeddings else p["head"]
@@ -322,22 +329,31 @@ def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
 
 
 def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
-                   swan=None, projections: Optional[Params] = None
-                   ) -> Tuple[jnp.ndarray, Params]:
-    """token [B] -> (logits [B, V], updated caches).  ``pos``: scalar int32."""
+                   swan=None, projections: Optional[Params] = None,
+                   k_active=None) -> Tuple[jnp.ndarray, Params]:
+    """token [B] -> (logits [B, V], updated caches).
+
+    ``pos``: scalar int32 (lockstep batch) or per-sequence [B] (continuous
+    batching).  ``k_active``: optional traced scalar or per-sequence [B]
+    SWAN retention override — per-request runtime-tunable compression; a
+    traced operand, so mixed-k batches share one compiled executable."""
+    B = token.shape[0]
+    pos = hc.per_seq_pos(pos, B)
     x = jnp.take(p["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
     if cfg.pos == "learned":
         pe = jnp.take(p["pos_embed"],
                       jnp.minimum(pos, p["pos_embed"].shape[0] - 1), axis=0)
-        x = x + pe[None, None].astype(x.dtype)
+        x = x + pe[:, None].astype(x.dtype)
     use_swan = swan is not None and swan.enabled
+    k_req = None if k_active is None else jnp.asarray(k_active, jnp.int32)
 
     def body(x, xs):
         lp, cache_l, p_qk_l, k_l = xs
         h = apply_norm(lp["ln1"], cfg, x)
         if use_swan:
+            k_eff = k_l if k_req is None else jnp.minimum(k_l, k_req)
             h, cache_l = _swan_layer_decode(lp, p_qk_l, cache_l, cfg, swan,
-                                            h, pos, k_act=k_l)
+                                            h, pos, k_act=k_eff)
         else:
             h, cache_l = attn.attn_decode_dense(lp["attn"], cfg, h, pos, cache_l)
         x = x + h

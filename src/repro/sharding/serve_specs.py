@@ -47,8 +47,8 @@ def _leaf_spec(name: str, ndim: int, mesh: Mesh) -> P:
         return P(None, dp, None, "model", None)
     if leaf in ("buf_k", "buf_v"):       # [L,B,Kv,b,dh] ring buffer
         return P(None, dp, None, None, None)
-    if leaf == "buf_pos":                # [L,b]
-        return P(None, None)
+    if leaf == "buf_pos":                # [L,B,b]
+        return P(None, dp, None)
     if leaf == "h":                      # mamba state [G,B,d_in,N]
         return P(None, dp, "model", None)
     if leaf == "conv":                   # mamba conv tail [G,B,c,d_in]

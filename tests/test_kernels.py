@@ -43,9 +43,12 @@ def test_swan_decode_kernel(dtype, B, Kv, G, dh, S, k, b, bs):
     vi = _unique_idx(rng, B, Kv, S, k, dh)
     bk = _rand(rng, (B, Kv, b, dh), dtype)
     bv = _rand(rng, (B, Kv, b, dh), dtype)
-    bpos = jnp.asarray(
-        np.concatenate([np.arange(40, 40 + b - 2), [-1, -1]]), jnp.int32)
-    pos, sp = 45, S - 10
+    # per-sequence ring state: stagger positions across the batch
+    bpos = jnp.asarray(np.stack(
+        [np.concatenate([np.arange(40 - i, 40 - i + b - 2), [-1, -1]])
+         for i in range(B)]), jnp.int32)
+    pos = jnp.asarray([45 - i for i in range(B)], jnp.int32)
+    sp = jnp.asarray([S - 10 - i for i in range(B)], jnp.int32)
     o_k = swan_decode_pallas(q, kv, ki, vv, vi, bk, bv, bpos, pos, sp,
                              block_s=bs)
     o_r = swan_decode_reference(q, kv, ki, vv, vi, bk, bv, bpos, pos, sp)
@@ -65,7 +68,8 @@ def test_swan_decode_kernel_quantized():
     q = _rand(rng, (B, Kv, G, dh), jnp.float32)
     bk = _rand(rng, (B, Kv, b, dh), jnp.float32)
     bv = _rand(rng, (B, Kv, b, dh), jnp.float32)
-    bpos = jnp.asarray(np.arange(20, 20 + b), jnp.int32)
+    bpos = jnp.broadcast_to(jnp.asarray(np.arange(20, 20 + b), jnp.int32),
+                            (B, b))
     o_k = swan_decode_pallas(q, kv8, ki, vv8, vi, bk, bv, bpos, 27, 18,
                              k_scale=ks, v_scale=vs, block_s=16)
     o_r = swan_decode_reference(q, kv8, ki, vv8, vi, bk, bv, bpos, 27, 18,

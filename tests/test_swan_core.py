@@ -8,6 +8,7 @@ import pytest
 from repro.configs import SwanConfig, get_smoke_config
 from repro.core import hybrid_cache as hc
 from repro.core import projections as proj
+from repro.core import swan_attention as swa
 from repro.core.winnow import (dequantize_int8, quantize_int8, rotate_k,
                                rotate_q, topk_pack, truncate_pack,
                                unpack_dense)
@@ -143,8 +144,8 @@ def test_prefill_then_decode_equals_all_prefill():
                                atol=1e-6)
     np.testing.assert_allclose(np.asarray(c1["k"]["idx"][:, :, :n_sp]),
                                np.asarray(c2["k"]["idx"][:, :, :n_sp]))
-    order1 = np.argsort(np.asarray(c1["buf_pos"]))
-    order2 = np.argsort(np.asarray(c2["buf_pos"]))
+    order1 = np.argsort(np.asarray(c1["buf_pos"][0]))
+    order2 = np.argsort(np.asarray(c2["buf_pos"][0]))
     np.testing.assert_allclose(
         np.asarray(c1["buf_k"])[:, :, order1],
         np.asarray(c2["buf_k"])[:, :, order2], atol=1e-6)
@@ -157,9 +158,61 @@ def test_ring_buffer_eviction_order():
     for pos in range(10):
         k1 = jnp.full((1, 1, cfg.n_kv_heads, cfg.d_head), float(pos + 1))
         cache = hc.swan_cache_insert_decode(cache, swan, cfg, k1, k1, pos)
-    bp = np.asarray(cache["buf_pos"])
+    bp = np.asarray(cache["buf_pos"][0])
     assert sorted(bp.tolist()) == [6, 7, 8, 9]       # last b=4 positions
     assert int(hc.sparse_len(swan, 9)) == 6           # 0..5 winnowed
+
+
+def test_per_sequence_ring_positions():
+    """Regression: two sequences decoding at different positions must track
+    independent ring state ([B, b] buf_pos) and mask validity per sequence.
+    Before the fix buf_pos was a single [b] vector shared across the batch,
+    so the second sequence's eviction clock corrupted the first's."""
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32")
+    swan = SwanConfig(k_max=cfg.d_head, buffer=4, mode="topk")
+    B, S = 2, 32
+    key = jax.random.PRNGKey(0)
+    kh = jax.random.normal(key, (B, 1, cfg.n_kv_heads, cfg.d_head))
+    vh = jax.random.normal(jax.random.fold_in(key, 1),
+                           (B, 1, cfg.n_kv_heads, cfg.d_head))
+
+    # seq 0 decodes positions 0..9 (ring fills then wraps once), seq 1 is 7
+    # tokens ahead at 7..16 (ring wrapped repeatedly) — one batched insert
+    # call per step serves both
+    offset = [0, 7]
+    cache = hc.init_swan_cache(cfg, swan, B, S)
+    single = [hc.init_swan_cache(cfg, swan, 1, S) for _ in range(B)]
+    for step in range(10):
+        pos_b = jnp.asarray([step + offset[0], step + offset[1]], jnp.int32)
+        k_step = kh + float(step)
+        v_step = vh - float(step)
+        cache = hc.swan_cache_insert_decode(cache, swan, cfg, k_step, v_step,
+                                            pos_b)
+        for i in range(B):
+            single[i] = hc.swan_cache_insert_decode(
+                single[i], swan, cfg, k_step[i:i + 1], v_step[i:i + 1],
+                step + offset[i])
+    pos_each = [9 + offset[0], 9 + offset[1]]
+
+    assert cache["buf_pos"].shape == (B, swan.buffer)
+    for i in range(B):
+        np.testing.assert_array_equal(np.asarray(cache["buf_pos"][i]),
+                                      np.asarray(single[i]["buf_pos"][0]))
+
+    # batched attention at mixed positions == each sequence attended alone
+    q = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, cfg.n_kv_heads, cfg.q_group, cfg.d_head))
+    pos_b = jnp.asarray(pos_each, jnp.int32)
+    o_batch = swa.swan_decode_attention(q, cache, swan, cfg, pos_b)
+    for i in range(B):
+        o_one = swa.swan_decode_attention(q[i:i + 1], single[i], swan, cfg,
+                                          pos_each[i])
+        np.testing.assert_allclose(np.asarray(o_batch[i:i + 1]),
+                                   np.asarray(o_one), atol=1e-6)
+        ref = swa.swan_decode_attention_reference(q[i:i + 1], single[i],
+                                                  swan, cfg, pos_each[i])
+        np.testing.assert_allclose(np.asarray(o_batch[i:i + 1]),
+                                   np.asarray(ref), atol=1e-5)
 
 
 def test_cache_bytes_matches_eq1():
