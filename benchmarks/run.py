@@ -13,8 +13,9 @@ import traceback
 from benchmarks import (bench_adaptive_k, bench_breakeven,
                         bench_buffer_rescue, bench_fig2a_compression,
                         bench_kernels, bench_longcontext_error,
-                        bench_memory_footprint, bench_table1_retention,
-                        bench_table2_kv_split, bench_table3_projection)
+                        bench_memory_footprint, bench_serve_engine,
+                        bench_table1_retention, bench_table2_kv_split,
+                        bench_table3_projection)
 
 MODULES = [
     ("fig2a_compression", bench_fig2a_compression),
@@ -26,6 +27,7 @@ MODULES = [
     ("fig2b_buffer_rescue", bench_buffer_rescue),
     ("fig4_longcontext", bench_longcontext_error),
     ("adaptive_k", bench_adaptive_k),          # beyond-paper extension
+    ("serve_engine", bench_serve_engine),      # continuous batching
     ("kernels", bench_kernels),
 ]
 

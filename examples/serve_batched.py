@@ -1,13 +1,18 @@
-"""End-to-end serving driver: batched requests against a small model with a
-SWAN-compressed KV cache, with throughput + memory reporting.
+"""End-to-end serving driver: a continuous-batching engine over a small
+model with dense vs SWAN-compressed KV caches.
 
-    PYTHONPATH=src python examples/serve_batched.py [--swan/--no-swan]
-                                                    [--k 16] [--buffer 16]
-                                                    [--quantize] [--batch 8]
+    PYTHONPATH=src python examples/serve_batched.py [--no-swan] [--k 8]
+                                                    [--buffer 16] [--quantize]
+                                                    [--slots 4] [--requests 8]
 
-This is the paper-kind end-to-end example (SWAN is an inference technique):
-prefill a batch of prompts, decode autoregressively, compare dense vs
-compressed serving on the same prompts.
+New API (this used to be a lockstep ``ServeSession`` demo): requests with
+*mixed prompt lengths* are submitted to ``repro.runtime.serve_engine.
+ServeEngine``, which admits them into cache slots as capacity frees up and
+decodes all active sequences in one jitted step with per-sequence
+positions.  The SWAN run additionally cycles *per-request* compression
+levels k — the paper's runtime-tunable knob — through a single compiled
+decode executable.  Reported: wall-clock throughput, scheduler steps, and
+physical cache bytes (paper Eq. 1) for dense vs SWAN on the same requests.
 """
 import argparse
 import sys
@@ -16,12 +21,12 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SwanConfig, get_smoke_config
 from repro.launch.io import make_batch
 from repro.models import get_model
-from repro.runtime.serve_loop import ServeSession, calibrate_swan
+from repro.runtime.serve_engine import Request, ServeEngine
+from repro.runtime.serve_loop import calibrate_swan
 
 
 def main():
@@ -30,7 +35,8 @@ def main():
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--buffer", type=int, default=16)
     ap.add_argument("--quantize", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=48)
     ap.add_argument("--max-seq", type=int, default=256)
@@ -41,40 +47,44 @@ def main():
         d_ff=256, dtype="float32", param_dtype="float32")
     api = get_model(cfg)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
-    prompts = make_batch(cfg, args.batch, args.prompt_len, seed=11)
 
-    def bench(sess, tag):
+    def requests(k_cycle):
+        out = []
+        for i in range(args.requests):
+            plen = max(4, args.prompt_len - 5 * (i % 4))   # mixed lengths
+            toks = make_batch(cfg, 1, plen, seed=100 + i)["tokens"][0]
+            out.append(Request(uid=f"req{i}", tokens=[int(t) for t in toks],
+                               max_new_tokens=args.gen_tokens,
+                               k=k_cycle[i % len(k_cycle)]))
+        return out
+
+    def bench(engine, reqs, tag):
         t0 = time.perf_counter()
-        sess.prefill(prompts)
-        t_prefill = time.perf_counter() - t0
-        tok = jnp.zeros((args.batch,), jnp.int32)
-        t0 = time.perf_counter()
-        for _ in range(args.gen_tokens):
-            logits = sess.decode(tok)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        jax.block_until_ready(logits)
-        t_decode = time.perf_counter() - t0
-        rep = sess.cache_report()
-        tput = args.batch * args.gen_tokens / t_decode
-        print(f"[{tag:>6}] prefill {t_prefill * 1e3:7.1f} ms | "
-              f"decode {t_decode * 1e3:7.1f} ms ({tput:7.1f} tok/s) | "
-              f"cache {rep['bytes'] / 1e6:6.2f} MB"
+        comps = engine.run(reqs)
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(c.tokens) for c in comps)
+        rep = engine.cache_report()
+        print(f"[{tag:>6}] {len(comps)} reqs, {n_tok} tokens in "
+              f"{dt * 1e3:7.1f} ms ({n_tok / dt:7.1f} tok/s, "
+              f"{engine.step_count} steps) | cache {rep['bytes'] / 1e6:6.2f} MB"
               + (f" ({rep['saving']:.0%} saved)" if "saving" in rep else ""))
 
-    dense = ServeSession(cfg, params, max_seq=args.max_seq, batch=args.batch)
-    bench(dense, "dense")
+    dense = ServeEngine(cfg, params, max_seq=args.max_seq, n_slots=args.slots)
+    bench(dense, requests([None]), "dense")
 
     if not args.no_swan:
         projections = calibrate_swan(api, cfg, params,
                                      make_batch(cfg, 4, 64, seed=3))
         absorbed = api.absorb(params, cfg, projections)
-        swan = SwanConfig(k_max=args.k or cfg.d_head // 2,
-                          buffer=args.buffer, mode="topk",
+        k_max = args.k or cfg.d_head // 2
+        swan = SwanConfig(k_max=k_max, buffer=args.buffer, mode="topk",
                           quantize=args.quantize)
-        sess = ServeSession(cfg, absorbed, swan=swan,
-                            projections=projections,
-                            max_seq=args.max_seq, batch=args.batch)
-        bench(sess, "swan")
+        eng = ServeEngine(cfg, absorbed, swan=swan, projections=projections,
+                          max_seq=args.max_seq, n_slots=args.slots)
+        # per-request runtime-tunable compression: mix full and half k
+        bench(eng, requests([k_max, max(k_max // 2, 1)]), "swan")
+        print(f"        decode executables for the mixed-k batch: "
+              f"{eng.decode_cache_size}")
 
 
 if __name__ == "__main__":

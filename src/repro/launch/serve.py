@@ -1,12 +1,21 @@
 """Serving launcher: calibrate SWAN on a checkpoint (or fresh weights) and
 run batched generation.
 
+Lockstep batch (one shared position, the paper's benchmark setting):
+
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
         --swan --k 8 --buffer 16 --tokens 32
+
+Continuous batching (request queue + slot scheduler, mixed prompt lengths
+and per-request SWAN k — see repro.runtime.serve_engine):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --swan --k 8 --buffer 16 --tokens 32 --engine --requests 8 --mixed-k
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +24,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import SwanConfig, get_config, get_smoke_config
 from repro.launch.io import make_batch
 from repro.models import get_model, swan_applicable
+from repro.runtime.serve_engine import Request, ServeEngine
 from repro.runtime.serve_loop import ServeSession, calibrate_swan
 
 
@@ -33,6 +43,12 @@ def main():
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=512)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous batching instead of lockstep")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="engine: number of requests (default: --batch * 2)")
+    ap.add_argument("--mixed-k", action="store_true",
+                    help="engine: cycle per-request SWAN k overrides")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -60,6 +76,10 @@ def main():
         print(f"SWAN: k_max={swan.k_max}/{cfg.d_head} buffer={b} "
               f"mode={swan.mode} int8={swan.quantize}")
 
+    if args.engine:
+        _run_engine(cfg, params, swan, projections, args)
+        return
+
     sess = ServeSession(cfg, params, swan=swan, projections=projections,
                         max_seq=args.max_seq, batch=args.batch)
     prompt = make_batch(cfg, args.batch, args.prompt_len, seed=11)
@@ -68,6 +88,36 @@ def main():
         print(f"seq {i}: {out[i].tolist()}")
     rep = sess.cache_report()
     extra = f" ({rep['saving']:.0%} vs dense)" if "saving" in rep else ""
+    print(f"cache [{rep['mode']}]: {rep['bytes'] / 1e6:.2f} MB{extra}")
+
+
+def _run_engine(cfg, params, swan, projections, args):
+    eng = ServeEngine(cfg, params, swan=swan, projections=projections,
+                      max_seq=args.max_seq, n_slots=args.batch)
+    n_req = args.requests or args.batch * 2
+    k_cycle = ([None] if (swan is None or not args.mixed_k)
+               else [swan.k_max, max(swan.k_max // 2, 1),
+                     max(swan.k_max // 4, 1)])
+    reqs = []
+    for i in range(n_req):
+        plen = max(4, args.prompt_len - 3 * (i % 4))     # mixed prompt lengths
+        toks = make_batch(cfg, 1, plen, seed=100 + i)["tokens"][0]
+        reqs.append(Request(
+            uid=f"req{i}", tokens=[int(t) for t in toks],
+            max_new_tokens=args.tokens, temperature=args.temperature,
+            seed=i, k=k_cycle[i % len(k_cycle)]))
+    t0 = time.perf_counter()
+    comps = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(c.tokens) for c in comps)
+    for c in comps[:2]:
+        print(f"{c.uid} (prompt {c.prompt_len}, k={c.k}, "
+              f"steps {c.admitted_step}->{c.finished_step}): {c.tokens}")
+    rep = eng.cache_report()
+    extra = f" ({rep['saving']:.0%} vs dense)" if "saving" in rep else ""
+    print(f"engine: {len(comps)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s, {eng.step_count} steps, "
+          f"decode executables: {eng.decode_cache_size})")
     print(f"cache [{rep['mode']}]: {rep['bytes'] / 1e6:.2f} MB{extra}")
 
 

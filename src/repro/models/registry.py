@@ -60,9 +60,9 @@ def _tfm_forward(p, cfg, batch):
     return tfm.lm_forward(p, cfg, batch["tokens"], batch.get("prefix_embeds"))
 
 
-def _tfm_prefill(p, cfg, batch, state, swan=None, proj=None):
+def _tfm_prefill(p, cfg, batch, state, swan=None, proj=None, k_active=None):
     return tfm.lm_prefill(p, cfg, batch["tokens"], state, swan, proj,
-                          batch.get("prefix_embeds"))
+                          batch.get("prefix_embeds"), k_active=k_active)
 
 
 def _jamba_forward(p, cfg, batch):

@@ -1,0 +1,283 @@
+"""Continuous-batching serve engine: request queue + slot scheduler over
+per-sequence hybrid caches.
+
+The lockstep ``ServeSession`` (one scalar ``pos`` for the whole batch)
+wastes slots the moment sequences differ in length: everyone waits for the
+longest prompt and the longest generation.  This engine admits and retires
+sequences independently:
+
+  * a FIFO request queue feeds ``n_slots`` cache slots;
+  * each admission prefers the lowest free slot: the request's prompt is
+    prefilled at batch=1 into a fresh single-slot state which is then
+    written into the batched state (``dynamic_update_slice`` on axis 1 —
+    every serve-state layout stacks layers in front of batch);
+  * one jitted decode executable advances ALL active slots per engine step
+    with per-sequence positions ``pos [B]`` (free slots idle at pos = -1;
+    their lanes compute masked garbage that is never read);
+  * finished sequences free their slot immediately — the next queued
+    request backfills it on the same engine step.
+
+Per-request SWAN ``k`` (the paper's runtime-tunable compression) rides
+along as a traced ``[B]`` operand: a batch can mix compression levels and
+the decode step still compiles exactly once (see
+``decode_cache_size`` — asserted by tests/test_serve_engine.py).
+
+Prefill compiles once per distinct prompt length (XLA static shapes).
+Production would bucket prompt lengths; left open in ROADMAP.md.
+"""
+from __future__ import annotations
+
+import inspect
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model, swan_applicable
+from repro.runtime.serve_loop import serve_cache_report
+
+Params = Dict[str, Any]
+
+
+@dataclass
+class Request:
+    """One generation request.
+
+    ``k``: optional per-request SWAN retention override (<= swan.k_max) —
+    the runtime compression knob, tunable per request without recompiling.
+    ``arrival_step``: engine step at which the request becomes visible
+    (deterministic trace replay; 0 = already waiting).
+    """
+    uid: Any
+    tokens: Sequence[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    seed: int = 0
+    eos: Optional[int] = None
+    k: Optional[int] = None
+    arrival_step: int = 0
+
+
+@dataclass
+class Completion:
+    uid: Any
+    tokens: List[int]
+    prompt_len: int
+    k: Optional[int]
+    admitted_step: int
+    finished_step: int
+
+
+@dataclass
+class _Slot:
+    req: Request
+    generated: List[int] = field(default_factory=list)
+    admitted_step: int = 0
+
+
+class ServeEngine:
+    """Continuous-batching generation over a slot-based batched cache."""
+
+    def __init__(self, cfg, params, swan=None, projections=None,
+                 max_seq: int = 4096, n_slots: int = 4, jit: bool = True):
+        self.cfg = cfg
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "encoder-decoder serving needs per-request encoder frames; "
+                "use the lockstep ServeSession for whisper-style models")
+        self.api = get_model(cfg)
+        self.swan = swan if (swan and swan.enabled and swan_applicable(cfg)) else None
+        self.projections = projections
+        self.max_seq = max_seq
+        self.n_slots = n_slots
+        if self.swan is not None:
+            self.swan.validate(cfg.d_head)
+            if projections is None:
+                raise ValueError("SWAN enabled but no projections given — "
+                                 "run calibrate_swan first")
+        self.params = params
+        self.state = self.api.init_serve_state(cfg, self.swan, n_slots, max_seq)
+        sw, pj = self.swan, self.projections
+        # per-request k needs the family to thread k_active through
+        # prefill/decode (transformer families: dense/moe/vlm; jamba/ssm
+        # serve with their fixed config-level k)
+        self._k_threading = (
+            self.swan is not None
+            and "k_active" in inspect.signature(self.api.prefill).parameters
+            and "k_active" in inspect.signature(self.api.decode_step).parameters)
+        k_fill = 0 if self.swan is None else self.swan.k_max
+
+        if self._k_threading:
+            def prefill_fn(p, batch_in, state, k_act):
+                return self.api.prefill(p, cfg, batch_in, state, sw, pj,
+                                        k_active=k_act)
+
+            def decode_fn(p, token, pos, k_act, state):
+                return self.api.decode_step(p, cfg, token, pos, state, sw, pj,
+                                            k_active=k_act)
+        else:
+            def prefill_fn(p, batch_in, state, k_act):
+                return self.api.prefill(p, cfg, batch_in, state, sw, pj)
+
+            def decode_fn(p, token, pos, k_act, state):
+                return self.api.decode_step(p, cfg, token, pos, state, sw, pj)
+
+        def insert_fn(big, one, slot):
+            return jax.tree_util.tree_map(
+                lambda b, o: jax.lax.dynamic_update_slice_in_dim(
+                    b, o.astype(b.dtype), slot, axis=1), big, one)
+
+        if jit:
+            self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
+            self._decode = jax.jit(decode_fn, donate_argnums=(4,))
+            self._insert = jax.jit(insert_fn, donate_argnums=(0,))
+        else:
+            self._prefill, self._decode, self._insert = \
+                prefill_fn, decode_fn, insert_fn
+
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self.slot_pos = np.full((n_slots,), -1, np.int32)   # next decode position
+        self.slot_k = np.full((n_slots,), k_fill, np.int32)
+        self.next_tok = np.zeros((n_slots,), np.int32)
+        self.step_count = 0
+        self.completions: List[Completion] = []
+
+    # ------------------------------------------------------------------
+    # Scheduling
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if len(req.tokens) + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.uid}: {len(req.tokens)}+{req.max_new_tokens} "
+                f"tokens exceed max_seq={self.max_seq}")
+        if req.k is not None:
+            if self.swan is None:
+                raise ValueError(f"request {req.uid}: per-request k needs SWAN")
+            if not self._k_threading:
+                raise ValueError(f"{self.cfg.family!r} family does not "
+                                 "support per-request k overrides")
+            if req.k > self.swan.k_max:
+                raise ValueError(f"request {req.uid}: k={req.k} > allocated "
+                                 f"k_max={self.swan.k_max}")
+        self.queue.append(req)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def pending(self) -> int:
+        return sum(r.arrival_step <= self.step_count for r in self.queue)
+
+    @property
+    def done(self) -> bool:
+        return not self.queue and self.n_active == 0
+
+    @property
+    def decode_cache_size(self) -> int:
+        """Compiled decode executables (1 == mixed-k batches share one)."""
+        size = getattr(self._decode, "_cache_size", None)
+        return size() if callable(size) else -1
+
+    def _sample(self, logits, req: Request, n_prev: int) -> int:
+        if req.temperature <= 0.0:
+            return int(np.argmax(np.asarray(logits)))
+        key = jax.random.fold_in(jax.random.PRNGKey(req.seed), n_prev)
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits) / req.temperature))
+
+    def _admit(self, req: Request, slot: int) -> None:
+        state1 = self.api.init_serve_state(self.cfg, self.swan, 1, self.max_seq)
+        tokens = jnp.asarray(np.asarray(req.tokens, np.int32))[None]
+        k_req = self.swan.k_max if (self.swan and req.k is None) else (req.k or 0)
+        logits, state1 = self._prefill(self.params, {"tokens": tokens}, state1,
+                                       jnp.asarray(k_req, jnp.int32))
+        self.state = self._insert(self.state, state1,
+                                  jnp.asarray(slot, jnp.int32))
+        s = _Slot(req=req, admitted_step=self.step_count)
+        first = self._sample(logits[0, -1], req, 0)
+        s.generated.append(first)
+        self.slots[slot] = s
+        self.slot_pos[slot] = len(req.tokens)
+        self.slot_k[slot] = k_req
+        self.next_tok[slot] = first
+        self._maybe_retire(slot)
+
+    def _maybe_retire(self, slot: int) -> None:
+        s = self.slots[slot]
+        done = (len(s.generated) >= s.req.max_new_tokens
+                or (s.req.eos is not None and s.generated[-1] == s.req.eos)
+                or self.slot_pos[slot] >= self.max_seq)
+        if not done:
+            return
+        self.completions.append(Completion(
+            uid=s.req.uid, tokens=list(s.generated),
+            prompt_len=len(s.req.tokens), k=s.req.k,
+            admitted_step=s.admitted_step, finished_step=self.step_count))
+        self.slots[slot] = None
+        self.slot_pos[slot] = -1
+        self.slot_k[slot] = self.swan.k_max if self.swan else 0
+        self.next_tok[slot] = 0
+
+    def _admit_pending(self) -> None:
+        while self.n_active < self.n_slots:
+            nxt = next((r for r in self.queue
+                        if r.arrival_step <= self.step_count), None)
+            if nxt is None:
+                return
+            self.queue.remove(nxt)
+            slot = self.slots.index(None)
+            self._admit(nxt, slot)
+
+    # ------------------------------------------------------------------
+    # Engine step
+    # ------------------------------------------------------------------
+
+    def step(self) -> int:
+        """One scheduler iteration: admit → batched decode → retire.
+        Returns the number of sequences that finished this step."""
+        n_done0 = len(self.completions)
+        self._admit_pending()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if active:
+            logits, self.state = self._decode(
+                self.params, jnp.asarray(self.next_tok),
+                jnp.asarray(self.slot_pos), jnp.asarray(self.slot_k),
+                self.state)
+            logits = np.asarray(logits)      # one host transfer per step
+            for i in active:
+                self.slot_pos[i] += 1
+                s = self.slots[i]
+                tok = self._sample(logits[i], s.req, len(s.generated))
+                s.generated.append(tok)
+                self.next_tok[i] = tok
+                self._maybe_retire(i)
+        self.step_count += 1
+        return len(self.completions) - n_done0
+
+    def run(self, requests: Optional[Sequence[Request]] = None,
+            max_steps: Optional[int] = None) -> List[Completion]:
+        """Submit ``requests`` and step until everything drains (or
+        ``max_steps``).  Returns completions in finish order."""
+        for r in requests or ():
+            self.submit(r)
+        n0 = len(self.completions)
+        steps = 0
+        while not self.done and (max_steps is None or steps < max_steps):
+            self.step()
+            steps += 1
+        return self.completions[n0:]
+
+    # ------------------------------------------------------------------
+    # Accounting
+    # ------------------------------------------------------------------
+
+    def cache_report(self) -> Dict[str, Any]:
+        """Physical cache accounting (paper Eq. 1 across all slots)."""
+        return serve_cache_report(self.cfg, self.swan, self.n_slots,
+                                  self.max_seq)

@@ -28,6 +28,17 @@ def calibrate_swan(api, cfg, params, calib_batch) -> Params:
                                         cfg.n_kv_heads, cfg.d_head)
 
 
+def serve_cache_report(cfg, swan, batch: int, max_seq: int) -> Dict[str, Any]:
+    """Physical cache accounting (paper Eq. 1) shared by ServeSession and
+    ServeEngine.  ``swan`` None -> dense baseline."""
+    if swan is None:
+        fp = model_cache_footprint(cfg, _DenseLike(cfg.d_head), batch, max_seq)
+        return {"mode": "dense", "bytes": fp.dense_bytes}
+    fp = model_cache_footprint(cfg, swan, batch, max_seq)
+    return {"mode": f"swan[{swan.mode}]", "bytes": fp.swan_bytes,
+            "dense_bytes": fp.dense_bytes, "saving": fp.saving}
+
+
 class ServeSession:
     """Batched autoregressive generation with optional SWAN cache."""
 
@@ -97,13 +108,8 @@ class ServeSession:
 
     def cache_report(self) -> Dict[str, Any]:
         """Physical cache accounting (paper Eq. 1 applied to this model)."""
-        if self.swan is None:
-            fp = model_cache_footprint(
-                self.cfg, _DenseLike(self.cfg.d_head), self.batch, self.max_seq)
-            return {"mode": "dense", "bytes": fp.dense_bytes}
-        fp = model_cache_footprint(self.cfg, self.swan, self.batch, self.max_seq)
-        return {"mode": f"swan[{self.swan.mode}]", "bytes": fp.swan_bytes,
-                "dense_bytes": fp.dense_bytes, "saving": fp.saving}
+        return serve_cache_report(self.cfg, self.swan, self.batch,
+                                  self.max_seq)
 
 
 class _DenseLike:
