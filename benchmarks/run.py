@@ -13,9 +13,9 @@ import traceback
 from benchmarks import (bench_adaptive_k, bench_breakeven,
                         bench_buffer_rescue, bench_fig2a_compression,
                         bench_kernels, bench_longcontext_error,
-                        bench_memory_footprint, bench_serve_engine,
-                        bench_table1_retention, bench_table2_kv_split,
-                        bench_table3_projection)
+                        bench_memory_footprint, bench_paged_cache,
+                        bench_serve_engine, bench_table1_retention,
+                        bench_table2_kv_split, bench_table3_projection)
 
 MODULES = [
     ("fig2a_compression", bench_fig2a_compression),
@@ -28,6 +28,7 @@ MODULES = [
     ("fig4_longcontext", bench_longcontext_error),
     ("adaptive_k", bench_adaptive_k),          # beyond-paper extension
     ("serve_engine", bench_serve_engine),      # continuous batching
+    ("paged_cache", bench_paged_cache),        # memory follows live tokens
     ("kernels", bench_kernels),
 ]
 

@@ -32,6 +32,10 @@ from repro.runtime.serve_loop import calibrate_swan
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--no-swan", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="also run the paged sparse cache (memory follows "
+                         "live tokens — see repro.core.paged_cache)")
+    ap.add_argument("--page-size", type=int, default=32)
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--buffer", type=int, default=16)
     ap.add_argument("--quantize", action="store_true")
@@ -85,6 +89,17 @@ def main():
         bench(eng, requests([k_max, max(k_max // 2, 1)]), "swan")
         print(f"        decode executables for the mixed-k batch: "
               f"{eng.decode_cache_size}")
+        if args.paged:
+            pg = ServeEngine(cfg, absorbed, swan=swan,
+                             projections=projections, max_seq=args.max_seq,
+                             n_slots=args.slots, paged=True,
+                             page_size=args.page_size)
+            bench(pg, requests([k_max, max(k_max // 2, 1)]), "paged")
+            rep = pg.cache_report()
+            print(f"        paged: slab layout would reserve "
+                  f"{rep['slab_bytes'] / 1e6:.2f} MB; pool live bytes "
+                  f"followed generated tokens (now drained: "
+                  f"{rep['live_pages']} pages)")
 
 
 if __name__ == "__main__":

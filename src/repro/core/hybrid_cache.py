@@ -69,16 +69,24 @@ def _side(B, Kv, S, k, vdt, swan) -> Params:
     return d
 
 
-def cache_bytes(cfg, swan, batch: int, max_seq: int) -> int:
-    """Physical bytes of one layer's hybrid cache (cf. paper Eq. 1)."""
-    Kv, dh, b, k = cfg.n_kv_heads, cfg.d_head, swan.buffer, swan.k_max
-    val_b = 1 if swan.quantize else jnp.dtype(cfg.dtype).itemsize
-    per_vec = k * val_b
+def packed_vector_bytes(cfg, swan) -> int:
+    """Physical bytes of ONE packed sparse vector (the Eq. 1 payload in
+    this config's actual dtypes).  Single source of truth for the slab
+    accounting below and the paged-pool accounting in
+    ``repro.core.paged_cache``."""
+    k = swan.k_max
+    per_vec = k * (1 if swan.quantize else jnp.dtype(cfg.dtype).itemsize)
     if swan.mode == "topk":
         per_vec += k                      # int8 indices
     if swan.quantize and swan.quant_dtype == "int8":
         per_vec += 4                      # f32 scale (fp8 needs none)
-    sparse = 2 * batch * Kv * max_seq * per_vec
+    return per_vec
+
+
+def cache_bytes(cfg, swan, batch: int, max_seq: int) -> int:
+    """Physical bytes of one layer's hybrid cache (cf. paper Eq. 1)."""
+    Kv, dh, b = cfg.n_kv_heads, cfg.d_head, swan.buffer
+    sparse = 2 * batch * Kv * max_seq * packed_vector_bytes(cfg, swan)
     buffer = 2 * batch * Kv * b * dh * jnp.dtype(cfg.dtype).itemsize
     return sparse + buffer
 
@@ -122,46 +130,76 @@ def _write_sparse_at(side: Params, packed: Params, idx_b: jnp.ndarray) -> Params
     return out
 
 
-def swan_cache_insert_decode(cache: Params, swan, cfg, k_hat: jnp.ndarray,
-                             v_hat: jnp.ndarray, pos, k_act=None) -> Params:
-    """One decode step: evict+winnow the ring slot's occupant, insert the new
-    rotated k̂/v̂ [B, 1, Kv, dh] at position ``pos`` (scalar or [B])."""
+def decode_evict_winnow(cache: Params, swan, k_hat: jnp.ndarray,
+                        v_hat: jnp.ndarray, pos, k_act=None):
+    """Layout-independent decode-step mechanics shared by the slab and
+    paged caches: pop each sequence's ring occupant (Algorithm 1's
+    pop-oldest), winnow it, and stage the ring insert of the new token.
+
+    Returns ``(write_idx [B], packed_k, packed_v, ring_updates)`` — the
+    caller commits the packed vectors to ITS sparse storage at per-sequence
+    position ``write_idx`` (slab: direct row; paged: page-table indirect)
+    and merges ``ring_updates`` into the cache dict.  With ``b == 0``
+    (paper's bt=0 ablation) the new token itself is winnowed at ``pos`` and
+    there are no ring updates.  While ``old_pos < 0`` the clamped
+    ``write_idx = 0`` write is garbage that validity masks hide.
+    """
     B = k_hat.shape[0]
     b = swan.buffer
     pos = per_seq_pos(pos, B)
-    if b == 0:   # paper's bt=0 ablation: winnow immediately, no ring
-        out = dict(cache)
+    if b == 0:   # winnow immediately, no ring
         kt = k_hat.transpose(0, 2, 1, 3)
         vt = v_hat.transpose(0, 2, 1, 3)
-        out["k"] = _write_sparse_at(cache["k"], winnow_vector(kt, swan, "k", k_act), pos)
-        out["v"] = _write_sparse_at(cache["v"], winnow_vector(vt, swan, "v", k_act), pos)
-        return out
+        return (pos, winnow_vector(kt, swan, "k", k_act),
+                winnow_vector(vt, swan, "v", k_act), {})
     bi = jnp.arange(B)
     slot = jnp.mod(pos, b)                                          # [B]
     old_pos = jnp.take_along_axis(cache["buf_pos"], slot[:, None], axis=1)[:, 0]
     write_idx = jnp.maximum(old_pos, 0)                             # [B]
-
-    out = dict(cache)
     # --- evict & winnow old occupant (garbage while old_pos < 0: masked) ---
     old_k = jnp.take_along_axis(cache["buf_k"], slot[:, None, None, None], axis=2)
     old_v = jnp.take_along_axis(cache["buf_v"], slot[:, None, None, None], axis=2)
-    out["k"] = _write_sparse_at(cache["k"], winnow_vector(old_k, swan, "k", k_act), write_idx)
-    out["v"] = _write_sparse_at(cache["v"], winnow_vector(old_v, swan, "v", k_act), write_idx)
+    packed_k = winnow_vector(old_k, swan, "k", k_act)
+    packed_v = winnow_vector(old_v, swan, "v", k_act)
     # --- insert new token into each sequence's ring slot -------------------
     kt = k_hat.transpose(0, 2, 1, 3).astype(cache["buf_k"].dtype)   # [B,Kv,1,dh]
     vt = v_hat.transpose(0, 2, 1, 3).astype(cache["buf_v"].dtype)
-    out["buf_k"] = cache["buf_k"].at[bi, :, slot].set(kt[:, :, 0])
-    out["buf_v"] = cache["buf_v"].at[bi, :, slot].set(vt[:, :, 0])
-    out["buf_pos"] = cache["buf_pos"].at[bi, slot].set(pos)
+    ring = {
+        "buf_k": cache["buf_k"].at[bi, :, slot].set(kt[:, :, 0]),
+        "buf_v": cache["buf_v"].at[bi, :, slot].set(vt[:, :, 0]),
+        "buf_pos": cache["buf_pos"].at[bi, slot].set(pos),
+    }
+    return write_idx, packed_k, packed_v, ring
+
+
+def swan_cache_insert_decode(cache: Params, swan, cfg, k_hat: jnp.ndarray,
+                             v_hat: jnp.ndarray, pos, k_act=None) -> Params:
+    """One decode step: evict+winnow the ring slot's occupant, insert the new
+    rotated k̂/v̂ [B, 1, Kv, dh] at position ``pos`` (scalar or [B])."""
+    write_idx, packed_k, packed_v, ring = decode_evict_winnow(
+        cache, swan, k_hat, v_hat, pos, k_act)
+    out = dict(cache)
+    out.update(ring)
+    out["k"] = _write_sparse_at(cache["k"], packed_k, write_idx)
+    out["v"] = _write_sparse_at(cache["v"], packed_v, write_idx)
     return out
 
 
 def swan_cache_insert_prefill(cache: Params, swan, cfg, k_hat: jnp.ndarray,
-                              v_hat: jnp.ndarray, k_act=None) -> Params:
+                              v_hat: jnp.ndarray, k_act=None,
+                              true_len=None) -> Params:
     """Bulk insert a prefill of S tokens (positions 0..S-1).
 
     Tokens [0, S-b) are winnowed into the sparse cache; the last min(S, b)
     tokens land dense in the ring at their natural slots (t % b).
+
+    ``true_len`` (traced scalar) supports prompt-length bucketing: S is the
+    padded bucket length, only positions [0, true_len) are real.  The ring
+    must then hold [true_len - b, true_len) — gathered dynamically — so the
+    sparse/ring visibility partition matches an unpadded prefill exactly.
+    The bulk winnow still covers the static [0, S - b): overshoot rows past
+    true_len - b sit in the invalid region (>= sp_len) and are rewritten by
+    decode-time evictions before ever becoming visible.
     """
     from repro.sharding.api import shard
     B, S = k_hat.shape[:2]
@@ -183,13 +221,23 @@ def swan_cache_insert_prefill(cache: Params, swan, cfg, k_hat: jnp.ndarray,
                                  winnow_vector(vt[:, :, :n_sp], swan, "v", k_act), 0)
     if b == 0:
         return out
-    tail = jnp.arange(n_sp, S)
-    slots = tail % b
+    if true_len is None:
+        tail = jnp.arange(n_sp, S)
+        slots = tail % b
+        ring_k, ring_v = kt[:, :, n_sp:], vt[:, :, n_sp:]
+        ring_pos = tail.astype(jnp.int32)
+    else:
+        tail = jnp.asarray(true_len, jnp.int32) - b + jnp.arange(b)
+        slots = jnp.mod(tail, b)         # b consecutive ints -> all residues
+        src = jnp.clip(tail, 0, S - 1)
+        ring_k, ring_v = kt[:, :, src], vt[:, :, src]
+        ring_pos = jnp.where(tail >= 0, tail, -1).astype(jnp.int32)
     out["buf_k"] = cache["buf_k"].at[:, :, slots].set(
-        kt[:, :, n_sp:].astype(cache["buf_k"].dtype))
+        ring_k.astype(cache["buf_k"].dtype))
     out["buf_v"] = cache["buf_v"].at[:, :, slots].set(
-        vt[:, :, n_sp:].astype(cache["buf_v"].dtype))
-    out["buf_pos"] = cache["buf_pos"].at[:, slots].set(tail.astype(jnp.int32))
+        ring_v.astype(cache["buf_v"].dtype))
+    out["buf_pos"] = cache["buf_pos"].at[:, slots].set(
+        jnp.broadcast_to(ring_pos[None], (B, ring_pos.shape[0])))
     return out
 
 

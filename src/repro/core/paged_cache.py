@@ -1,0 +1,180 @@
+"""Paged storage for the SWAN sparse cache: memory follows live tokens.
+
+The slab layout (``repro.core.hybrid_cache``) reserves ``[B, Kv, max_seq,
+k_max]`` sparse rows per slot — worst-case memory, even for a slot decoding
+its tenth token.  Here the per-layer sparse arrays become one shared pool of
+fixed-size pages,
+
+  pool side (per layer; model stacks L in front, like every cache leaf):
+    vals  [n_pages, Kv, page_size, k_max]   (cfg dtype / int8 / fp8)
+    idx   [n_pages, Kv, page_size, k_max]   int8   (topk mode)
+    scale [n_pages, Kv, page_size]          f32    (int8 quant)
+
+addressed through an int32 page table ``[n_slots, max_seq // page_size]``:
+sparse token position ``t`` of slot ``s`` lives at physical page
+``table[s, t // page_size]``, row ``t % page_size``.  Physical page 0 is
+the trash page (never allocated): unmapped table entries point there, so
+clamped garbage writes and gathers of not-yet-live pages are harmless (see
+``repro.runtime.page_pool``).  One physical page id backs the same logical
+page in EVERY layer and on BOTH k/v sides — one host allocation covers the
+whole model.
+
+Paper Eq. 1 memory accounting, page-granular: each sparse vector still
+costs k·(2+1) bytes (16-bit vals + int8 idx), or k·(1+1) (+4-byte scale)
+quantized — paging changes WHEN that memory is committed, not how much a
+token costs.  A physical page holds ``page_size`` token positions for both
+sides of all L layers, so
+
+  bytes/page = 2 · L_attn · Kv · page_size · per_vec(k_max)      (Eq. 1 rows)
+
+and live cache bytes = live_pages · bytes/page + the dense ring buffers
+(``2 · L · B · Kv · b · d_h`` — recent-token window, same as the slab
+layout) — i.e. total memory tracks winnowed-token count, not
+``n_slots · max_seq``.  Decompression-free reads are preserved: attention
+gathers page granules by table lookup (``repro.core.swan_attention.
+paged_logical_view``) and consumes the packed (values, indices) payload
+directly — vectors are never expanded to d_h.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hybrid_cache import (_val_dtype, decode_evict_winnow,
+                                     packed_vector_bytes)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+
+def init_paged_pool(cfg, swan, n_pages: int, page_size: int) -> Params:
+    """Allocate one layer's page pool (both sides)."""
+    Kv, k = cfg.n_kv_heads, swan.k_max
+    vdt = _val_dtype(cfg, swan)
+
+    def side() -> Params:
+        d: Params = {"vals": jnp.zeros((n_pages, Kv, page_size, k), vdt)}
+        if swan.mode == "topk":
+            d["idx"] = jnp.zeros((n_pages, Kv, page_size, k), jnp.int8)
+        if swan.quantize and swan.quant_dtype == "int8":
+            d["scale"] = jnp.zeros((n_pages, Kv, page_size), jnp.float32)
+        return d
+
+    return {"k": side(), "v": side()}
+
+
+def page_bytes(cfg, swan, page_size: int) -> int:
+    """Bytes committed by mapping ONE physical page (all layers, both
+    sides) — ``page_size`` rows of the Eq. 1 packed payload
+    (``hybrid_cache.packed_vector_bytes``: the single source of truth
+    shared with the slab accounting)."""
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.layer_kind(i) == "attn")
+    return (2 * n_attn * cfg.n_kv_heads * page_size
+            * packed_vector_bytes(cfg, swan))
+
+
+def ring_bytes(cfg, swan, batch: int) -> int:
+    """Dense ring buffers + positions (per-slot, not paged — the recent
+    window is always live)."""
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.layer_kind(i) == "attn")
+    buf = 2 * n_attn * batch * cfg.n_kv_heads * swan.buffer * cfg.d_head \
+        * jnp.dtype(cfg.dtype).itemsize
+    return buf + n_attn * batch * swan.buffer * 4        # buf_pos int32
+
+
+# ---------------------------------------------------------------------------
+# Writes
+# ---------------------------------------------------------------------------
+
+def _pool_write_at(side: Params, packed: Params, phys: jnp.ndarray,
+                   row: jnp.ndarray) -> Params:
+    """Write packed single vectors [B, Kv, 1, ...] at per-sequence physical
+    (page, row) addresses.  Distinct live sequences own distinct pages, so
+    the only possible index collision is on the trash page."""
+    out = dict(side)
+    out["vals"] = side["vals"].at[phys, :, row].set(
+        packed["vals"][:, :, 0].astype(side["vals"].dtype))
+    if "idx" in side:
+        out["idx"] = side["idx"].at[phys, :, row].set(packed["idx"][:, :, 0])
+    if "scale" in side:
+        out["scale"] = side["scale"].at[phys, :, row].set(
+            packed["scale"][:, :, 0])
+    return out
+
+
+def paged_insert_decode(cache: Params, swan, cfg, k_hat: jnp.ndarray,
+                        v_hat: jnp.ndarray, pos, page_tab: jnp.ndarray,
+                        k_act=None) -> Params:
+    """One decode step against the paged cache — the page-table analogue of
+    ``hybrid_cache.swan_cache_insert_decode``, sharing its eviction/ring
+    mechanics (``decode_evict_winnow``); only the sparse write is
+    indirected THROUGH the page table: sparse position ``t`` ->
+    (page_tab[b, t // ps], t % ps).  While a sequence has no sparse tokens
+    its table row is all-trash, so the clamped t=0 garbage write lands in
+    page 0 where masks hide it.
+    """
+    ps = cache["pool"]["k"]["vals"].shape[2]
+    write_idx, packed_k, packed_v, ring = decode_evict_winnow(
+        cache, swan, k_hat, v_hat, pos, k_act)
+    phys = jnp.take_along_axis(page_tab, (write_idx // ps)[:, None], 1)[:, 0]
+    row = write_idx % ps
+    out = dict(cache)
+    out.update(ring)
+    out["pool"] = {
+        "k": _pool_write_at(cache["pool"]["k"], packed_k, phys, row),
+        "v": _pool_write_at(cache["pool"]["v"], packed_v, phys, row),
+    }
+    return out
+
+
+def _scatter_side(pool_side: Params, slot_side: Params,
+                  phys_rows: jnp.ndarray, page_size: int) -> Params:
+    """Scatter ONE slot's slab-layout sparse side [L, 1, Kv, S, ...] into the
+    pool [L, n_pages, ...] at physical pages ``phys_rows`` [S // page_size].
+
+    All logical pages are written unconditionally (fixed shapes -> one
+    compiled executable per prompt-length bucket): unmapped logical pages
+    target the trash page, which absorbs the junk.
+    """
+    out = dict(pool_side)
+
+    def to_pages(x, extra):
+        L, _, Kv, S = x.shape[:4]
+        P = S // page_size
+        return x[:, 0].reshape((L, Kv, P, page_size) + extra) \
+                      .swapaxes(1, 2)                    # [L, P, Kv, ps, ...]
+
+    out["vals"] = pool_side["vals"].at[:, phys_rows].set(
+        to_pages(slot_side["vals"], slot_side["vals"].shape[4:])
+        .astype(pool_side["vals"].dtype))
+    if "idx" in pool_side:
+        out["idx"] = pool_side["idx"].at[:, phys_rows].set(
+            to_pages(slot_side["idx"], slot_side["idx"].shape[4:]))
+    if "scale" in pool_side:
+        out["scale"] = pool_side["scale"].at[:, phys_rows].set(
+            to_pages(slot_side["scale"], ()))
+    return out
+
+
+def paged_insert_prefill(state: Params, one: Params, slot,
+                         phys_rows: jnp.ndarray, page_size: int) -> Params:
+    """Admit a batch=1 prefilled slab state into the paged batched state:
+    ring leaves go in by ``dynamic_update_slice`` on the batch axis (as in
+    the slab engine); sparse sides scatter page-wise into the pool at the
+    slot's physical pages."""
+    out = dict(state)
+    out["pool"] = {
+        "k": _scatter_side(state["pool"]["k"], one["k"], phys_rows, page_size),
+        "v": _scatter_side(state["pool"]["v"], one["v"], phys_rows, page_size),
+    }
+    for leaf in ("buf_k", "buf_v", "buf_pos"):
+        out[leaf] = jax.lax.dynamic_update_slice_in_dim(
+            state[leaf], one[leaf].astype(state[leaf].dtype), slot, axis=1)
+    return out

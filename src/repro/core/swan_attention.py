@@ -205,6 +205,56 @@ def swan_decode_attention(q_hat: jnp.ndarray, cache: Params, swan, cfg,
 
 
 # ---------------------------------------------------------------------------
+# Paged cache (repro.core.paged_cache): gather-via-page-table reads
+# ---------------------------------------------------------------------------
+
+def paged_logical_view(cache: Params, page_tab: jnp.ndarray) -> Params:
+    """Assemble each sequence's logical sparse cache from the shared page
+    pool by page-table gather: ``view[b, :, t] = pool[page_tab[b, t // ps],
+    :, t % ps]``.  This is a page-granule gather of the PACKED payload —
+    vectors stay (values, int8 indices) pairs end to end, so the
+    decompression-free property is untouched; the gathered view feeds the
+    exact same sparse gather/scatter attention as the slab layout.
+
+    Unmapped logical pages gather the trash page (physical page 0); the
+    per-sequence ``sp_len`` mask inside ``_sparse_stats`` hides them.
+
+    ``page_tab`` may be a leading PREFIX of the full table (the engine
+    ships a power-of-two bucket of >= the most pages any live sequence has
+    mapped), so the gathered view — the step's transient memory — scales
+    with live pages, not max_seq.
+    """
+    B, P = page_tab.shape
+
+    def side_view(side: Params) -> Params:
+        ps = side["vals"].shape[2]
+
+        def g(x):
+            v = x[page_tab]                        # [B, P, Kv, ps, ...]
+            v = jnp.moveaxis(v, 2, 1)              # [B, Kv, P, ps, ...]
+            return v.reshape((B, v.shape[1], P * ps) + v.shape[4:])
+
+        return {name: g(x) for name, x in side.items()}
+
+    return {"k": side_view(cache["pool"]["k"]),
+            "v": side_view(cache["pool"]["v"]),
+            "buf_k": cache["buf_k"], "buf_v": cache["buf_v"],
+            "buf_pos": cache["buf_pos"]}
+
+
+def swan_decode_attention_paged(q_hat: jnp.ndarray, cache: Params, swan, cfg,
+                                pos, page_tab: jnp.ndarray, mesh=None,
+                                seq_axis: Optional[str] = None) -> jnp.ndarray:
+    """SWAN decode attention over the paged cache: page-table gather, then
+    the identical joint softmax over [winnowed sparse ‖ dense buffer].
+    Every position < sp_len lives in a mapped page of the shipped table
+    prefix, and positions beyond the view were -inf-masked anyway — so the
+    paged engine is token-identical to the slab engine."""
+    return swan_decode_attention(q_hat, paged_logical_view(cache, page_tab),
+                                 swan, cfg, pos, mesh=mesh, seq_axis=seq_axis)
+
+
+# ---------------------------------------------------------------------------
 # Reference (oracle) path: full decompression + dense softmax.  Used by tests
 # and by the Pallas ref.py — NEVER by serving.
 # ---------------------------------------------------------------------------

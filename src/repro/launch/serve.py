@@ -49,7 +49,17 @@ def main():
                     help="engine: number of requests (default: --batch * 2)")
     ap.add_argument("--mixed-k", action="store_true",
                     help="engine: cycle per-request SWAN k overrides")
+    ap.add_argument("--paged", action="store_true",
+                    help="engine+swan: paged sparse cache — memory follows "
+                         "live tokens (repro.core.paged_cache)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="paged: token positions per page")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="paged: physical pages in the shared pool "
+                         "(default: full reservation; smaller over-commits)")
     args = ap.parse_args()
+    if args.paged and not (args.engine and args.swan):
+        raise SystemExit("--paged requires --engine and --swan")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     api = get_model(cfg)
@@ -93,7 +103,9 @@ def main():
 
 def _run_engine(cfg, params, swan, projections, args):
     eng = ServeEngine(cfg, params, swan=swan, projections=projections,
-                      max_seq=args.max_seq, n_slots=args.batch)
+                      max_seq=args.max_seq, n_slots=args.batch,
+                      paged=args.paged, page_size=args.page_size,
+                      n_pages=args.pool_pages)
     n_req = args.requests or args.batch * 2
     k_cycle = ([None] if (swan is None or not args.mixed_k)
                else [swan.k_max, max(swan.k_max // 2, 1),
@@ -117,8 +129,15 @@ def _run_engine(cfg, params, swan, projections, args):
     extra = f" ({rep['saving']:.0%} vs dense)" if "saving" in rep else ""
     print(f"engine: {len(comps)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s, {eng.step_count} steps, "
-          f"decode executables: {eng.decode_cache_size})")
+          f"decode executables: {eng.decode_cache_size}, "
+          f"prefill executables: {eng.prefill_cache_size})")
     print(f"cache [{rep['mode']}]: {rep['bytes'] / 1e6:.2f} MB{extra}")
+    if args.paged:
+        print(f"paged: reserved {rep['reserved_bytes'] / 1e6:.2f} MB over "
+              f"{rep['n_pages']} pages ({rep['page_size']} tok/page); "
+              f"live now {rep['live_pages']} pages / "
+              f"{rep['live_bytes'] / 1e6:.2f} MB "
+              f"(slab layout would hold {rep['slab_bytes'] / 1e6:.2f} MB)")
 
 
 if __name__ == "__main__":

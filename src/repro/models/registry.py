@@ -28,6 +28,9 @@ class ModelApi:
     decode_step: Callable             # (p, cfg, token, pos, state, swan, proj) -> (logits, state)
     collect_qkv: Optional[Callable]   # calibration capture
     absorb: Optional[Callable]
+    # (cfg, swan, batch, max_seq, n_pages, page_size) -> paged state; None
+    # when the family has no paged sparse layout (recurrent/encdec state)
+    init_paged_state: Optional[Callable] = None
 
     def abstract_params(self, cfg):
         return jax.eval_shape(lambda: self.init_params(jax.random.PRNGKey(0), cfg))
@@ -60,9 +63,11 @@ def _tfm_forward(p, cfg, batch):
     return tfm.lm_forward(p, cfg, batch["tokens"], batch.get("prefix_embeds"))
 
 
-def _tfm_prefill(p, cfg, batch, state, swan=None, proj=None, k_active=None):
+def _tfm_prefill(p, cfg, batch, state, swan=None, proj=None, k_active=None,
+                 true_len=None):
     return tfm.lm_prefill(p, cfg, batch["tokens"], state, swan, proj,
-                          batch.get("prefix_embeds"), k_active=k_active)
+                          batch.get("prefix_embeds"), k_active=k_active,
+                          true_len=true_len)
 
 
 def _jamba_forward(p, cfg, batch):
@@ -105,13 +110,13 @@ def _jamba_collect(p, cfg, batch):
 _FAMILIES = {
     "dense": ModelApi(tfm.init_lm_params, _tfm_forward, tfm.init_caches,
                       _tfm_prefill, tfm.lm_decode_step, _tfm_collect,
-                      tfm.absorb_swan),
+                      tfm.absorb_swan, tfm.init_paged_caches),
     "moe":   ModelApi(tfm.init_lm_params, _tfm_forward, tfm.init_caches,
                       _tfm_prefill, tfm.lm_decode_step, _tfm_collect,
-                      tfm.absorb_swan),
+                      tfm.absorb_swan, tfm.init_paged_caches),
     "vlm":   ModelApi(tfm.init_lm_params, _tfm_forward, tfm.init_caches,
                       _tfm_prefill, tfm.lm_decode_step, _tfm_collect,
-                      tfm.absorb_swan),
+                      tfm.absorb_swan, tfm.init_paged_caches),
     "hybrid": ModelApi(jamba.init_lm_params, _jamba_forward,
                        jamba.init_serve_state, _jamba_prefill,
                        jamba.decode_step, _jamba_collect, jamba.absorb_swan),

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import absorb as absorb_mod
 from repro.core import hybrid_cache as hc
+from repro.core import paged_cache as pc
 from repro.core import swan_attention as swa
 from repro.core.winnow import rotate_k, rotate_q
 from repro.models import attention as attn
@@ -216,6 +217,29 @@ def init_caches(cfg, swan, batch: int, max_seq: int) -> Params:
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)
 
 
+def init_paged_caches(cfg, swan, batch: int, max_seq: int, n_pages: int,
+                      page_size: int) -> Params:
+    """Paged serve state (repro.core.paged_cache): per-layer sparse sides
+    become a shared page pool [L, n_pages, Kv, page_size, k]; the dense
+    ring buffers stay per-slot.  The page table rides along as a separate
+    traced operand (host-owned mapping, see repro.runtime.page_pool)."""
+    if swan is None or not swan.enabled:
+        raise ValueError("paged caches require SWAN (the sparse sides are "
+                         "what gets paged); use init_caches for dense")
+    if max_seq % page_size:
+        raise ValueError(f"max_seq={max_seq} not divisible by "
+                         f"page_size={page_size}")
+    Kv, dh, b = cfg.n_kv_heads, cfg.d_head, swan.buffer
+    one = {
+        "pool": pc.init_paged_pool(cfg, swan, n_pages, page_size),
+        "buf_k": jnp.zeros((batch, Kv, b, dh), jnp.dtype(cfg.dtype)),
+        "buf_v": jnp.zeros((batch, Kv, b, dh), jnp.dtype(cfg.dtype)),
+        "buf_pos": jnp.full((batch, b), -1, jnp.int32),
+    }
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)
+
+
 def _swan_seq_ctx():
     """(mesh, seq_axis) for split-S swan decode, from the installed rules."""
     from repro.sharding.api import current_rules
@@ -230,7 +254,7 @@ def _swan_seq_ctx():
 
 def _swan_layer_decode(lp: Params, p_qk_l: jnp.ndarray, cache_l: Params,
                        cfg, swan, x: jnp.ndarray, pos,
-                       k_act=None) -> Tuple[jnp.ndarray, Params]:
+                       k_act=None, page_tab=None) -> Tuple[jnp.ndarray, Params]:
     B = x.shape[0]
     Kv, G, dh = cfg.n_kv_heads, cfg.q_group, cfg.d_head
     pos = hc.per_seq_pos(pos, B)                                 # [B]
@@ -238,18 +262,25 @@ def _swan_layer_decode(lp: Params, p_qk_l: jnp.ndarray, cache_l: Params,
     q, k, v = attn.project_qkv(lp["attn"], cfg, x, positions)   # v̂ already rotated (absorbed)
     q_hat = rotate_q(q, p_qk_l, Kv)[:, 0]                        # [B,Kv,G,dh]
     k_hat = rotate_k(k, p_qk_l)                                  # [B,1→S dim,Kv,dh]
-    cache_l = hc.swan_cache_insert_decode(cache_l, swan, cfg, k_hat, v, pos,
-                                          k_act=k_act)
     mesh, seq_axis = _swan_seq_ctx()
-    o = swa.swan_decode_attention(q_hat, cache_l, swan, cfg, pos,
-                                  mesh=mesh, seq_axis=seq_axis)
+    if page_tab is None:
+        cache_l = hc.swan_cache_insert_decode(cache_l, swan, cfg, k_hat, v,
+                                              pos, k_act=k_act)
+        o = swa.swan_decode_attention(q_hat, cache_l, swan, cfg, pos,
+                                      mesh=mesh, seq_axis=seq_axis)
+    else:
+        cache_l = pc.paged_insert_decode(cache_l, swan, cfg, k_hat, v, pos,
+                                         page_tab, k_act=k_act)
+        o = swa.swan_decode_attention_paged(q_hat, cache_l, swan, cfg, pos,
+                                            page_tab, mesh=mesh,
+                                            seq_axis=seq_axis)
     o = o.reshape(B, 1, Kv * G, dh)
     return attn.output_proj(lp["attn"], o), cache_l
 
 
 def _swan_layer_prefill(lp: Params, p_qk_l, cache_l, cfg, swan,
                         x: jnp.ndarray, positions,
-                        k_act=None) -> Tuple[jnp.ndarray, Params]:
+                        k_act=None, true_len=None) -> Tuple[jnp.ndarray, Params]:
     """Prefill: dense (lossless, Lemma A.1) attention on rotated q̂/k̂/v̂;
     hybrid cache populated for subsequent decode."""
     B, S, _ = x.shape
@@ -258,7 +289,7 @@ def _swan_layer_prefill(lp: Params, p_qk_l, cache_l, cfg, swan,
     q_hat = rotate_q(q, p_qk_l, Kv).reshape(B, S, Kv * G, dh)
     k_hat = rotate_k(k, p_qk_l)
     cache_l = hc.swan_cache_insert_prefill(cache_l, swan, cfg, k_hat, v,
-                                           k_act=k_act)
+                                           k_act=k_act, true_len=true_len)
     if S > attn.DENSE_ATTN_MAX_SEQ:
         o = attn.blocked_attention(q_hat, k_hat, v, causal=True)
     else:
@@ -292,12 +323,19 @@ def _layer_ffn(lp: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
 def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
                swan=None, projections: Optional[Params] = None,
                prefix_embeds: Optional[jnp.ndarray] = None,
-               k_active=None) -> Tuple[jnp.ndarray, Params]:
+               k_active=None, true_len=None) -> Tuple[jnp.ndarray, Params]:
     """Process the prompt; fill caches.  Returns (last-token logits, caches).
 
     ``k_active``: optional traced scalar overriding the SWAN runtime
     retention for this whole prompt (per-request k — the serve engine
-    prefills one request at a time, so a scalar suffices here)."""
+    prefills one request at a time, so a scalar suffices here).
+
+    ``true_len``: optional traced scalar — the real prompt length when
+    ``tokens`` is padded to a compile bucket (prompt-length bucketing).
+    Logits are then taken at position true_len - 1, and the hybrid-cache
+    ring is anchored at true_len; padding junk beyond it only ever lands
+    in masked/invalid cache regions (causal masking keeps it out of the
+    prefill attention)."""
     x, positions = _embed_inputs(p, cfg, tokens, prefix_embeds)
     use_swan = swan is not None and swan.enabled
 
@@ -306,7 +344,8 @@ def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
         h = apply_norm(lp["ln1"], cfg, x)
         if use_swan:
             h, cache_l = _swan_layer_prefill(lp, p_qk_l, cache_l, cfg, swan,
-                                             h, positions, k_act=k_l)
+                                             h, positions, k_act=k_l,
+                                             true_len=true_len)
         else:
             q, k, v = attn.project_qkv(lp["attn"], cfg, h, positions)
             cache_l = attn.dense_cache_insert(cache_l, k, v, 0)
@@ -323,20 +362,29 @@ def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
     if use_swan and k_active is not None:
         k_arr = jnp.minimum(k_arr, jnp.asarray(k_active, jnp.int32))
     x, caches = jax.lax.scan(body, x, (p["layers"], caches, pq, k_arr))
-    x = apply_norm(p["ln_f"], cfg, x[:, -1:])
+    if true_len is None:
+        x = x[:, -1:]
+    else:   # bucketed prompt: last REAL token, not the padding tail
+        x = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(true_len, jnp.int32) - 1, 1, axis=1)
+    x = apply_norm(p["ln_f"], cfg, x)
     head = p["embed"].T if cfg.tie_embeddings else p["head"]
     return x @ head.astype(x.dtype), caches
 
 
 def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
                    swan=None, projections: Optional[Params] = None,
-                   k_active=None) -> Tuple[jnp.ndarray, Params]:
+                   k_active=None, page_tab=None) -> Tuple[jnp.ndarray, Params]:
     """token [B] -> (logits [B, V], updated caches).
 
     ``pos``: scalar int32 (lockstep batch) or per-sequence [B] (continuous
     batching).  ``k_active``: optional traced scalar or per-sequence [B]
     SWAN retention override — per-request runtime-tunable compression; a
-    traced operand, so mixed-k batches share one compiled executable."""
+    traced operand, so mixed-k batches share one compiled executable.
+
+    ``page_tab``: optional int32 [B, max_pages] page table — ``caches`` is
+    then the paged layout from ``init_paged_caches`` and sparse reads/writes
+    go through the shared page pool (repro.core.paged_cache)."""
     B = token.shape[0]
     pos = hc.per_seq_pos(pos, B)
     x = jnp.take(p["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
@@ -345,6 +393,9 @@ def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
                       jnp.minimum(pos, p["pos_embed"].shape[0] - 1), axis=0)
         x = x + pe[:, None].astype(x.dtype)
     use_swan = swan is not None and swan.enabled
+    if page_tab is not None and not use_swan:
+        raise ValueError("page_tab given but SWAN disabled — only the "
+                         "sparse sides are paged")
     k_req = None if k_active is None else jnp.asarray(k_active, jnp.int32)
 
     def body(x, xs):
@@ -353,7 +404,8 @@ def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
         if use_swan:
             k_eff = k_l if k_req is None else jnp.minimum(k_l, k_req)
             h, cache_l = _swan_layer_decode(lp, p_qk_l, cache_l, cfg, swan,
-                                            h, pos, k_act=k_eff)
+                                            h, pos, k_act=k_eff,
+                                            page_tab=page_tab)
         else:
             h, cache_l = attn.attn_decode_dense(lp["attn"], cfg, h, pos, cache_l)
         x = x + h

@@ -1,0 +1,132 @@
+"""Host-side page allocator for the paged sparse KV cache.
+
+The device keeps one shared pool of fixed-size pages per layer (see
+``repro.core.paged_cache``); this module owns the *mapping*: which physical
+page backs which (slot, logical-page) pair.  All allocator state is plain
+numpy on the host — the scheduler already runs there, and the page table is
+shipped to the device as a tiny ``[n_slots, pages_per_seq]`` int32 operand
+each step.
+
+Invariants (enforced, and property-tested in tests/test_page_pool.py):
+
+  * physical page 0 is the TRASH page: it is never allocated, and every
+    unmapped page-table entry points at it.  Clamped garbage writes (the
+    hybrid cache's pos < buffer eviction trick) and gathers of not-yet-live
+    logical pages all land there, where validity masks hide them;
+  * a physical page != 0 is owned by at most one slot at a time — two live
+    sequences can never alias storage;
+  * ``free_slot`` returns pages to the free list immediately, so a request
+    backfilled into the slot on the same engine step reuses them;
+  * exhaustion raises ``PagePoolExhausted`` (a clean, catchable error)
+    without corrupting allocator state.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+class PagePoolExhausted(RuntimeError):
+    """No free physical pages left — the pool is over-committed."""
+
+
+class PagePool:
+    """Free-list allocator over ``n_pages`` physical pages.
+
+    ``table[slot, j]`` is the physical page backing logical page ``j`` of
+    ``slot`` (0 = unmapped / trash).  Logical pages are mapped densely from
+    0 upward — the hybrid cache writes winnowed tokens in position order, so
+    a sequence's mapping only ever grows at the end (until the slot is
+    freed wholesale on retirement).
+    """
+
+    def __init__(self, n_pages: int, pages_per_seq: int, n_slots: int,
+                 page_size: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved as trash)")
+        self.n_pages = n_pages
+        self.pages_per_seq = pages_per_seq
+        self.n_slots = n_slots
+        self.page_size = page_size
+        # LIFO free list: a just-retired sequence's pages are the next ones
+        # handed out (warm reuse)
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self.table = np.full((n_slots, pages_per_seq), TRASH_PAGE, np.int32)
+        self.n_mapped = np.zeros((n_slots,), np.int64)
+        self._owner = np.full((n_pages,), -1, np.int64)   # -1 = free/trash
+
+    # ------------------------------------------------------------------
+    # Allocation
+    # ------------------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Logical pages needed to hold ``n_tokens`` sparse tokens."""
+        return -(-max(int(n_tokens), 0) // self.page_size)
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow ``slot``'s mapping to cover ``n_tokens`` sparse tokens."""
+        need = self.pages_for(n_tokens)
+        if need > self.pages_per_seq:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens need {need} pages "
+                f"> pages_per_seq={self.pages_per_seq}")
+        while self.n_mapped[slot] < need:
+            self._alloc_one(slot)
+
+    def _alloc_one(self, slot: int) -> int:
+        if not self._free:
+            raise PagePoolExhausted(
+                f"page pool exhausted: {self.n_pages - 1} usable pages, "
+                f"all live (slot {slot} needs one more)")
+        p = self._free.pop()
+        assert self._owner[p] == -1 and p != TRASH_PAGE
+        self._owner[p] = slot
+        self.table[slot, self.n_mapped[slot]] = p
+        self.n_mapped[slot] += 1
+        return p
+
+    def free_slot(self, slot: int) -> int:
+        """Retire ``slot``: return its pages to the free list.  Returns the
+        number of pages freed."""
+        n = int(self.n_mapped[slot])
+        for j in range(n):
+            p = int(self.table[slot, j])
+            assert self._owner[p] == slot
+            self._owner[p] = -1
+            self._free.append(p)
+        self.table[slot, :] = TRASH_PAGE
+        self.n_mapped[slot] = 0
+        return n
+
+    # ------------------------------------------------------------------
+    # Accounting / introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def live_pages(self) -> int:
+        return self.n_pages - 1 - len(self._free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def live_bytes(self, bytes_per_page: int) -> int:
+        return self.live_pages * bytes_per_page
+
+    def reserved_bytes(self, bytes_per_page: int) -> int:
+        return self.n_pages * bytes_per_page
+
+    def check_consistent(self) -> None:
+        """Assert the aliasing/accounting invariants (used by tests)."""
+        live = self.table[self.table != TRASH_PAGE]
+        assert live.size == len(set(live.tolist())), "page aliased by 2 slots"
+        assert TRASH_PAGE not in self._free
+        assert len(self._free) + live.size == self.n_pages - 1
+        for slot in range(self.n_slots):
+            n = int(self.n_mapped[slot])
+            assert (self.table[slot, :n] != TRASH_PAGE).all()
+            assert (self.table[slot, n:] == TRASH_PAGE).all()
+            assert (self._owner[self.table[slot, :n]] == slot).all()

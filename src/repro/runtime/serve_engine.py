@@ -22,8 +22,21 @@ along as a traced ``[B]`` operand: a batch can mix compression levels and
 the decode step still compiles exactly once (see
 ``decode_cache_size`` — asserted by tests/test_serve_engine.py).
 
-Prefill compiles once per distinct prompt length (XLA static shapes).
-Production would bucket prompt lengths; left open in ROADMAP.md.
+Prompt-length bucketing: prompts are padded to power-of-two buckets and the
+true length rides along as a traced scalar, so prefill compiles
+O(log max_seq) times instead of once per distinct prompt length.  Greedy
+sampling happens on device (argmax inside the jitted decode step); the full
+logits row-trip to host only when a request asks for temperature sampling.
+
+Paged sparse cache (``paged=True``; SWAN only): instead of reserving
+``[B, Kv, max_seq, k]`` sparse rows per slot, all slots share one page pool
+``[n_pages, Kv, page_size, k]`` per layer side, addressed through a
+host-managed page table (``repro.runtime.page_pool``).  Admission maps just
+enough pages for the prompt's winnowed tokens, decode grows the mapping as
+tokens land, and retirement returns pages for immediate reuse — cache
+memory follows LIVE tokens, not ``n_slots * max_seq`` (see
+``repro.core.paged_cache`` for the Eq. 1 accounting).  The paged engine is
+token-identical to the slab engine (tests/test_paged_engine.py).
 """
 from __future__ import annotations
 
@@ -36,7 +49,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hybrid_cache as hc
+from repro.core import paged_cache as pc
 from repro.models import get_model, swan_applicable
+from repro.runtime.page_pool import PagePool, PagePoolExhausted
 from repro.runtime.serve_loop import serve_cache_report
 
 Params = Dict[str, Any]
@@ -82,7 +98,9 @@ class ServeEngine:
     """Continuous-batching generation over a slot-based batched cache."""
 
     def __init__(self, cfg, params, swan=None, projections=None,
-                 max_seq: int = 4096, n_slots: int = 4, jit: bool = True):
+                 max_seq: int = 4096, n_slots: int = 4, jit: bool = True,
+                 paged: bool = False, page_size: int = 64,
+                 n_pages: Optional[int] = None, bucket_prompts: bool = True):
         self.cfg = cfg
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
@@ -99,44 +117,87 @@ class ServeEngine:
                 raise ValueError("SWAN enabled but no projections given — "
                                  "run calibrate_swan first")
         self.params = params
-        self.state = self.api.init_serve_state(cfg, self.swan, n_slots, max_seq)
-        sw, pj = self.swan, self.projections
+
+        prefill_sig = inspect.signature(self.api.prefill).parameters
+        decode_sig = inspect.signature(self.api.decode_step).parameters
         # per-request k needs the family to thread k_active through
         # prefill/decode (transformer families: dense/moe/vlm; jamba/ssm
         # serve with their fixed config-level k)
         self._k_threading = (
             self.swan is not None
-            and "k_active" in inspect.signature(self.api.prefill).parameters
-            and "k_active" in inspect.signature(self.api.decode_step).parameters)
+            and "k_active" in prefill_sig and "k_active" in decode_sig)
+        # prompt bucketing needs true_len-aware prefill (transformer
+        # families; recurrent state would absorb the padding junk)
+        self._bucketing = bucket_prompts and "true_len" in prefill_sig
         k_fill = 0 if self.swan is None else self.swan.k_max
 
-        if self._k_threading:
-            def prefill_fn(p, batch_in, state, k_act):
-                return self.api.prefill(p, cfg, batch_in, state, sw, pj,
-                                        k_active=k_act)
-
-            def decode_fn(p, token, pos, k_act, state):
-                return self.api.decode_step(p, cfg, token, pos, state, sw, pj,
-                                            k_active=k_act)
+        self.paged = paged
+        if paged:
+            if self.swan is None:
+                raise ValueError("paged=True requires SWAN: only the sparse "
+                                 "sides have a paged layout")
+            if (self.api.init_paged_state is None
+                    or "page_tab" not in decode_sig):
+                raise ValueError(f"{cfg.family!r} family has no paged cache")
+            if max_seq % page_size:
+                raise ValueError(f"max_seq={max_seq} not divisible by "
+                                 f"page_size={page_size}")
+            max_pages = max_seq // page_size
+            # default pool: full reservation (+1 trash page) rounded up to
+            # a multiple of 8 so the page-axis dp sharding spec survives
+            # the divisibility sanitizer on dp<=8 meshes (extra pages are
+            # plain free capacity) — operators shrink n_pages to
+            # over-commit; live accounting still tracks tokens, and
+            # admission waits for pages instead of failing
+            if n_pages is None:
+                n_pages = -(-(n_slots * max_pages + 1) // 8) * 8
+            self.pool: Optional[PagePool] = PagePool(
+                n_pages, max_pages, n_slots, page_size)
+            self.state = self.api.init_paged_state(
+                cfg, self.swan, n_slots, max_seq, n_pages, page_size)
         else:
-            def prefill_fn(p, batch_in, state, k_act):
-                return self.api.prefill(p, cfg, batch_in, state, sw, pj)
+            self.pool = None
+            self.state = self.api.init_serve_state(cfg, self.swan, n_slots,
+                                                   max_seq)
+        sw, pj = self.swan, self.projections
 
-            def decode_fn(p, token, pos, k_act, state):
-                return self.api.decode_step(p, cfg, token, pos, state, sw, pj)
+        def prefill_fn(p, batch_in, state, k_act, true_len):
+            kw = {}
+            if self._k_threading:
+                kw["k_active"] = k_act
+            if self._bucketing:
+                kw["true_len"] = true_len
+            return self.api.prefill(p, cfg, batch_in, state, sw, pj, **kw)
+
+        def decode_fn(p, token, pos, k_act, page_tab, state):
+            kw = {}
+            if self._k_threading:
+                kw["k_active"] = k_act
+            if self.paged:
+                kw["page_tab"] = page_tab
+            logits, state = self.api.decode_step(p, cfg, token, pos, state,
+                                                 sw, pj, **kw)
+            # device-side greedy sampling: ship back [B] token ids, not
+            # [B, V] logits (host fetches logits only for temperature > 0)
+            return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), state
 
         def insert_fn(big, one, slot):
             return jax.tree_util.tree_map(
                 lambda b, o: jax.lax.dynamic_update_slice_in_dim(
                     b, o.astype(b.dtype), slot, axis=1), big, one)
 
+        def insert_paged_fn(big, one, slot, phys_rows):
+            return pc.paged_insert_prefill(big, one, slot, phys_rows,
+                                           page_size)
+
         if jit:
             self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
-            self._decode = jax.jit(decode_fn, donate_argnums=(4,))
+            self._decode = jax.jit(decode_fn, donate_argnums=(5,))
             self._insert = jax.jit(insert_fn, donate_argnums=(0,))
+            self._insert_paged = jax.jit(insert_paged_fn, donate_argnums=(0,))
         else:
-            self._prefill, self._decode, self._insert = \
-                prefill_fn, decode_fn, insert_fn
+            self._prefill, self._decode = prefill_fn, decode_fn
+            self._insert, self._insert_paged = insert_fn, insert_paged_fn
 
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
@@ -184,6 +245,12 @@ class ServeEngine:
         size = getattr(self._decode, "_cache_size", None)
         return size() if callable(size) else -1
 
+    @property
+    def prefill_cache_size(self) -> int:
+        """Compiled prefill executables (bucketing: <= O(log max_seq))."""
+        size = getattr(self._prefill, "_cache_size", None)
+        return size() if callable(size) else -1
+
     def _sample(self, logits, req: Request, n_prev: int) -> int:
         if req.temperature <= 0.0:
             return int(np.argmax(np.asarray(logits)))
@@ -191,19 +258,52 @@ class ServeEngine:
         return int(jax.random.categorical(
             key, jnp.asarray(logits) / req.temperature))
 
+    def _bucket_len(self, plen: int) -> int:
+        """Smallest power-of-two bucket holding ``plen`` (capped at
+        max_seq) — prefill compiles once per bucket, not per length."""
+        if not self._bucketing:
+            return plen
+        b = 1
+        while b < plen:
+            b <<= 1
+        return min(b, self.max_seq)
+
+    def _sparse_tokens(self, pos: int) -> int:
+        """Winnowed (sparse-resident) tokens at decode position ``pos``."""
+        return max(pos + 1 - self.swan.buffer, 0)
+
     def _admit(self, req: Request, slot: int) -> None:
-        state1 = self.api.init_serve_state(self.cfg, self.swan, 1, self.max_seq)
-        tokens = jnp.asarray(np.asarray(req.tokens, np.int32))[None]
+        plen = len(req.tokens)
+        pad_len = self._bucket_len(plen)
+        if self.paged:
+            # admission transients follow the PROMPT, not max_seq: the
+            # single-slot prefill state is sized to the prompt bucket
+            # (rounded to whole pages), and only that page prefix is
+            # scattered into the pool
+            ps = self.pool.page_size
+            s1 = -(-pad_len // ps) * ps
+        else:
+            s1 = self.max_seq      # slab insert needs shape-matched slices
+        state1 = self.api.init_serve_state(self.cfg, self.swan, 1, s1)
+        toks = np.zeros((pad_len,), np.int32)
+        toks[:plen] = np.asarray(req.tokens, np.int32)
         k_req = self.swan.k_max if (self.swan and req.k is None) else (req.k or 0)
-        logits, state1 = self._prefill(self.params, {"tokens": tokens}, state1,
-                                       jnp.asarray(k_req, jnp.int32))
-        self.state = self._insert(self.state, state1,
-                                  jnp.asarray(slot, jnp.int32))
+        logits, state1 = self._prefill(self.params, {"tokens": jnp.asarray(toks)[None]},
+                                       state1, jnp.asarray(k_req, jnp.int32),
+                                       jnp.asarray(plen, jnp.int32))
+        if self.paged:
+            self.pool.ensure(slot, self._sparse_tokens(plen - 1))
+            self.state = self._insert_paged(
+                self.state, state1, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(self.pool.table[slot, :s1 // ps]))
+        else:
+            self.state = self._insert(self.state, state1,
+                                      jnp.asarray(slot, jnp.int32))
         s = _Slot(req=req, admitted_step=self.step_count)
         first = self._sample(logits[0, -1], req, 0)
         s.generated.append(first)
         self.slots[slot] = s
-        self.slot_pos[slot] = len(req.tokens)
+        self.slot_pos[slot] = plen
         self.slot_k[slot] = k_req
         self.next_tok[slot] = first
         self._maybe_retire(slot)
@@ -223,6 +323,10 @@ class ServeEngine:
         self.slot_pos[slot] = -1
         self.slot_k[slot] = self.swan.k_max if self.swan else 0
         self.next_tok[slot] = 0
+        if self.paged:
+            # pages return to the free list NOW — a request backfilled into
+            # this slot on the same engine step reuses them
+            self.pool.free_slot(slot)
 
     def _admit_pending(self) -> None:
         while self.n_active < self.n_slots:
@@ -230,6 +334,21 @@ class ServeEngine:
                         if r.arrival_step <= self.step_count), None)
             if nxt is None:
                 return
+            if self.paged:
+                # a request whose LIFETIME need exceeds the whole pool can
+                # never run — fail fast instead of waiting forever
+                lifetime = self.pool.pages_for(self._sparse_tokens(
+                    len(nxt.tokens) + nxt.max_new_tokens - 1))
+                if lifetime > self.pool.n_pages - 1:
+                    raise PagePoolExhausted(
+                        f"request {nxt.uid} needs {lifetime} pages over its "
+                        f"lifetime; pool holds {self.pool.n_pages - 1}")
+                # over-committed pool: hold admissions until retirements
+                # free enough pages for this prompt (FIFO head-of-line)
+                need = self.pool.pages_for(
+                    self._sparse_tokens(len(nxt.tokens) - 1))
+                if need > self.pool.free_pages:
+                    return
             self.queue.remove(nxt)
             slot = self.slots.index(None)
             self._admit(nxt, slot)
@@ -245,15 +364,38 @@ class ServeEngine:
         self._admit_pending()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if active:
-            logits, self.state = self._decode(
+            if self.paged:
+                # grow each sequence's page mapping to cover the token its
+                # decode step is about to winnow (raises PagePoolExhausted
+                # if the pool was over-committed past live-token capacity)
+                for i in active:
+                    self.pool.ensure(i, self._sparse_tokens(int(self.slot_pos[i])))
+                # ship only a power-of-two bucket of logical pages: the
+                # attention gather then materialises a view sized by LIVE
+                # pages, not max_seq (transient memory follows tokens too);
+                # one decode executable per bucket — O(log max_pages) total
+                p_used = max(1, max(int(self.pool.n_mapped[i])
+                                    for i in active))
+                p_bucket = 1
+                while p_bucket < p_used:
+                    p_bucket <<= 1
+                p_bucket = min(p_bucket, self.pool.pages_per_seq)
+                page_tab = jnp.asarray(self.pool.table[:, :p_bucket])
+            else:
+                page_tab = jnp.zeros((), jnp.int32)     # unused operand
+            logits, greedy, self.state = self._decode(
                 self.params, jnp.asarray(self.next_tok),
                 jnp.asarray(self.slot_pos), jnp.asarray(self.slot_k),
-                self.state)
-            logits = np.asarray(logits)      # one host transfer per step
+                page_tab, self.state)
+            greedy = np.asarray(greedy)                 # [B] ints — tiny
+            need_logits = any(self.slots[i].req.temperature > 0.0
+                              for i in active)
+            logits_h = np.asarray(logits) if need_logits else None
             for i in active:
                 self.slot_pos[i] += 1
                 s = self.slots[i]
-                tok = self._sample(logits[i], s.req, len(s.generated))
+                tok = (int(greedy[i]) if s.req.temperature <= 0.0
+                       else self._sample(logits_h[i], s.req, len(s.generated)))
                 s.generated.append(tok)
                 self.next_tok[i] = tok
                 self._maybe_retire(i)
@@ -278,6 +420,60 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def cache_report(self) -> Dict[str, Any]:
-        """Physical cache accounting (paper Eq. 1 across all slots)."""
-        return serve_cache_report(self.cfg, self.swan, self.n_slots,
-                                  self.max_seq)
+        """Cache accounting across all slots, on ONE byte basis: the
+        config's actual dtypes (the lockstep ``ServeSession`` keeps the
+        paper's fp16 Eq. 1 view; the engine reports deployable bytes).
+
+        Always reports BOTH ``reserved_bytes`` (physically allocated) and
+        ``live_bytes`` (addressable by live tokens right now).  The slab
+        engine commits the worst case up front, so the two coincide there
+        (checked against the actually-resident state arrays); the paged
+        engine is the one whose live bytes track generated tokens.
+        """
+        rep = serve_cache_report(self.cfg, self.swan, self.n_slots,
+                                 self.max_seq)
+        n_attn = sum(1 for i in range(self.cfg.n_layers)
+                     if self.cfg.layer_kind(i) == "attn")
+        if self.api.init_paged_state is None:
+            # recurrent-state families: no row-granular layout to page or
+            # audit — keep the analytic Eq. 1 report
+            rep["reserved_bytes"] = rep["live_bytes"] = rep["bytes"]
+            return rep
+        dense_phys = n_attn * hc.dense_cache_bytes(self.cfg, self.n_slots,
+                                                   self.max_seq)
+        if not self.paged:
+            # live = bytes resident in the state arrays; reserved = the
+            # analytic worst-case layout.  The slab engine commits the
+            # worst case at init, so the two must coincide — a real
+            # invariant that catches layout/accounting drift.
+            live = sum(x.nbytes for x in
+                       jax.tree_util.tree_leaves(self.state))
+            if self.swan is None:
+                reserved = dense_phys
+            else:
+                reserved = n_attn * (
+                    hc.cache_bytes(self.cfg, self.swan, self.n_slots,
+                                   self.max_seq)
+                    + self.n_slots * self.swan.buffer * 4)      # buf_pos
+            assert reserved == live, \
+                f"slab reserved {reserved} != resident {live}"
+            rep["reserved_bytes"] = rep["live_bytes"] = reserved
+            rep["bytes"] = reserved
+            if self.swan is not None:
+                rep["dense_bytes"] = dense_phys
+                rep["saving"] = 1.0 - reserved / dense_phys
+            return rep
+        page_b = pc.page_bytes(self.cfg, self.swan, self.pool.page_size)
+        overhead = (pc.ring_bytes(self.cfg, self.swan, self.n_slots)
+                    + self.pool.table.nbytes)
+        rep["mode"] += "+paged"
+        rep["slab_bytes"] = n_attn * hc.cache_bytes(
+            self.cfg, self.swan, self.n_slots, self.max_seq)
+        rep["reserved_bytes"] = self.pool.reserved_bytes(page_b) + overhead
+        rep["live_bytes"] = self.pool.live_bytes(page_b) + overhead
+        rep["bytes"] = rep["live_bytes"]
+        rep["dense_bytes"] = dense_phys
+        rep["saving"] = 1.0 - rep["live_bytes"] / dense_phys
+        rep.update(page_size=self.pool.page_size, n_pages=self.pool.n_pages,
+                   live_pages=self.pool.live_pages)
+        return rep

@@ -30,7 +30,11 @@ def calibrate_swan(api, cfg, params, calib_batch) -> Params:
 
 def serve_cache_report(cfg, swan, batch: int, max_seq: int) -> Dict[str, Any]:
     """Physical cache accounting (paper Eq. 1) shared by ServeSession and
-    ServeEngine.  ``swan`` None -> dense baseline."""
+    ServeEngine.  ``swan`` None -> dense baseline.
+
+    ``bytes`` here is the worst-case (slab) layout: every slot reserves
+    max_seq rows up front.  The paged engine overrides ``reserved_bytes``/
+    ``live_bytes`` with pool-granular numbers (ServeEngine.cache_report)."""
     if swan is None:
         fp = model_cache_footprint(cfg, _DenseLike(cfg.d_head), batch, max_seq)
         return {"mode": "dense", "bytes": fp.dense_bytes}

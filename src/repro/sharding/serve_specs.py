@@ -39,6 +39,18 @@ def _leaf_spec(name: str, ndim: int, mesh: Mesh) -> P:
     dp = dp_axes(mesh)
     leaf = name.split("/")[-1]
     # stacked caches have a leading layer/group axis (never sharded)
+    if "pool/" in name:
+        # paged sparse pool [L,n_pages,Kv,ps,k]: the page axis plays the
+        # role batch has in the slab layout (a page belongs to one slot)
+        # and within-page rows are the sequence dim — so the pool shards
+        # over the same mesh axes as the slab sparse leaves: pages over
+        # dp, page rows over 'model'.  (The page TABLE is a host-owned jit
+        # operand, not serve state; multi-host serving would partition it
+        # alongside a local-slot scheduler — see ROADMAP.)
+        if leaf in ("vals", "idx"):
+            return P(None, dp, None, "model", None)
+        if leaf == "scale":              # [L,n_pages,Kv,ps]
+            return P(None, dp, None, "model")
     if leaf in ("vals", "idx"):          # [L,B,Kv,S,k] packed sparse
         return P(None, dp, None, "model", None)
     if leaf == "scale":                  # [L,B,Kv,S]

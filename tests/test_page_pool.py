@@ -1,0 +1,114 @@
+"""Page-pool allocator invariants: random alloc/free/reuse schedules never
+alias two live sequences, exhaustion raises cleanly without corrupting
+state, and freed pages are reusable.  The randomized schedule runs under
+hypothesis when available (CI: requirements-dev.txt) and over a fixed set
+of numpy-seeded schedules otherwise."""
+import numpy as np
+import pytest
+
+from repro.runtime.page_pool import TRASH_PAGE, PagePool, PagePoolExhausted
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _assert_no_aliasing(pool: PagePool) -> None:
+    """Independent re-check (not via check_consistent): every non-trash
+    physical page appears in at most one slot's table, at most once."""
+    live = pool.table[pool.table != TRASH_PAGE]
+    assert live.size == len(set(live.tolist()))
+    assert TRASH_PAGE not in live
+
+
+def _run_schedule(n_pages, n_slots, ops):
+    page_size = 8
+    pages_per_seq = 6
+    pool = PagePool(n_pages, pages_per_seq, n_slots, page_size)
+    # host-side mirror of what each slot should have mapped
+    mirror = {s: 0 for s in range(n_slots)}
+    for op, slot, tokens in ops:
+        slot %= n_slots
+        if op == "free":
+            freed = pool.free_slot(slot)
+            assert freed == mirror[slot]
+            mirror[slot] = 0
+        else:
+            need = -(-min(tokens, page_size * pages_per_seq) // page_size)
+            try:
+                pool.ensure(slot, min(tokens, page_size * pages_per_seq))
+                mirror[slot] = max(mirror[slot], need)
+            except PagePoolExhausted:
+                # exhaustion must leave the pool fully consistent — the
+                # pages granted before running dry stay owned
+                mirror[slot] = int(pool.n_mapped[slot])
+        _assert_no_aliasing(pool)
+        pool.check_consistent()
+        assert pool.live_pages == sum(mirror.values())
+        assert pool.live_pages + pool.free_pages == n_pages - 1
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        n_pages=st.integers(2, 24),
+        n_slots=st.integers(1, 5),
+        ops=st.lists(
+            st.tuples(st.sampled_from(["ensure", "free"]),
+                      st.integers(0, 4),          # slot (mod n_slots)
+                      st.integers(0, 80)),        # tokens
+            max_size=60),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_random_schedule_never_aliases(n_pages, n_slots, ops):
+        _run_schedule(n_pages, n_slots, ops)
+else:
+    @pytest.mark.parametrize("seed", range(40))
+    def test_random_schedule_never_aliases(seed):
+        rng = np.random.default_rng(seed)
+        ops = [(("ensure", "free")[int(rng.integers(4)) == 0],
+                int(rng.integers(5)), int(rng.integers(81)))
+               for _ in range(60)]
+        _run_schedule(int(rng.integers(2, 25)), int(rng.integers(1, 6)), ops)
+
+
+def test_exhaustion_raises_cleanly():
+    pool = PagePool(4, 8, 2, 16)          # 3 usable pages
+    pool.ensure(0, 48)                    # takes all 3
+    with pytest.raises(PagePoolExhausted):
+        pool.ensure(1, 16)
+    pool.check_consistent()               # failed alloc corrupted nothing
+    assert pool.live_pages == 3 and pool.free_pages == 0
+    pool.free_slot(0)
+    pool.ensure(1, 16)                    # freed pages immediately reusable
+    assert pool.live_pages == 1
+
+
+def test_freed_pages_reused_without_aliasing():
+    pool = PagePool(6, 4, 3, 8)
+    pool.ensure(0, 16)
+    first = set(pool.table[0, :2].tolist())
+    pool.ensure(1, 16)
+    pool.free_slot(0)
+    pool.ensure(2, 16)                    # backfill grabs slot-0's pages
+    assert set(pool.table[2, :2].tolist()) == first
+    _assert_no_aliasing(pool)
+    pool.check_consistent()
+
+
+def test_trash_page_never_allocated():
+    pool = PagePool(5, 4, 1, 8)
+    pool.ensure(0, 32)                    # all 4 usable pages
+    assert TRASH_PAGE not in pool.table[0, :4].tolist()
+    # unmapped tail entries all point at the trash page
+    pool2 = PagePool(5, 4, 2, 8)
+    pool2.ensure(0, 8)
+    assert (pool2.table[0, 1:] == TRASH_PAGE).all()
+    assert (pool2.table[1, :] == TRASH_PAGE).all()
+
+
+def test_over_capacity_request_rejected():
+    pool = PagePool(16, 2, 1, 8)
+    with pytest.raises(ValueError, match="pages_per_seq"):
+        pool.ensure(0, 100)

@@ -1,0 +1,207 @@
+"""Paged sparse KV cache end-to-end: a paged mixed-length / mixed-k engine
+run is token-identical to the slab engine, live bytes track generated
+tokens (and are reclaimed on retirement), prompt bucketing bounds prefill
+compilations, and pool exhaustion surfaces cleanly."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SwanConfig, get_smoke_config
+from repro.launch.io import make_batch
+from repro.models import get_model
+from repro.runtime.page_pool import PagePoolExhausted
+from repro.runtime.serve_engine import Request, ServeEngine
+from repro.runtime.serve_loop import calibrate_swan
+
+PAGE = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32",
+                                                param_dtype="float32")
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    calib = make_batch(cfg, 2, 24, seed=3)
+    pj = calibrate_swan(api, cfg, params, calib)
+    absorbed = api.absorb(params, cfg, pj)
+    return cfg, api, params, absorbed, pj
+
+
+def _prompt(cfg, n, seed=0):
+    return np.asarray(make_batch(cfg, 1, n, seed=seed)["tokens"][0]).tolist()
+
+
+def _swan(**kw):
+    kw.setdefault("k_max", 8)
+    kw.setdefault("buffer", 4)
+    kw.setdefault("mode", "topk")
+    return SwanConfig(**kw)
+
+
+def _mixed_trace(cfg):
+    """Mixed prompt lengths, mixed per-request k, staggered arrivals."""
+    spec = [(6, 8, 8, 0), (11, 5, 4, 0), (17, 9, None, 2), (9, 6, 2, 4)]
+    return [Request(uid=f"m{i}", tokens=_prompt(cfg, n, seed=20 + i),
+                    max_new_tokens=g, k=k, arrival_step=a)
+            for i, (n, g, k, a) in enumerate(spec)]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: paged == slab, token for token
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_slab_mixed_length_mixed_k(setup):
+    """The acceptance bar: a paged mixed-length, mixed-k Poisson-style run
+    (fewer slots than requests -> queueing + backfill into freed slots,
+    whose pages were just reclaimed) reproduces the slab engine exactly."""
+    cfg, api, params, absorbed, pj = setup
+    kw = dict(swan=_swan(), projections=pj, max_seq=64, n_slots=2)
+    slab = ServeEngine(cfg, absorbed, **kw)
+    want = {c.uid: c.tokens for c in slab.run(_mixed_trace(cfg))}
+
+    paged = ServeEngine(cfg, absorbed, paged=True, page_size=PAGE, **kw)
+    got = {c.uid: c.tokens for c in paged.run(_mixed_trace(cfg))}
+    assert got == want
+    assert paged.pool.live_pages == 0          # drained -> fully reclaimed
+    paged.pool.check_consistent()
+    # mixed-k still shares one compiled decode executable per page-count
+    # bucket (max_seq/PAGE = 4 pages -> buckets {1,2,4}: at most 3)
+    assert paged.decode_cache_size == -1 or paged.decode_cache_size <= 3
+
+
+def test_overcommitted_pool_is_token_identical(setup):
+    """A pool smaller than worst case: admissions wait for retirements to
+    free pages, and outputs still match the slab engine."""
+    cfg, api, params, absorbed, pj = setup
+    kw = dict(swan=_swan(), projections=pj, max_seq=64, n_slots=2)
+    want = {c.uid: c.tokens for c in
+            ServeEngine(cfg, absorbed, **kw).run(_mixed_trace(cfg))}
+    # 64/16 = 4 pages/slot worst case; grant only 5 usable pages for 2 slots
+    paged = ServeEngine(cfg, absorbed, paged=True, page_size=PAGE,
+                        n_pages=6, **kw)
+    got = {c.uid: c.tokens for c in paged.run(_mixed_trace(cfg))}
+    assert got == want
+    rep = paged.cache_report()
+    assert rep["reserved_bytes"] < ServeEngine(
+        cfg, absorbed, paged=True, page_size=PAGE, **kw
+    ).cache_report()["reserved_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Live-byte accounting
+# ---------------------------------------------------------------------------
+
+def test_live_bytes_track_tokens_and_reclaim(setup):
+    cfg, api, params, absorbed, pj = setup
+    eng = ServeEngine(cfg, absorbed, swan=_swan(buffer=2), projections=pj,
+                      max_seq=64, n_slots=2, paged=True, page_size=8)
+    for r in _mixed_trace(cfg):
+        eng.submit(r)
+    live, retired_at = [], []
+    while not eng.done:
+        n_ret = eng.step()
+        live.append(eng.cache_report()["live_bytes"])
+        if n_ret:
+            retired_at.append(len(live) - 1)
+    rep = eng.cache_report()
+    # grows with generated tokens, stays under slab residency, reclaims
+    assert any(b2 > b1 for b1, b2 in zip(live, live[1:]))
+    assert max(live) < rep["slab_bytes"]
+    assert min(live[retired_at[0]:]) < max(live)
+    assert rep["live_pages"] == 0
+    assert rep["live_bytes"] < rep["reserved_bytes"]
+
+
+def test_slab_engine_reserved_equals_live(setup):
+    """The slab engine's analytic worst-case layout must coincide with the
+    bytes actually resident in its state arrays (asserted inside
+    cache_report) — for SWAN and dense engines alike."""
+    cfg, api, params, absorbed, pj = setup
+    rep = ServeEngine(cfg, absorbed, swan=_swan(), projections=pj,
+                      max_seq=64, n_slots=2).cache_report()
+    assert rep["reserved_bytes"] == rep["live_bytes"]
+    rep_d = ServeEngine(cfg, params, max_seq=64, n_slots=2).cache_report()
+    assert rep_d["reserved_bytes"] == rep_d["live_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Failure modes
+# ---------------------------------------------------------------------------
+
+def test_never_fitting_request_fails_fast(setup):
+    """A request whose lifetime page need exceeds the whole pool raises at
+    admission instead of livelocking the queue."""
+    cfg, api, params, absorbed, pj = setup
+    eng = ServeEngine(cfg, absorbed, swan=_swan(), projections=pj,
+                      max_seq=64, n_slots=1, paged=True, page_size=PAGE,
+                      n_pages=2)    # 1 usable page = 16 sparse tokens
+    with pytest.raises(PagePoolExhausted, match="lifetime"):
+        eng.run([Request(uid="boom", tokens=_prompt(cfg, 30),
+                         max_new_tokens=20)])
+
+
+def test_mid_decode_exhaustion_raises_cleanly(setup):
+    """Two sequences that each fit alone but jointly outgrow an
+    over-committed pool exhaust it mid-decode."""
+    cfg, api, params, absorbed, pj = setup
+    eng = ServeEngine(cfg, absorbed, swan=_swan(), projections=pj,
+                      max_seq=64, n_slots=2, paged=True, page_size=PAGE,
+                      n_pages=4)    # 3 usable pages; each request peaks at 2
+    reqs = [Request(uid=f"g{i}", tokens=_prompt(cfg, 8, seed=i),
+                    max_new_tokens=24) for i in range(2)]
+    with pytest.raises(PagePoolExhausted):
+        eng.run(reqs)
+    eng.pool.check_consistent()           # failed alloc corrupted nothing
+
+
+def test_paged_requires_swan(setup):
+    cfg, api, params, absorbed, pj = setup
+    with pytest.raises(ValueError, match="SWAN"):
+        ServeEngine(cfg, params, max_seq=64, n_slots=1, paged=True)
+    with pytest.raises(ValueError, match="divisible"):
+        ServeEngine(cfg, absorbed, swan=_swan(), projections=pj,
+                    max_seq=60, n_slots=1, paged=True, page_size=PAGE)
+
+
+# ---------------------------------------------------------------------------
+# Satellites: prompt bucketing + device-side greedy sampling
+# ---------------------------------------------------------------------------
+
+def test_bucketing_bounds_prefill_compilations(setup):
+    """Six distinct prompt lengths spanning two power-of-two buckets must
+    compile at most two prefill executables — and produce exactly the
+    tokens an unbucketed engine produces."""
+    cfg, api, params, absorbed, pj = setup
+    lens = [5, 6, 7, 9, 10, 12]                 # buckets {8, 16}
+    reqs = lambda: [Request(uid=f"b{i}", tokens=_prompt(cfg, n, seed=40 + i),
+                            max_new_tokens=4)
+                    for i, n in enumerate(lens)]
+    kw = dict(swan=_swan(), projections=pj, max_seq=64, n_slots=2)
+    bucketed = ServeEngine(cfg, absorbed, **kw)
+    got = {c.uid: c.tokens for c in bucketed.run(reqs())}
+    plain = ServeEngine(cfg, absorbed, bucket_prompts=False, **kw)
+    want = {c.uid: c.tokens for c in plain.run(reqs())}
+    assert got == want
+    if bucketed.prefill_cache_size != -1:       # jit cache introspectable
+        assert bucketed.prefill_cache_size <= 2
+        assert plain.prefill_cache_size == len(set(lens))
+
+
+def test_mixed_greedy_and_sampled_matches_slab(setup):
+    """Device-side argmax serves the greedy lane while a temperature>0
+    request in the same batch still gets host-side sampling — identically
+    in paged and slab engines."""
+    cfg, api, params, absorbed, pj = setup
+    reqs = lambda: [
+        Request(uid="greedy", tokens=_prompt(cfg, 9, seed=1), max_new_tokens=6),
+        Request(uid="hot", tokens=_prompt(cfg, 7, seed=2), max_new_tokens=6,
+                temperature=0.7, seed=13),
+    ]
+    kw = dict(swan=_swan(), projections=pj, max_seq=64, n_slots=2)
+    slab = {c.uid: c.tokens
+            for c in ServeEngine(cfg, absorbed, **kw).run(reqs())}
+    paged = {c.uid: c.tokens
+             for c in ServeEngine(cfg, absorbed, paged=True,
+                                  page_size=PAGE, **kw).run(reqs())}
+    assert slab == paged
