@@ -36,6 +36,10 @@ def main():
                     help="also run the paged sparse cache (memory follows "
                          "live tokens — see repro.core.paged_cache)")
     ap.add_argument("--page-size", type=int, default=32)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: power-of-two tokens per chunk — "
+                         "one chunk per engine step, so long admissions "
+                         "never stall active decodes")
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--buffer", type=int, default=16)
     ap.add_argument("--quantize", action="store_true")
@@ -73,7 +77,8 @@ def main():
               f"{engine.step_count} steps) | cache {rep['bytes'] / 1e6:6.2f} MB"
               + (f" ({rep['saving']:.0%} saved)" if "saving" in rep else ""))
 
-    dense = ServeEngine(cfg, params, max_seq=args.max_seq, n_slots=args.slots)
+    dense = ServeEngine(cfg, params, max_seq=args.max_seq, n_slots=args.slots,
+                        prefill_chunk=args.prefill_chunk)
     bench(dense, requests([None]), "dense")
 
     if not args.no_swan:
@@ -84,7 +89,8 @@ def main():
         swan = SwanConfig(k_max=k_max, buffer=args.buffer, mode="topk",
                           quantize=args.quantize)
         eng = ServeEngine(cfg, absorbed, swan=swan, projections=projections,
-                          max_seq=args.max_seq, n_slots=args.slots)
+                          max_seq=args.max_seq, n_slots=args.slots,
+                          prefill_chunk=args.prefill_chunk)
         # per-request runtime-tunable compression: mix full and half k
         bench(eng, requests([k_max, max(k_max // 2, 1)]), "swan")
         print(f"        decode executables for the mixed-k batch: "
@@ -93,7 +99,8 @@ def main():
             pg = ServeEngine(cfg, absorbed, swan=swan,
                              projections=projections, max_seq=args.max_seq,
                              n_slots=args.slots, paged=True,
-                             page_size=args.page_size)
+                             page_size=args.page_size,
+                             prefill_chunk=args.prefill_chunk)
             bench(pg, requests([k_max, max(k_max // 2, 1)]), "paged")
             rep = pg.cache_report()
             print(f"        paged: slab layout would reserve "

@@ -117,16 +117,19 @@ def _write_sparse(side: Params, packed: Params, idx3) -> Params:
 
 def _write_sparse_at(side: Params, packed: Params, idx_b: jnp.ndarray) -> Params:
     """Write packed single vectors [B, Kv, 1, ...] at per-sequence sparse
-    positions ``idx_b`` [B] (decode: each sequence evicts its own token)."""
+    positions ``idx_b`` [B] (decode: each sequence evicts its own token).
+    Out-of-range positions (dead lanes park at S) are dropped."""
     B = idx_b.shape[0]
     bi = jnp.arange(B)
     out = dict(side)
     out["vals"] = side["vals"].at[bi, :, idx_b].set(
-        packed["vals"][:, :, 0].astype(side["vals"].dtype))
+        packed["vals"][:, :, 0].astype(side["vals"].dtype), mode="drop")
     if "idx" in side:
-        out["idx"] = side["idx"].at[bi, :, idx_b].set(packed["idx"][:, :, 0])
+        out["idx"] = side["idx"].at[bi, :, idx_b].set(packed["idx"][:, :, 0],
+                                                      mode="drop")
     if "scale" in side:
-        out["scale"] = side["scale"].at[bi, :, idx_b].set(packed["scale"][:, :, 0])
+        out["scale"] = side["scale"].at[bi, :, idx_b].set(
+            packed["scale"][:, :, 0], mode="drop")
     return out
 
 
@@ -143,10 +146,17 @@ def decode_evict_winnow(cache: Params, swan, k_hat: jnp.ndarray,
     (paper's bt=0 ablation) the new token itself is winnowed at ``pos`` and
     there are no ring updates.  While ``old_pos < 0`` the clamped
     ``write_idx = 0`` write is garbage that validity masks hide.
+
+    Dead lanes (``pos < 0``: free slots, and slots mid chunked-prefill —
+    whose ring holds REAL tokens a garbage write must not evict) keep their
+    ring state untouched; the caller must also drop their sparse write
+    (slab: park ``write_idx`` out of range; paged: redirect to the trash
+    page).
     """
     B = k_hat.shape[0]
     b = swan.buffer
     pos = per_seq_pos(pos, B)
+    dead = pos < 0                                                  # [B]
     if b == 0:   # winnow immediately, no ring
         kt = k_hat.transpose(0, 2, 1, 3)
         vt = v_hat.transpose(0, 2, 1, 3)
@@ -165,9 +175,12 @@ def decode_evict_winnow(cache: Params, swan, k_hat: jnp.ndarray,
     kt = k_hat.transpose(0, 2, 1, 3).astype(cache["buf_k"].dtype)   # [B,Kv,1,dh]
     vt = v_hat.transpose(0, 2, 1, 3).astype(cache["buf_v"].dtype)
     ring = {
-        "buf_k": cache["buf_k"].at[bi, :, slot].set(kt[:, :, 0]),
-        "buf_v": cache["buf_v"].at[bi, :, slot].set(vt[:, :, 0]),
-        "buf_pos": cache["buf_pos"].at[bi, slot].set(pos),
+        "buf_k": jnp.where(dead[:, None, None, None], cache["buf_k"],
+                           cache["buf_k"].at[bi, :, slot].set(kt[:, :, 0])),
+        "buf_v": jnp.where(dead[:, None, None, None], cache["buf_v"],
+                           cache["buf_v"].at[bi, :, slot].set(vt[:, :, 0])),
+        "buf_pos": jnp.where(dead[:, None], cache["buf_pos"],
+                             cache["buf_pos"].at[bi, slot].set(pos)),
     }
     return write_idx, packed_k, packed_v, ring
 
@@ -175,9 +188,13 @@ def decode_evict_winnow(cache: Params, swan, k_hat: jnp.ndarray,
 def swan_cache_insert_decode(cache: Params, swan, cfg, k_hat: jnp.ndarray,
                              v_hat: jnp.ndarray, pos, k_act=None) -> Params:
     """One decode step: evict+winnow the ring slot's occupant, insert the new
-    rotated k̂/v̂ [B, 1, Kv, dh] at position ``pos`` (scalar or [B])."""
+    rotated k̂/v̂ [B, 1, Kv, dh] at position ``pos`` (scalar or [B]).  Dead
+    lanes (pos < 0) are no-ops: their sparse write parks at S (dropped)."""
     write_idx, packed_k, packed_v, ring = decode_evict_winnow(
         cache, swan, k_hat, v_hat, pos, k_act)
+    S = cache["k"]["vals"].shape[2]
+    write_idx = jnp.where(per_seq_pos(pos, k_hat.shape[0]) >= 0,
+                          write_idx, S)
     out = dict(cache)
     out.update(ring)
     out["k"] = _write_sparse_at(cache["k"], packed_k, write_idx)
@@ -238,6 +255,98 @@ def swan_cache_insert_prefill(cache: Params, swan, cfg, k_hat: jnp.ndarray,
         ring_v.astype(cache["buf_v"].dtype))
     out["buf_pos"] = cache["buf_pos"].at[:, slots].set(
         jnp.broadcast_to(ring_pos[None], (B, ring_pos.shape[0])))
+    return out
+
+
+def chunk_evict_winnow(cache: Params, swan, k_hat: jnp.ndarray,
+                       v_hat: jnp.ndarray, start, true_len, k_act=None):
+    """Bulk analogue of ``decode_evict_winnow`` for a prefill CHUNK of S
+    (padded) tokens at absolute positions [start, start + true_len) —
+    chunked prefill resumes a cache already holding tokens [0, start).
+
+    Conceptually the chunk performs ``true_len`` decode-style insertions,
+    each popping its ring slot's occupant.  The popped set is exactly
+    positions [start - b, start + true_len - b): the first ``true_len``
+    entries of the position-ordered sequence
+
+        combined = [ring occupants at start-b .. start-1 ‖ chunk tokens]
+
+    and the new ring holds positions [start + true_len - b, start +
+    true_len) — entries [true_len, true_len + b) of the same sequence, at
+    their natural slots (t % b), so the ring lands exactly where a
+    monolithic ``true_len``-anchored prefill of start + true_len tokens
+    would put it.
+
+    Returns ``(dest, packed_k, packed_v, ring_updates)``: the caller
+    commits the S packed vectors CONTIGUOUSLY at sparse positions
+    [dest, dest + S), dest = max(start - b, 0).  Entries past position
+    start + true_len - b are not-yet-valid overshoot (bucket padding /
+    future-ring tokens): every such position is rewritten — by a later
+    chunk's winnow window (windows of consecutive chunks overlap-cover) or
+    by its decode-time eviction — before the sparse validity frontier
+    (``sparse_len``) reaches it, same mechanism as the bucketed monolithic
+    prefill's overshoot.
+    """
+    B, S = k_hat.shape[:2]
+    b = swan.buffer
+    start = jnp.asarray(start, jnp.int32)
+    true_len = jnp.asarray(true_len, jnp.int32)
+    kt = k_hat.transpose(0, 2, 1, 3)                     # [B, Kv, S, dh]
+    vt = v_hat.transpose(0, 2, 1, 3)
+    if b == 0:   # winnow immediately, no ring
+        return (start, winnow_vector(kt, swan, "k", k_act),
+                winnow_vector(vt, swan, "v", k_act), {})
+    # position-ordered old ring: entry j holds position start - b + j
+    # ([start-b, start) spans every residue mod b exactly once; entries with
+    # negative position read never-written slots — junk skipped below)
+    ring_order = jnp.mod(start - b + jnp.arange(b), b)   # [b]
+    comb_k = jnp.concatenate(
+        [cache["buf_k"][:, :, ring_order].astype(kt.dtype), kt], axis=2)
+    comb_v = jnp.concatenate(
+        [cache["buf_v"][:, :, ring_order].astype(vt.dtype), vt], axis=2)
+    # winnow the popped set: S entries starting at combined index
+    # b - min(start, b) (skips the empty pre-sequence slots while start < b)
+    # -> positions [max(start - b, 0), max(start - b, 0) + S)
+    w_off = jnp.clip(b - start, 0, b)
+    dest = jnp.maximum(start - b, 0)
+    packed_k = winnow_vector(
+        jax.lax.dynamic_slice_in_dim(comb_k, w_off, S, axis=2),
+        swan, "k", k_act)
+    packed_v = winnow_vector(
+        jax.lax.dynamic_slice_in_dim(comb_v, w_off, S, axis=2),
+        swan, "v", k_act)
+    # new ring: positions end - b + j at slots (end - b + j) % b
+    end = start + true_len
+    tail = end - b + jnp.arange(b)
+    slots = jnp.mod(tail, b)
+    r_k = jax.lax.dynamic_slice_in_dim(comb_k, true_len, b, axis=2)
+    r_v = jax.lax.dynamic_slice_in_dim(comb_v, true_len, b, axis=2)
+    ring_pos = jnp.where(tail >= 0, tail, -1).astype(jnp.int32)
+    ring = {
+        "buf_k": cache["buf_k"].at[:, :, slots].set(
+            r_k.astype(cache["buf_k"].dtype)),
+        "buf_v": cache["buf_v"].at[:, :, slots].set(
+            r_v.astype(cache["buf_v"].dtype)),
+        "buf_pos": cache["buf_pos"].at[:, slots].set(
+            jnp.broadcast_to(ring_pos[None], (B, b))),
+    }
+    return dest, packed_k, packed_v, ring
+
+
+def swan_cache_insert_prefill_chunk(cache: Params, swan, cfg,
+                                    k_hat: jnp.ndarray, v_hat: jnp.ndarray,
+                                    start, true_len, k_act=None) -> Params:
+    """Insert one prefill chunk (rotated k̂/v̂ [B, S, Kv, dh] at positions
+    [start, start + true_len)) into a slab cache already holding tokens
+    [0, start) — the cache-resume analogue of ``swan_cache_insert_prefill``.
+    ``start`` / ``true_len`` are traced scalars; one executable serves every
+    chunk of a given padded size S."""
+    dest, packed_k, packed_v, ring = chunk_evict_winnow(
+        cache, swan, k_hat, v_hat, start, true_len, k_act)
+    out = dict(cache)
+    out.update(ring)
+    out["k"] = _write_sparse(cache["k"], packed_k, dest)
+    out["v"] = _write_sparse(cache["v"], packed_v, dest)
     return out
 
 

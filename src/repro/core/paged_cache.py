@@ -42,10 +42,13 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.hybrid_cache import (_val_dtype, decode_evict_winnow,
-                                     packed_vector_bytes)
+from repro.core.hybrid_cache import (_val_dtype, chunk_evict_winnow,
+                                     decode_evict_winnow,
+                                     packed_vector_bytes, per_seq_pos)
 
 Params = Dict[str, Any]
+
+TRASH_PAGE = 0          # physical page 0, never allocated (repro.runtime.page_pool)
 
 
 # ---------------------------------------------------------------------------
@@ -118,18 +121,72 @@ def paged_insert_decode(cache: Params, swan, cfg, k_hat: jnp.ndarray,
     indirected THROUGH the page table: sparse position ``t`` ->
     (page_tab[b, t // ps], t % ps).  While a sequence has no sparse tokens
     its table row is all-trash, so the clamped t=0 garbage write lands in
-    page 0 where masks hide it.
+    page 0 where masks hide it.  Dead lanes (pos < 0: free slots and slots
+    mid chunked-prefill) write to the trash page outright.
     """
     ps = cache["pool"]["k"]["vals"].shape[2]
     write_idx, packed_k, packed_v, ring = decode_evict_winnow(
         cache, swan, k_hat, v_hat, pos, k_act)
+    write_idx = jnp.maximum(write_idx, 0)       # b=0 path passes raw pos
     phys = jnp.take_along_axis(page_tab, (write_idx // ps)[:, None], 1)[:, 0]
+    phys = jnp.where(per_seq_pos(pos, phys.shape[0]) >= 0, phys, TRASH_PAGE)
     row = write_idx % ps
     out = dict(cache)
     out.update(ring)
     out["pool"] = {
         "k": _pool_write_at(cache["pool"]["k"], packed_k, phys, row),
         "v": _pool_write_at(cache["pool"]["v"], packed_v, phys, row),
+    }
+    return out
+
+
+def _pool_write_rows(side: Params, packed: Params, phys: jnp.ndarray,
+                     row: jnp.ndarray) -> Params:
+    """Write packed vectors [1, Kv, S, ...] at physical (page, row)
+    addresses ``phys``/``row`` [S] — the chunked-prefill bulk write.
+    Distinct in-range positions map to distinct (page, row) pairs; the only
+    collisions are on the trash page, where any winner is fine."""
+    out = dict(side)
+    out["vals"] = side["vals"].at[phys, :, row].set(
+        packed["vals"][0].swapaxes(0, 1).astype(side["vals"].dtype))
+    if "idx" in side:
+        out["idx"] = side["idx"].at[phys, :, row].set(
+            packed["idx"][0].swapaxes(0, 1))
+    if "scale" in side:
+        out["scale"] = side["scale"].at[phys, :, row].set(
+            packed["scale"][0].swapaxes(0, 1))
+    return out
+
+
+def paged_insert_prefill_chunk(cache: Params, swan, cfg, k_hat: jnp.ndarray,
+                               v_hat: jnp.ndarray, start, true_len,
+                               page_row: jnp.ndarray, k_act=None) -> Params:
+    """Insert one prefill chunk ([1, S, Kv, dh] at positions
+    [start, start + true_len)) through the page table — the paged analogue
+    of ``hybrid_cache.swan_cache_insert_prefill_chunk``, sharing its
+    eviction/ring mechanics (``chunk_evict_winnow``).
+
+    ``page_row`` is THIS slot's page-table row (a prefix of length P).
+    Sparse position ``t`` lands at (page_row[t // ps], t % ps); positions
+    past the shipped prefix, and positions on not-yet-mapped pages
+    (row = trash), write to the trash page — they are overshoot that later
+    chunks rewrite once their pages exist.
+    """
+    ps = cache["pool"]["k"]["vals"].shape[2]
+    P = page_row.shape[0]
+    dest, packed_k, packed_v, ring = chunk_evict_winnow(
+        cache, swan, k_hat, v_hat, start, true_len, k_act)
+    S = packed_k["vals"].shape[2]
+    tok = dest + jnp.arange(S)                              # [S]
+    logical = tok // ps
+    phys = jnp.where(logical < P,
+                     page_row[jnp.minimum(logical, P - 1)], TRASH_PAGE)
+    row = tok % ps
+    out = dict(cache)
+    out.update(ring)
+    out["pool"] = {
+        "k": _pool_write_rows(cache["pool"]["k"], packed_k, phys, row),
+        "v": _pool_write_rows(cache["pool"]["v"], packed_v, phys, row),
     }
     return out
 

@@ -204,6 +204,120 @@ def swan_decode_attention(q_hat: jnp.ndarray, cache: Params, swan, cfg,
     return o.astype(q_hat.dtype)
 
 
+def _sparse_stats_bulk(qf: jnp.ndarray, k_side: Params, v_side: Params,
+                       swan, sp_len, dh: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Partial softmax stats of MANY queries ``qf [B, Kv, Q, dh]`` against
+    (the valid prefix of) a packed sparse cache — the chunked-prefill bulk
+    read.
+
+    The decode-shaped gather/scatter in ``_sparse_stats`` touches
+    O(Q · S · k) elements; with a chunk's Q = S_chunk · G queries that is
+    the wrong kernel shape.  Here each packed vector is expanded ONCE
+    (O(S · k) scatter, amortised over every query) into a chunk-local dense
+    transient and both sides become plain MXU dots — the multi-query
+    analogue.  The CACHE stays packed end to end and single-token decode
+    never takes this path, so the decompression-free serving property is
+    untouched; the [S, dh] view is the same transient scale a monolithic
+    prefill's fresh k̂/v̂ occupy.
+    """
+    B, Kv, Q, _ = qf.shape
+    S = k_side["vals"].shape[2]
+    k_max = swan.k_max
+    scale = 1.0 / math.sqrt(dh)
+    kv_ = _deq(k_side)                                 # [B,Kv,S,k]
+    vv_ = _deq(v_side)
+    if "idx" in k_side:
+        kd = unpack_dense(kv_, k_side["idx"], dh)      # [B,Kv,S,dh]
+        s_sp = _dot_f32("bjqd,bjtd->bjqt", qf.astype(kd.dtype), kd) * scale
+    else:                                              # truncate: low-rank dot
+        s_sp = _dot_f32("bjqk,bjtk->bjqt",
+                        qf[..., :k_max].astype(kv_.dtype), kv_) * scale
+    valid = jnp.arange(S)[None, None, None, :] < sp_len[:, None, None, None]
+    s_sp = jnp.where(valid, s_sp, -jnp.inf)
+    m = s_sp.max(-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(valid, jnp.exp(s_sp - m_safe[..., None]), 0.0)
+    l = p.sum(-1)
+    if "idx" in v_side:
+        vd = unpack_dense(vv_, v_side["idx"], dh)
+        o = _dot_f32("bjqt,bjtd->bjqd", p.astype(vd.dtype), vd)
+    else:
+        o = _dot_f32("bjqt,bjtk->bjqk", p.astype(vv_.dtype), vv_)
+        o = jnp.pad(o, ((0, 0),) * 3 + ((0, dh - k_max),))
+    return m_safe, l, o
+
+
+def swan_chunk_prefill_attention(q_hat: jnp.ndarray, k_hat: jnp.ndarray,
+                                 v_new: jnp.ndarray, cache: Params, swan,
+                                 cfg, start, true_len) -> jnp.ndarray:
+    """Attention for a prefill CHUNK resuming from a populated hybrid cache.
+
+    ``q_hat [B, S, Kv, G, dh]`` / ``k_hat [B, S, Kv, dh]`` / ``v_new
+    [B, S, Kv, dh]`` are the chunk's fresh rotated projections at absolute
+    positions [start, start + S); ``cache`` holds tokens [0, start) (a slab
+    layout, or a ``paged_logical_view`` of the slot's pages).  Joint exact
+    softmax per query over
+
+        [ winnowed sparse prefix [0, start-b) ‖ ring [start-b, start) ‖
+          chunk (causal) ]
+
+    — i.e. the chunk sees older tokens exactly as a decode step at the same
+    position would, and recent tokens (ring + chunk) dense.  Ring entries
+    are additionally masked to positions < start so a just-freed slot's
+    dirty ring (from the previous occupant, positions that may exceed
+    ``start``) never leaks into a new prompt's first chunks.  Chunk padding
+    keys sit at positions >= start + true_len > every real query position,
+    so the causal mask hides them; padded queries produce garbage rows the
+    caller discards.
+    """
+    B, S, Kv, G, dh = q_hat.shape
+    scale = 1.0 / math.sqrt(dh)
+    start = jnp.asarray(start, jnp.int32)
+    qf = q_hat.astype(jnp.float32).transpose(0, 2, 1, 3, 4)  # [B,Kv,S,G,dh]
+
+    sp_len = jnp.broadcast_to(jnp.maximum(start - swan.buffer, 0), (B,))
+    m_sp, l_sp, o_sp = _sparse_stats_bulk(qf.reshape(B, Kv, S * G, dh),
+                                          cache["k"], cache["v"], swan,
+                                          sp_len, dh)
+    m_sp = m_sp.reshape(B, Kv, S, G)
+    l_sp = l_sp.reshape(B, Kv, S, G)
+    o_sp = o_sp.reshape(B, Kv, S, G, dh)
+
+    # ---- dense side: [old ring ‖ chunk] -------------------------------------
+    kt = k_hat.transpose(0, 2, 1, 3)                         # [B,Kv,S,dh]
+    vt = v_new.transpose(0, 2, 1, 3)
+    bk = jnp.concatenate([cache["buf_k"], kt.astype(cache["buf_k"].dtype)],
+                         axis=2)                             # [B,Kv,b+S,dh]
+    bv = jnp.concatenate([cache["buf_v"], vt.astype(cache["buf_v"].dtype)],
+                         axis=2)
+    qpos = start + jnp.arange(S)                             # [S]
+    kpos = jnp.concatenate(
+        [cache["buf_pos"], jnp.broadcast_to(qpos[None], (B, S))], axis=1)
+    in_seq = jnp.concatenate(                                # [B, b+S]
+        [cache["buf_pos"] < start, jnp.ones((B, S), bool)], axis=1)
+    valid = ((kpos[:, None, :] >= 0)
+             & (kpos[:, None, :] <= qpos[None, :, None])
+             & in_seq[:, None, :])                           # [B, S, b+S]
+    s_b = _dot_f32("bjsgd,bjtd->bjsgt", qf.astype(bk.dtype), bk) * scale
+    s_b = jnp.where(valid[:, None, :, None, :], s_b, -jnp.inf)
+    m_b = s_b.max(-1)
+    m_b = jnp.where(jnp.isfinite(m_b), m_b, 0.0)
+    p_b = jnp.where(valid[:, None, :, None, :],
+                    jnp.exp(s_b - m_b[..., None]), 0.0)
+    l_b = p_b.sum(-1)
+    o_b = _dot_f32("bjsgt,bjtd->bjsgd", p_b.astype(bv.dtype), bv)
+
+    # ---- exact merge --------------------------------------------------------
+    m = jnp.maximum(m_sp, m_b)
+    c_sp = jnp.exp(m_sp - m)
+    c_b = jnp.exp(m_b - m)
+    denom = jnp.maximum(l_sp * c_sp + l_b * c_b, 1e-30)
+    o = (o_sp * c_sp[..., None] + o_b * c_b[..., None]) / denom[..., None]
+    return o.transpose(0, 2, 1, 3, 4).reshape(B, S, Kv * G, dh) \
+            .astype(q_hat.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Paged cache (repro.core.paged_cache): gather-via-page-table reads
 # ---------------------------------------------------------------------------

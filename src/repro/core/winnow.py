@@ -95,8 +95,11 @@ def truncate_pack(x: jnp.ndarray, k_max: int,
 
 def unpack_dense(vals: jnp.ndarray, idx: Optional[jnp.ndarray],
                  dh: int) -> jnp.ndarray:
-    """Reference decompression (oracle/tests ONLY — the serving path never
-    materialises this in HBM).  [..., k] -> [..., dh]."""
+    """Expand packed vectors to dense [..., k] -> [..., dh].  Used by the
+    reference oracle and by the chunked-prefill BULK read
+    (``swan_attention._sparse_stats_bulk``: expand once, amortised over a
+    chunk's many queries, into a chunk-local transient).  The single-token
+    decode path never calls this — the cache itself stays packed in HBM."""
     if idx is None:   # truncate mode
         pad = [(0, 0)] * (vals.ndim - 1) + [(0, dh - vals.shape[-1])]
         return jnp.pad(vals, pad)

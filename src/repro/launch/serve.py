@@ -57,7 +57,14 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="paged: physical pages in the shared pool "
                          "(default: full reservation; smaller over-commits)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="engine: chunked prefill — split prompts into "
+                         "power-of-two chunks, one chunk per engine step, "
+                         "so long admissions never stall decoding "
+                         "(default: monolithic admission)")
     args = ap.parse_args()
+    if args.prefill_chunk and not args.engine:
+        raise SystemExit("--prefill-chunk requires --engine")
     if args.paged and not (args.engine and args.swan):
         raise SystemExit("--paged requires --engine and --swan")
 
@@ -105,7 +112,8 @@ def _run_engine(cfg, params, swan, projections, args):
     eng = ServeEngine(cfg, params, swan=swan, projections=projections,
                       max_seq=args.max_seq, n_slots=args.batch,
                       paged=args.paged, page_size=args.page_size,
-                      n_pages=args.pool_pages)
+                      n_pages=args.pool_pages,
+                      prefill_chunk=args.prefill_chunk)
     n_req = args.requests or args.batch * 2
     k_cycle = ([None] if (swan is None or not args.mixed_k)
                else [swan.k_max, max(swan.k_max // 2, 1),

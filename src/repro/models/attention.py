@@ -227,13 +227,17 @@ def dense_cache_insert_decode(cache: Params, k: jnp.ndarray, v: jnp.ndarray,
                               pos_b: jnp.ndarray) -> Params:
     """Insert one token per sequence ([B, 1, Kv, dh]) at per-sequence
     positions ``pos_b`` [B] (continuous batching: sequences decode at
-    independent offsets)."""
+    independent offsets).  Dead lanes (pos < 0: free slots and slots mid
+    chunked-prefill, whose rows [0, start) hold REAL tokens) park at S and
+    are dropped — a clamped negative index would clobber row 0."""
+    S = cache["k"].shape[2]
+    idx = jnp.where(pos_b >= 0, pos_b, S)
     bi = jnp.arange(pos_b.shape[0])
     kt = k.transpose(0, 2, 1, 3).astype(cache["k"].dtype)   # [B,Kv,1,dh]
     vt = v.transpose(0, 2, 1, 3).astype(cache["v"].dtype)
     return {
-        "k": cache["k"].at[bi, :, pos_b].set(kt[:, :, 0]),
-        "v": cache["v"].at[bi, :, pos_b].set(vt[:, :, 0]),
+        "k": cache["k"].at[bi, :, idx].set(kt[:, :, 0], mode="drop"),
+        "v": cache["v"].at[bi, :, idx].set(vt[:, :, 0], mode="drop"),
     }
 
 

@@ -31,6 +31,10 @@ class ModelApi:
     # (cfg, swan, batch, max_seq, n_pages, page_size) -> paged state; None
     # when the family has no paged sparse layout (recurrent/encdec state)
     init_paged_state: Optional[Callable] = None
+    # (p, cfg, batch, state, slot, start, ...) -> (logits, state): advance
+    # one slot's prefill by a chunk against the BATCHED serve state; None
+    # when the family cannot resume a prefill mid-prompt (recurrent state)
+    prefill_chunk: Optional[Callable] = None
 
     def abstract_params(self, cfg):
         return jax.eval_shape(lambda: self.init_params(jax.random.PRNGKey(0), cfg))
@@ -68,6 +72,15 @@ def _tfm_prefill(p, cfg, batch, state, swan=None, proj=None, k_active=None,
     return tfm.lm_prefill(p, cfg, batch["tokens"], state, swan, proj,
                           batch.get("prefix_embeds"), k_active=k_active,
                           true_len=true_len)
+
+
+def _tfm_prefill_chunk(p, cfg, batch, state, slot, start, swan=None,
+                       proj=None, k_active=None, true_len=None,
+                       page_row=None, prefix_len=None):
+    return tfm.lm_prefill_chunk(p, cfg, batch["tokens"], state, slot, start,
+                                swan, proj, k_active=k_active,
+                                true_len=true_len, page_row=page_row,
+                                prefix_len=prefix_len)
 
 
 def _jamba_forward(p, cfg, batch):
@@ -110,13 +123,16 @@ def _jamba_collect(p, cfg, batch):
 _FAMILIES = {
     "dense": ModelApi(tfm.init_lm_params, _tfm_forward, tfm.init_caches,
                       _tfm_prefill, tfm.lm_decode_step, _tfm_collect,
-                      tfm.absorb_swan, tfm.init_paged_caches),
+                      tfm.absorb_swan, tfm.init_paged_caches,
+                      _tfm_prefill_chunk),
     "moe":   ModelApi(tfm.init_lm_params, _tfm_forward, tfm.init_caches,
                       _tfm_prefill, tfm.lm_decode_step, _tfm_collect,
-                      tfm.absorb_swan, tfm.init_paged_caches),
+                      tfm.absorb_swan, tfm.init_paged_caches,
+                      _tfm_prefill_chunk),
     "vlm":   ModelApi(tfm.init_lm_params, _tfm_forward, tfm.init_caches,
                       _tfm_prefill, tfm.lm_decode_step, _tfm_collect,
-                      tfm.absorb_swan, tfm.init_paged_caches),
+                      tfm.absorb_swan, tfm.init_paged_caches,
+                      _tfm_prefill_chunk),
     "hybrid": ModelApi(jamba.init_lm_params, _jamba_forward,
                        jamba.init_serve_state, _jamba_prefill,
                        jamba.decode_step, _jamba_collect, jamba.absorb_swan),

@@ -372,6 +372,170 @@ def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
     return x @ head.astype(x.dtype), caches
 
 
+def _swan_layer_prefill_chunk(lp: Params, p_qk_l, cache_l: Params, cfg, swan,
+                              x: jnp.ndarray, slot, start, true_len,
+                              positions, k_act=None, page_row=None,
+                              prefix_len: Optional[int] = None
+                              ) -> Tuple[jnp.ndarray, Params]:
+    """One layer of chunked prefill against the BATCHED serve state: slice
+    the slot's lanes, attend to [winnowed sparse prefix ‖ ring ‖ chunk],
+    commit the chunk at offset, and scatter the lanes back.  Only the
+    slot's lanes (and, paged, the slot's own pages) are touched — decode
+    steps for other slots interleave freely between chunks."""
+    Kv = cfg.n_kv_heads
+    q, k, v = attn.project_qkv(lp["attn"], cfg, x, positions)
+    q_hat = rotate_q(q, p_qk_l, Kv)                      # [1,S,Kv,G,dh]
+    k_hat = rotate_k(k, p_qk_l)
+
+    def take_lane(a):
+        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0)
+
+    def put_lane(big, one):
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, one.astype(big.dtype), slot, axis=0)
+
+    ring = {n: take_lane(cache_l[n]) for n in ("buf_k", "buf_v", "buf_pos")}
+    out_l = dict(cache_l)
+    if page_row is None:                                 # slab layout
+        lane = dict(ring)
+        lane["k"] = jax.tree_util.tree_map(take_lane, cache_l["k"])
+        lane["v"] = jax.tree_util.tree_map(take_lane, cache_l["v"])
+        view = lane
+        if prefix_len is not None and prefix_len < lane["k"]["vals"].shape[2]:
+            # attend to a STATIC power-of-two prefix of the slab rows (the
+            # caller buckets start+S up): the bulk read's transient then
+            # follows the prompt so far, not max_seq — one executable per
+            # (chunk, prefix) bucket, O(log max_seq) total
+            view = dict(ring)
+            for n in ("k", "v"):
+                view[n] = jax.tree_util.tree_map(
+                    lambda a: jax.lax.slice_in_dim(a, 0, prefix_len, axis=2),
+                    lane[n])
+        o = swa.swan_chunk_prefill_attention(q_hat, k_hat, v, view, swan,
+                                             cfg, start, true_len)
+        lane = hc.swan_cache_insert_prefill_chunk(lane, swan, cfg, k_hat, v,
+                                                  start, true_len, k_act=k_act)
+        for n in ("k", "v"):
+            out_l[n] = jax.tree_util.tree_map(put_lane, cache_l[n], lane[n])
+    else:                                                # paged layout
+        lane = dict(ring)
+        lane["pool"] = cache_l["pool"]
+        view = swa.paged_logical_view(lane, page_row[None])
+        o = swa.swan_chunk_prefill_attention(q_hat, k_hat, v, view, swan,
+                                             cfg, start, true_len)
+        lane = pc.paged_insert_prefill_chunk(lane, swan, cfg, k_hat, v,
+                                             start, true_len, page_row,
+                                             k_act=k_act)
+        out_l["pool"] = lane["pool"]
+    for n in ("buf_k", "buf_v", "buf_pos"):
+        out_l[n] = put_lane(cache_l[n], lane[n])
+    return attn.output_proj(lp["attn"], o), out_l
+
+
+def _dense_layer_prefill_chunk(lp: Params, cache_l: Params, cfg,
+                               x: jnp.ndarray, slot, start, positions,
+                               prefix_len: Optional[int] = None
+                               ) -> Tuple[jnp.ndarray, Params]:
+    """Chunked prefill for the dense-cache baseline: insert the chunk's K/V
+    at [start, start+S) in the slot's lane, then causal attention of the
+    chunk against the lane's first ``prefix_len`` rows (a static bucket
+    >= start + S; rows past the chunk are masked by the causal offset)."""
+    q, k, v = attn.project_qkv(lp["attn"], cfg, x, positions)
+    lane = jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0), cache_l)
+    lane = attn.dense_cache_insert(lane, k, v, start)
+    view = lane
+    if prefix_len is not None and prefix_len < lane["k"].shape[2]:
+        view = jax.tree_util.tree_map(
+            lambda a: jax.lax.slice_in_dim(a, 0, prefix_len, axis=2), lane)
+    kc = view["k"].transpose(0, 2, 1, 3)                 # [1, P, Kv, dh]
+    vc = view["v"].transpose(0, 2, 1, 3)
+    if kc.shape[1] > attn.DENSE_ATTN_MAX_SEQ:
+        o = attn.blocked_attention(q, kc, vc, causal=True, q_offset=start)
+    else:
+        o = attn.dense_attention(q, kc, vc, mask=None, causal=True,
+                                 q_offset=start)
+    cache_l = jax.tree_util.tree_map(
+        lambda big, one: jax.lax.dynamic_update_slice_in_dim(
+            big, one.astype(big.dtype), slot, axis=0), cache_l, lane)
+    return attn.output_proj(lp["attn"], o), cache_l
+
+
+def lm_prefill_chunk(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
+                     slot, start, swan=None,
+                     projections: Optional[Params] = None,
+                     k_active=None, true_len=None, page_row=None,
+                     prefix_len: Optional[int] = None
+                     ) -> Tuple[jnp.ndarray, Params]:
+    """Advance ONE slot's prefill by a chunk of S tokens against the
+    engine's BATCHED serve state (chunked prefill — cache-resume mode).
+
+    ``tokens [1, S]``: the chunk, padded to a power-of-two bucket;
+    ``slot`` / ``start`` / ``true_len`` are traced scalars — the slot index
+    in the batched state, the absolute position of the chunk's first token,
+    and the number of real tokens in this chunk.  One executable serves
+    every chunk of a given padded size.
+
+    The chunk attends causally to [already-cached tokens ‖ chunk]: with
+    SWAN, positions [0, start) are seen exactly as a decode step at the
+    same position sees them (winnowed sparse prefix + dense ring) while
+    in-chunk positions stay dense, and the hybrid cache is advanced so that
+    after the chunk the ring holds [start + true_len - b, start + true_len)
+    — indistinguishable at the boundary from a monolithic prefill of
+    start + true_len tokens.  ``page_row`` (the slot's page-table row)
+    routes sparse reads/writes through the shared page pool instead.
+
+    ``prefix_len`` (STATIC python int >= start + S, power-of-two-bucketed
+    by the caller) bounds the attention read to the lane's first rows on
+    the slab/dense layouts, so the bulk-read transient follows the prompt
+    so far instead of max_seq (the paged layout is already bounded by its
+    shipped ``page_row`` prefix).
+
+    VLM prefix embeddings are not supported on the chunked path (the
+    engine's monolithic admission handles those prompts).
+
+    Returns (logits at the chunk's last real token [1, 1, V], caches).
+    """
+    B, S = tokens.shape
+    start = jnp.asarray(start, jnp.int32)
+    true_len = jnp.asarray(S if true_len is None else true_len, jnp.int32)
+    use_swan = swan is not None and swan.enabled
+    if page_row is not None and not use_swan:
+        raise ValueError("page_row given but SWAN disabled — only the "
+                         "sparse sides are paged")
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(start + jnp.arange(S)[None], (B, S))
+    if cfg.pos == "learned":
+        x = x + jnp.take(p["pos_embed"], jnp.minimum(
+            positions, p["pos_embed"].shape[0] - 1), axis=0).astype(x.dtype)
+    x = shard(x, "residual")
+    k_req = None if k_active is None else jnp.asarray(k_active, jnp.int32)
+
+    def body(x, xs):
+        lp, cache_l, p_qk_l, k_l = xs
+        h = apply_norm(lp["ln1"], cfg, x)
+        if use_swan:
+            k_eff = k_l if k_req is None else jnp.minimum(k_l, k_req)
+            h, cache_l = _swan_layer_prefill_chunk(
+                lp, p_qk_l, cache_l, cfg, swan, h, slot, start, true_len,
+                positions, k_act=k_eff, page_row=page_row,
+                prefix_len=prefix_len)
+        else:
+            h, cache_l = _dense_layer_prefill_chunk(lp, cache_l, cfg, h,
+                                                    slot, start, positions,
+                                                    prefix_len=prefix_len)
+        x = shard(x + h, "residual")
+        x = shard(_layer_ffn(lp, cfg, x), "residual")
+        return x, cache_l
+
+    pq, k_arr = _swan_scan_xs(cfg, swan, projections, use_swan)
+    x, caches = jax.lax.scan(body, x, (p["layers"], caches, pq, k_arr))
+    x = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    x = apply_norm(p["ln_f"], cfg, x)
+    head = p["embed"].T if cfg.tie_embeddings else p["head"]
+    return x @ head.astype(x.dtype), caches
+
+
 def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
                    swan=None, projections: Optional[Params] = None,
                    k_active=None, page_tab=None) -> Tuple[jnp.ndarray, Params]:

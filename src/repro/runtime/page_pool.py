@@ -18,7 +18,13 @@ Invariants (enforced, and property-tested in tests/test_page_pool.py):
   * ``free_slot`` returns pages to the free list immediately, so a request
     backfilled into the slot on the same engine step reuses them;
   * exhaustion raises ``PagePoolExhausted`` (a clean, catchable error)
-    without corrupting allocator state.
+    without corrupting allocator state;
+  * reservations (``reserve``): a chunked prefill maps its pages one chunk
+    at a time, so admission places a HOLD for the prompt's whole winnow
+    need — the slot's own allocations consume the hold first, and no other
+    slot may dip into held stock.  This closes the check-without-reserve
+    race where a decoding slot's growth (or a same-step second admission)
+    starves an already-admitted in-flight prefill.
 """
 from __future__ import annotations
 
@@ -26,7 +32,7 @@ from typing import List
 
 import numpy as np
 
-TRASH_PAGE = 0
+from repro.core.paged_cache import TRASH_PAGE  # single source of truth
 
 
 class PagePoolExhausted(RuntimeError):
@@ -57,6 +63,7 @@ class PagePool:
         self.table = np.full((n_slots, pages_per_seq), TRASH_PAGE, np.int32)
         self.n_mapped = np.zeros((n_slots,), np.int64)
         self._owner = np.full((n_pages,), -1, np.int64)   # -1 = free/trash
+        self._held = np.zeros((n_slots,), np.int64)       # outstanding holds
 
     # ------------------------------------------------------------------
     # Allocation
@@ -76,7 +83,23 @@ class PagePool:
         while self.n_mapped[slot] < need:
             self._alloc_one(slot)
 
+    def reserve(self, slot: int, n_pages: int) -> None:
+        """Place a HOLD of ``n_pages`` for ``slot`` (a chunked prefill's
+        whole winnow need, mapped chunk by chunk later).  The caller must
+        have checked ``free_pages`` first — reserving past it is a bug."""
+        if n_pages > self.free_pages:
+            raise PagePoolExhausted(
+                f"cannot hold {n_pages} pages for slot {slot}: only "
+                f"{self.free_pages} unheld pages free")
+        self._held[slot] += n_pages
+
     def _alloc_one(self, slot: int) -> int:
+        if self._held[slot] > 0:
+            self._held[slot] -= 1          # consume the slot's own hold
+        elif len(self._free) - int(self._held.sum()) <= 0:
+            raise PagePoolExhausted(
+                f"page pool exhausted: {len(self._free)} free pages all "
+                f"held for in-flight prefills (slot {slot} needs one more)")
         if not self._free:
             raise PagePoolExhausted(
                 f"page pool exhausted: {self.n_pages - 1} usable pages, "
@@ -89,8 +112,8 @@ class PagePool:
         return p
 
     def free_slot(self, slot: int) -> int:
-        """Retire ``slot``: return its pages to the free list.  Returns the
-        number of pages freed."""
+        """Retire ``slot``: return its pages to the free list (and drop any
+        outstanding hold).  Returns the number of pages freed."""
         n = int(self.n_mapped[slot])
         for j in range(n):
             p = int(self.table[slot, j])
@@ -99,6 +122,7 @@ class PagePool:
             self._free.append(p)
         self.table[slot, :] = TRASH_PAGE
         self.n_mapped[slot] = 0
+        self._held[slot] = 0
         return n
 
     # ------------------------------------------------------------------
@@ -111,7 +135,13 @@ class PagePool:
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Pages available to NEW claimants: free minus outstanding holds
+        (the admission gate compares prompt needs against this)."""
+        return len(self._free) - int(self._held.sum())
+
+    @property
+    def held_pages(self) -> int:
+        return int(self._held.sum())
 
     def live_bytes(self, bytes_per_page: int) -> int:
         return self.live_pages * bytes_per_page
@@ -125,6 +155,9 @@ class PagePool:
         assert live.size == len(set(live.tolist())), "page aliased by 2 slots"
         assert TRASH_PAGE not in self._free
         assert len(self._free) + live.size == self.n_pages - 1
+        assert (self._held >= 0).all()
+        assert int(self._held.sum()) <= len(self._free), \
+            "holds exceed free pages"
         for slot in range(self.n_slots):
             n = int(self.n_mapped[slot])
             assert (self.table[slot, :n] != TRASH_PAGE).all()

@@ -1,0 +1,25 @@
+"""Token sampling shared by ``ServeSession`` and ``ServeEngine``.
+
+One helper, one numerical contract: logits are cast to float32 BEFORE the
+temperature divide.  Dividing raw bf16 logits first re-rounds the whole
+distribution to ~8 significand bits and can flip near-tie samples between
+otherwise-identical runs — the two previous per-class copies of this code
+both had that bug.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(logits: jnp.ndarray, temperature: float,
+                 key) -> jnp.ndarray:
+    """Greedy (``temperature <= 0``) or temperature sampling over
+    ``logits [..., V]``.  Returns int32 token ids with the batch shape of
+    ``logits``; the PRNG ``key`` is only consumed on the temperature path.
+    """
+    logits = jnp.asarray(logits, jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)

@@ -37,6 +37,32 @@ tokens land, and retirement returns pages for immediate reuse — cache
 memory follows LIVE tokens, not ``n_slots * max_seq`` (see
 ``repro.core.paged_cache`` for the Eq. 1 accounting).  The paged engine is
 token-identical to the slab engine (tests/test_paged_engine.py).
+
+Chunked prefill (``prefill_chunk=C``, power of two; ``None`` = monolithic):
+a monolithic admission stalls every active decode slot for the whole
+prompt's prefill.  With chunking, each slot moves through a small state
+machine::
+
+    queued -> PREFILLING -> DECODING -> retired
+               |  one chunk of <= C tokens per engine step, via
+               |  ``api.prefill_chunk`` straight into the slot's lanes of
+               |  the BATCHED state (no single-slot transient at all: the
+               |  slab path's init_serve_state(1, max_seq) admission
+               |  allocation is gone, and paged admissions map pages per
+               |  chunk, not per prompt)
+
+Every engine step spends a bounded prefill budget — at most ONE in-flight
+prefill advances by one chunk — and then runs the batched decode for all
+DECODING slots, so a long-prompt admission never stalls decoding.
+PREFILLING slots sit at ``pos = -1``; the decode step treats ``pos < 0``
+lanes as dead (ring untouched, sparse/dense writes dropped or sent to the
+trash page), which is what makes mid-prefill interleaving safe.  The last
+chunk's logits seed the first sampled token and the slot flips to
+DECODING.  Chunk boundaries are invisible in the cache: after a chunk the
+ring holds the last ``b`` tokens and the winnowed prefix everything older,
+exactly as a monolithic prefill of the same tokens would leave them —
+chunked and monolithic engines are token-identical whenever winnowing is
+(tests/test_chunked_prefill.py).
 """
 from __future__ import annotations
 
@@ -53,6 +79,7 @@ from repro.core import hybrid_cache as hc
 from repro.core import paged_cache as pc
 from repro.models import get_model, swan_applicable
 from repro.runtime.page_pool import PagePool, PagePoolExhausted
+from repro.runtime.sampling import sample_token
 from repro.runtime.serve_loop import serve_cache_report
 
 Params = Dict[str, Any]
@@ -89,9 +116,15 @@ class Completion:
 
 @dataclass
 class _Slot:
+    """Slot state machine: ``prefilling`` (chunked admission in flight;
+    ``n_prefilled`` prompt tokens are in the cache, lane pos = -1 keeps the
+    slot out of decode) -> ``decoding`` (normal per-step decode) ->
+    retired (slot freed).  Monolithic admissions enter at ``decoding``."""
     req: Request
     generated: List[int] = field(default_factory=list)
     admitted_step: int = 0
+    state: str = "decoding"
+    n_prefilled: int = 0
 
 
 class ServeEngine:
@@ -100,7 +133,8 @@ class ServeEngine:
     def __init__(self, cfg, params, swan=None, projections=None,
                  max_seq: int = 4096, n_slots: int = 4, jit: bool = True,
                  paged: bool = False, page_size: int = 64,
-                 n_pages: Optional[int] = None, bucket_prompts: bool = True):
+                 n_pages: Optional[int] = None, bucket_prompts: bool = True,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = cfg
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
@@ -130,6 +164,19 @@ class ServeEngine:
         # families; recurrent state would absorb the padding junk)
         self._bucketing = bucket_prompts and "true_len" in prefill_sig
         k_fill = 0 if self.swan is None else self.swan.k_max
+
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None:
+            if prefill_chunk < 1 or prefill_chunk & (prefill_chunk - 1):
+                raise ValueError(f"prefill_chunk={prefill_chunk} must be a "
+                                 "power of two")
+            if max_seq % prefill_chunk:
+                raise ValueError(f"max_seq={max_seq} not divisible by "
+                                 f"prefill_chunk={prefill_chunk}")
+            if self.api.prefill_chunk is None:
+                raise ValueError(f"{cfg.family!r} family cannot resume a "
+                                 "prefill mid-prompt (recurrent state) — "
+                                 "chunked prefill unsupported")
 
         self.paged = paged
         if paged:
@@ -190,14 +237,31 @@ class ServeEngine:
             return pc.paged_insert_prefill(big, one, slot, phys_rows,
                                            page_size)
 
+        def chunk_fn(p, tokens, state, slot, start, k_act, true_len,
+                     page_row, prefix_len):
+            kw = {}
+            if self._k_threading:
+                kw["k_active"] = k_act
+            if self.paged:
+                kw["page_row"] = page_row
+            return self.api.prefill_chunk(p, cfg, {"tokens": tokens}, state,
+                                          slot, start, sw, pj,
+                                          true_len=true_len,
+                                          prefix_len=prefix_len, **kw)
+
         if jit:
             self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
             self._decode = jax.jit(decode_fn, donate_argnums=(5,))
             self._insert = jax.jit(insert_fn, donate_argnums=(0,))
             self._insert_paged = jax.jit(insert_paged_fn, donate_argnums=(0,))
+            # prefix_len is a STATIC power-of-two bucket (slab/dense read
+            # window): one executable per (chunk, prefix) bucket pair
+            self._chunk = jax.jit(chunk_fn, donate_argnums=(2,),
+                                  static_argnums=(8,))
         else:
             self._prefill, self._decode = prefill_fn, decode_fn
             self._insert, self._insert_paged = insert_fn, insert_paged_fn
+            self._chunk = chunk_fn
 
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
@@ -247,32 +311,76 @@ class ServeEngine:
 
     @property
     def prefill_cache_size(self) -> int:
-        """Compiled prefill executables (bucketing: <= O(log max_seq))."""
-        size = getattr(self._prefill, "_cache_size", None)
-        return size() if callable(size) else -1
+        """Compiled prefill executables, monolithic + chunked (bucketing
+        keeps the total <= O(log max_seq))."""
+        total = -1
+        for fn in (self._prefill, self._chunk):
+            size = getattr(fn, "_cache_size", None)
+            if callable(size):
+                total = size() if total < 0 else total + size()
+        return total
 
     def _sample(self, logits, req: Request, n_prev: int) -> int:
+        """Host-side sampling for temperature requests (greedy lanes use
+        the device argmax) — shared f32-first helper, keyed per request by
+        (seed, draw index)."""
         if req.temperature <= 0.0:
             return int(np.argmax(np.asarray(logits)))
         key = jax.random.fold_in(jax.random.PRNGKey(req.seed), n_prev)
-        return int(jax.random.categorical(
-            key, jnp.asarray(logits) / req.temperature))
+        return int(sample_token(logits, req.temperature, key))
 
     def _bucket_len(self, plen: int) -> int:
         """Smallest power-of-two bucket holding ``plen`` (capped at
         max_seq) — prefill compiles once per bucket, not per length."""
         if not self._bucketing:
             return plen
-        b = 1
-        while b < plen:
-            b <<= 1
-        return min(b, self.max_seq)
+        return min(self._pow2(plen), self.max_seq)
 
     def _sparse_tokens(self, pos: int) -> int:
         """Winnowed (sparse-resident) tokens at decode position ``pos``."""
         return max(pos + 1 - self.swan.buffer, 0)
 
+    def _page_bucket(self, slots) -> int:
+        """Power-of-two bucket of logical pages covering every mapping in
+        ``slots`` — the shipped page-table prefix width."""
+        p_used = max([1] + [int(self.pool.n_mapped[i]) for i in slots])
+        return min(self._pow2(p_used), self.pool.pages_per_seq)
+
+    def page_table_shipped_bytes(self) -> int:
+        """Bytes of the page-table prefix a decode step ships to the device
+        right now ([n_slots, p_bucket] int32) — the device-side table
+        operand, as opposed to the host-resident full table.  The bucket
+        covers DECODING slots, exactly as ``step()`` computes it
+        (prefilling lanes are dead in the decode and read via their own
+        per-chunk ``page_row`` operand instead)."""
+        dec = [i for i, s in enumerate(self.slots)
+               if s is not None and s.state == "decoding"]
+        return self.n_slots * self._page_bucket(dec) * 4
+
+    def _pow2(self, n: int) -> int:
+        b = 1
+        while b < n:
+            b <<= 1
+        return b
+
     def _admit(self, req: Request, slot: int) -> None:
+        k_req = self.swan.k_max if (self.swan and req.k is None) else (req.k or 0)
+        if self.prefill_chunk is not None:
+            # chunked admission: just claim the slot — chunks land one per
+            # engine step (see _advance_prefill), straight into the slot's
+            # lanes of the batched state.  No single-slot transient at all.
+            if self.paged:
+                # pages are MAPPED per chunk, but the prompt's whole winnow
+                # need is HELD now — the admission gate checked it against
+                # free_pages, and without the hold a decoding slot's growth
+                # could starve this in-flight prefill mid-chunking
+                self.pool.reserve(slot, self.pool.pages_for(
+                    self._sparse_tokens(len(req.tokens) - 1)))
+            self.slots[slot] = _Slot(req=req, admitted_step=self.step_count,
+                                     state="prefilling")
+            self.slot_pos[slot] = -1        # dead lane until prefill done
+            self.slot_k[slot] = k_req
+            return
         plen = len(req.tokens)
         pad_len = self._bucket_len(plen)
         if self.paged:
@@ -287,7 +395,6 @@ class ServeEngine:
         state1 = self.api.init_serve_state(self.cfg, self.swan, 1, s1)
         toks = np.zeros((pad_len,), np.int32)
         toks[:plen] = np.asarray(req.tokens, np.int32)
-        k_req = self.swan.k_max if (self.swan and req.k is None) else (req.k or 0)
         logits, state1 = self._prefill(self.params, {"tokens": jnp.asarray(toks)[None]},
                                        state1, jnp.asarray(k_req, jnp.int32),
                                        jnp.asarray(plen, jnp.int32))
@@ -357,12 +464,61 @@ class ServeEngine:
     # Engine step
     # ------------------------------------------------------------------
 
+    def _advance_prefill(self) -> None:
+        """Advance the oldest in-flight chunked prefill by ONE chunk — the
+        per-step prefill token budget.  Full chunks share one executable;
+        the remainder chunk is bucketed to a power of two, so the chunked
+        path compiles O(log prefill_chunk) prefill executables total (plus
+        one decode-page bucket dimension on paged engines)."""
+        cands = [i for i, s in enumerate(self.slots)
+                 if s is not None and s.state == "prefilling"]
+        if not cands:
+            return
+        i = min(cands, key=lambda j: (self.slots[j].admitted_step, j))
+        s = self.slots[i]
+        plen = len(s.req.tokens)
+        start = s.n_prefilled
+        rem = plen - start
+        t = min(rem, self.prefill_chunk)
+        pad = self.prefill_chunk if rem >= self.prefill_chunk else self._pow2(t)
+        toks = np.zeros((pad,), np.int32)
+        toks[:t] = np.asarray(s.req.tokens[start:start + t], np.int32)
+        if self.paged:
+            # map pages for the tokens this chunk winnows; overshoot writes
+            # past them land on the trash page and are rewritten by the
+            # next chunk once its pages exist
+            self.pool.ensure(i, self._sparse_tokens(start + t - 1))
+            p_row = self._pow2(max(1, int(self.pool.n_mapped[i])))
+            p_row = min(p_row, self.pool.pages_per_seq)
+            page_row = jnp.asarray(self.pool.table[i, :p_row])
+            prefix = None                   # the page_row prefix bounds reads
+        else:
+            page_row = jnp.zeros((), jnp.int32)         # unused operand
+            prefix = min(self._pow2(start + pad), self.max_seq)
+        logits, self.state = self._chunk(
+            self.params, jnp.asarray(toks)[None], self.state,
+            jnp.asarray(i, jnp.int32), jnp.asarray(start, jnp.int32),
+            jnp.asarray(self.slot_k[i], jnp.int32),
+            jnp.asarray(t, jnp.int32), page_row, prefix)
+        s.n_prefilled = start + t
+        if s.n_prefilled == plen:                       # prompt complete
+            s.state = "decoding"
+            first = self._sample(logits[0, -1], s.req, 0)
+            s.generated.append(first)
+            self.slot_pos[i] = plen
+            self.next_tok[i] = first
+            self._maybe_retire(i)
+
     def step(self) -> int:
-        """One scheduler iteration: admit → batched decode → retire.
-        Returns the number of sequences that finished this step."""
+        """One scheduler iteration: admit → advance one prefill chunk →
+        batched decode → retire.  Returns the number of sequences that
+        finished this step."""
         n_done0 = len(self.completions)
         self._admit_pending()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if self.prefill_chunk is not None:
+            self._advance_prefill()
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and s.state == "decoding"]
         if active:
             if self.paged:
                 # grow each sequence's page mapping to cover the token its
@@ -374,13 +530,8 @@ class ServeEngine:
                 # attention gather then materialises a view sized by LIVE
                 # pages, not max_seq (transient memory follows tokens too);
                 # one decode executable per bucket — O(log max_pages) total
-                p_used = max(1, max(int(self.pool.n_mapped[i])
-                                    for i in active))
-                p_bucket = 1
-                while p_bucket < p_used:
-                    p_bucket <<= 1
-                p_bucket = min(p_bucket, self.pool.pages_per_seq)
-                page_tab = jnp.asarray(self.pool.table[:, :p_bucket])
+                page_tab = jnp.asarray(
+                    self.pool.table[:, :self._page_bucket(active)])
             else:
                 page_tab = jnp.zeros((), jnp.int32)     # unused operand
             logits, greedy, self.state = self._decode(
@@ -464,8 +615,10 @@ class ServeEngine:
                 rep["saving"] = 1.0 - reserved / dense_phys
             return rep
         page_b = pc.page_bytes(self.cfg, self.swan, self.pool.page_size)
+        # device overhead counts the SHIPPED page-table prefix (the actual
+        # per-step device operand), not the host-resident numpy table
         overhead = (pc.ring_bytes(self.cfg, self.swan, self.n_slots)
-                    + self.pool.table.nbytes)
+                    + self.page_table_shipped_bytes())
         rep["mode"] += "+paged"
         rep["slab_bytes"] = n_attn * hc.cache_bytes(
             self.cfg, self.swan, self.n_slots, self.max_seq)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core import projections as proj_mod
 from repro.core.analytical import model_cache_footprint
 from repro.models import get_model, swan_applicable
+from repro.runtime.sampling import sample_token
 
 Params = Dict[str, Any]
 
@@ -90,25 +91,27 @@ class ServeSession:
 
     def generate(self, batch_in: Params, n_tokens: int,
                  temperature: float = 0.0, seed: int = 0) -> jnp.ndarray:
-        """Greedy (or sampled) generation; returns [B, n_tokens]."""
+        """Greedy (or sampled) generation; returns [B, n_tokens].
+
+        Key schedule: ``key_i = split(...split(PRNGKey(seed))...)[1]`` — the
+        root key is only ever split, never consumed.  (The previous code
+        sampled the prefill token WITH the root key and then split that same
+        key to derive every later sample key — textbook use-then-split key
+        reuse; pinned by tests/test_serve_session.py.)
+        """
         logits = self.prefill(batch_in)
         key = jax.random.PRNGKey(seed)
         outs = []
-        tok = self._sample(logits, temperature, key)
+        key, sub = jax.random.split(key)
+        tok = sample_token(logits, temperature, sub)
         for i in range(n_tokens):
             outs.append(tok)
             if i == n_tokens - 1:
                 break
             logits = self.decode(tok)
             key, sub = jax.random.split(key)
-            tok = self._sample(logits, temperature, sub)
+            tok = sample_token(logits, temperature, sub)
         return jnp.stack(outs, axis=1)
-
-    @staticmethod
-    def _sample(logits, temperature, key):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
 
     def cache_report(self) -> Dict[str, Any]:
         """Physical cache accounting (paper Eq. 1 applied to this model)."""

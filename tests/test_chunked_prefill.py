@@ -1,0 +1,211 @@
+"""Chunked prefill (engine ``prefill_chunk``): token-identity against
+monolithic admission across prompt lengths straddling chunk/page/buffer
+boundaries on dense, SWAN-slab and SWAN-paged engines; layout-identity
+(paged == slab) under lossy compression; admission/retirement interleaving
+while a prefill is mid-chunk; and executable-count bounds."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SwanConfig, get_smoke_config
+from repro.launch.io import make_batch
+from repro.models import get_model
+from repro.runtime.serve_engine import Request, ServeEngine
+from repro.runtime.serve_loop import calibrate_swan
+
+CHUNK = 8
+PAGE = 16
+BUF = 4
+# straddles chunk (8), page (16) and buffer (4) boundaries, incl. exact hits
+STRADDLE_LENS = [3, 7, 8, 9, 15, 16, 17, 20]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3-8b").replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, dtype="float32", param_dtype="float32")
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    pj = calibrate_swan(api, cfg, params, make_batch(cfg, 2, 24, seed=3))
+    absorbed = api.absorb(params, cfg, pj)
+    return cfg, api, params, absorbed, pj
+
+
+def _prompt(cfg, n, seed=0):
+    return np.asarray(make_batch(cfg, 1, n, seed=seed)["tokens"][0]).tolist()
+
+
+def _exact_swan(cfg):
+    """Full retention: winnowing is exact, so chunked == monolithic."""
+    return SwanConfig(k_max=cfg.d_head, buffer=BUF, mode="topk")
+
+
+def _straddle_reqs(cfg):
+    return [Request(uid=f"r{i}", tokens=_prompt(cfg, n, seed=30 + i),
+                    max_new_tokens=5)
+            for i, n in enumerate(STRADDLE_LENS)]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: chunked == monolithic, token for token
+# ---------------------------------------------------------------------------
+
+def _assert_chunked_matches_monolithic(cfg, params, **kw):
+    mono = ServeEngine(cfg, params, max_seq=64, n_slots=2, **kw)
+    want = {c.uid: c.tokens for c in mono.run(_straddle_reqs(cfg))}
+    chk = ServeEngine(cfg, params, max_seq=64, n_slots=2,
+                      prefill_chunk=CHUNK, **kw)
+    got = {c.uid: c.tokens for c in chk.run(_straddle_reqs(cfg))}
+    assert got == want
+    return chk
+
+
+def test_chunked_matches_monolithic_dense(setup):
+    cfg, api, params, absorbed, pj = setup
+    _assert_chunked_matches_monolithic(cfg, params)
+
+
+def test_chunked_matches_monolithic_slab(setup):
+    cfg, api, params, absorbed, pj = setup
+    chk = _assert_chunked_matches_monolithic(
+        cfg, absorbed, swan=_exact_swan(cfg), projections=pj)
+    # chunk sizes bucket to powers of two and the slab read window buckets
+    # over start+S: O(log chunk + log max_seq) executables
+    if chk.prefill_cache_size != -1:
+        assert chk.prefill_cache_size <= CHUNK.bit_length() + 1 + 7  # log2(64)+1
+
+
+def test_chunked_matches_monolithic_paged(setup):
+    cfg, api, params, absorbed, pj = setup
+    chk = _assert_chunked_matches_monolithic(
+        cfg, absorbed, swan=_exact_swan(cfg), projections=pj,
+        paged=True, page_size=PAGE)
+    assert chk.pool.live_pages == 0          # drained -> fully reclaimed
+    chk.pool.check_consistent()
+
+
+# ---------------------------------------------------------------------------
+# Lossy compression: chunk boundaries change WHAT the prompt attends to
+# (later chunks see the winnowed prefix, like decode does), so chunked and
+# monolithic legitimately diverge — but the two LAYOUTS must agree exactly.
+# ---------------------------------------------------------------------------
+
+def _lossy_trace(cfg):
+    return [
+        Request(uid="long", tokens=_prompt(cfg, 40, seed=1),
+                max_new_tokens=6, k=4),
+        Request(uid="hot", tokens=_prompt(cfg, 5, seed=2),
+                max_new_tokens=12, temperature=0.7, seed=9),
+        Request(uid="mid", tokens=_prompt(cfg, 17, seed=3),
+                max_new_tokens=8, arrival_step=3),
+        Request(uid="tail", tokens=_prompt(cfg, 9, seed=4),
+                max_new_tokens=4, arrival_step=6),
+    ]
+
+
+def test_chunked_paged_matches_chunked_slab_lossy_k(setup):
+    """Mixed per-request k, a temperature lane and staggered arrivals at
+    k_max < d_head: the paged chunked engine — including an over-committed
+    pool that holds admissions for pages — reproduces the slab chunked
+    engine token for token."""
+    cfg, api, params, absorbed, pj = setup
+    swan = SwanConfig(k_max=8, buffer=BUF, mode="topk")
+    kw = dict(swan=swan, projections=pj, max_seq=64, n_slots=2,
+              prefill_chunk=CHUNK)
+    slab = ServeEngine(cfg, absorbed, **kw)
+    want = {c.uid: c.tokens for c in slab.run(_lossy_trace(cfg))}
+    paged = ServeEngine(cfg, absorbed, paged=True, page_size=PAGE, **kw)
+    assert {c.uid: c.tokens for c in paged.run(_lossy_trace(cfg))} == want
+    assert paged.pool.live_pages == 0
+    paged.pool.check_consistent()
+    over = ServeEngine(cfg, absorbed, paged=True, page_size=PAGE,
+                       n_pages=6, **kw)
+    assert {c.uid: c.tokens for c in over.run(_lossy_trace(cfg))} == want
+    over.pool.check_consistent()
+
+
+def test_admission_hold_prevents_mid_prefill_exhaustion(setup):
+    """Chunked paged admission maps pages per CHUNK but must HOLD the
+    prompt's whole winnow need up front: without the hold, two same-step
+    admissions both pass the free-page gate against the same pages and one
+    prefill later dies in PagePoolExhausted mid-chunking — where the
+    monolithic engine (mapping at admission) simply holds the second
+    request back."""
+    cfg, api, params, absorbed, pj = setup
+    swan = SwanConfig(k_max=8, buffer=BUF, mode="topk")
+    reqs = lambda: [Request(uid=f"g{i}", tokens=_prompt(cfg, 36, seed=60 + i),
+                            max_new_tokens=4) for i in range(2)]
+    kw = dict(swan=swan, projections=pj, max_seq=64, n_slots=3,
+              prefill_chunk=CHUNK)
+    want = {c.uid: c.tokens
+            for c in ServeEngine(cfg, absorbed, **kw).run(reqs())}
+    # 3 usable pages; each request needs 2 at admission (+1 while decoding)
+    eng = ServeEngine(cfg, absorbed, paged=True, page_size=PAGE, n_pages=4,
+                      **kw)
+    comps = eng.run(reqs())
+    assert {c.uid: c.tokens for c in comps} == want
+    by = {c.uid: c for c in comps}
+    assert by["g1"].admitted_step > by["g0"].admitted_step   # held back
+    assert eng.pool.live_pages == 0
+    eng.pool.check_consistent()
+
+
+# ---------------------------------------------------------------------------
+# Interleaving: decode / retirement / backfill while a prefill is chunking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_interleaving_mid_prefill(setup, paged):
+    """A slot retiring mid-prefill of another slot, and a backfill admission
+    landing while that prefill is still chunking, must not perturb any
+    sequence's tokens (vs the monolithic engine, at exact winnow)."""
+    cfg, api, params, absorbed, pj = setup
+    n_chunks_b = 48 // CHUNK
+    trace = lambda: [
+        Request(uid="a", tokens=_prompt(cfg, 6, seed=11), max_new_tokens=3),
+        Request(uid="b", tokens=_prompt(cfg, 48, seed=12), max_new_tokens=6),
+        Request(uid="c", tokens=_prompt(cfg, 7, seed=13), max_new_tokens=5),
+    ]
+    kw = dict(swan=_exact_swan(cfg), projections=pj, max_seq=64, n_slots=2)
+    if paged:
+        kw.update(paged=True, page_size=PAGE)
+    want = {c.uid: c.tokens
+            for c in ServeEngine(cfg, absorbed, **kw).run(trace())}
+    chk = ServeEngine(cfg, absorbed, prefill_chunk=CHUNK, **kw)
+    comps = chk.run(trace())
+    assert {c.uid: c.tokens for c in comps} == want
+    by = {c.uid: c for c in comps}
+    # the interleavings actually happened: b's prefill spans n_chunks_b
+    # engine steps from its admission; a retired and c backfilled within it
+    assert by["a"].finished_step < by["b"].admitted_step + n_chunks_b
+    assert by["c"].admitted_step <= by["a"].finished_step + 1
+    assert by["c"].admitted_step < by["b"].admitted_step + n_chunks_b
+
+
+# ---------------------------------------------------------------------------
+# Executable bounds + validation
+# ---------------------------------------------------------------------------
+
+def test_prefill_executables_bounded_across_long_prompts(setup):
+    """Distinct long prompt lengths must not grow the chunk-prefill
+    executable count past O(log chunk + log max_seq): full chunks share
+    one shape, remainders and the slab read window bucket to powers of
+    two."""
+    cfg, api, params, absorbed, pj = setup
+    reqs = [Request(uid=f"l{i}", tokens=_prompt(cfg, n, seed=50 + i),
+                    max_new_tokens=2)
+            for i, n in enumerate([17, 22, 29, 35, 41, 46])]
+    eng = ServeEngine(cfg, absorbed, swan=_exact_swan(cfg), projections=pj,
+                      max_seq=64, n_slots=2, prefill_chunk=CHUNK)
+    eng.run(reqs)
+    if eng.prefill_cache_size != -1:
+        assert eng.prefill_cache_size <= CHUNK.bit_length() + 1 + 7
+
+
+def test_prefill_chunk_validation(setup):
+    cfg, api, params, absorbed, pj = setup
+    with pytest.raises(ValueError, match="power of two"):
+        ServeEngine(cfg, params, max_seq=64, n_slots=1, prefill_chunk=6)
+    with pytest.raises(ValueError, match="divisible"):
+        ServeEngine(cfg, params, max_seq=96, n_slots=1, prefill_chunk=64)

@@ -112,3 +112,24 @@ def test_over_capacity_request_rejected():
     pool = PagePool(16, 2, 1, 8)
     with pytest.raises(ValueError, match="pages_per_seq"):
         pool.ensure(0, 100)
+
+
+def test_reservations_protect_inflight_prefills():
+    """A hold placed at chunked admission is consumed by the holder's own
+    allocations; other slots cannot dip into held stock, and free_pages
+    (the admission gate) excludes outstanding holds."""
+    pool = PagePool(4, 3, 2, 8)            # 3 usable pages
+    pool.reserve(0, 2)
+    assert pool.free_pages == 1 and pool.held_pages == 2
+    pool.ensure(1, 8)                      # slot 1 takes the unheld page
+    assert pool.free_pages == 0
+    with pytest.raises(PagePoolExhausted):
+        pool.ensure(1, 16)                 # may not eat slot 0's hold
+    pool.check_consistent()                # failed alloc corrupted nothing
+    pool.ensure(0, 16)                     # the holder consumes its hold
+    assert int(pool.n_mapped[0]) == 2 and pool.held_pages == 0
+    with pytest.raises(PagePoolExhausted):
+        pool.reserve(1, 1)                 # nothing left to hold
+    assert pool.free_slot(0) == 2          # retirement releases everything
+    assert pool.free_pages == 2
+    pool.check_consistent()

@@ -113,6 +113,28 @@ def test_live_bytes_track_tokens_and_reclaim(setup):
     assert rep["live_bytes"] < rep["reserved_bytes"]
 
 
+def test_cache_report_counts_shipped_table_prefix(setup):
+    """Device overhead must count the page-table prefix actually SHIPPED
+    per decode step ([n_slots, p_bucket] int32), not the host-resident
+    numpy table."""
+    from repro.core import paged_cache as pc
+    cfg, api, params, absorbed, pj = setup
+    eng = ServeEngine(cfg, absorbed, swan=_swan(), projections=pj,
+                      max_seq=64, n_slots=2, paged=True, page_size=PAGE)
+    eng.submit(Request(uid="x", tokens=_prompt(cfg, 20), max_new_tokens=8))
+    for _ in range(4):
+        eng.step()
+    rep = eng.cache_report()
+    page_b = pc.page_bytes(cfg, eng.swan, PAGE)
+    overhead = rep["live_bytes"] - eng.pool.live_bytes(page_b)
+    assert overhead == (pc.ring_bytes(cfg, eng.swan, eng.n_slots)
+                        + eng.page_table_shipped_bytes())
+    # one live sequence on 2 of 4 logical pages: the shipped prefix is a
+    # strict subset of the full host table
+    assert eng.page_table_shipped_bytes() < eng.pool.table.nbytes
+    assert rep["reserved_bytes"] - eng.pool.reserved_bytes(page_b) == overhead
+
+
 def test_slab_engine_reserved_equals_live(setup):
     """The slab engine's analytic worst-case layout must coincide with the
     bytes actually resident in its state arrays (asserted inside

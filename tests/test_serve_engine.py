@@ -192,6 +192,31 @@ def test_backfill_mid_flight_matches_single(setup):
     assert by_uid["second"].tokens == solo[0].tokens
 
 
+def test_engine_temperature_path(setup):
+    """The engine's temperature sampling (host-side, per-request keys) —
+    previously untested: deterministic per seed across runs, different
+    across seeds, and a mixed greedy/temperature batch still compiles
+    exactly one decode executable (temperature only changes what the host
+    does with the logits)."""
+    cfg, api, params, absorbed, pj = setup
+    reqs = lambda seed=13: [
+        Request(uid="greedy", tokens=_prompt(cfg, 9, seed=1), max_new_tokens=6),
+        Request(uid="hot", tokens=_prompt(cfg, 7, seed=2), max_new_tokens=6,
+                temperature=0.8, seed=seed),
+    ]
+    eng = ServeEngine(cfg, params, max_seq=64, n_slots=2)
+    a = {c.uid: c.tokens for c in eng.run(reqs())}
+    assert eng.decode_cache_size in (1, -1)
+    b = {c.uid: c.tokens
+         for c in ServeEngine(cfg, params, max_seq=64, n_slots=2).run(reqs())}
+    assert a == b
+    c = {c.uid: c.tokens
+         for c in ServeEngine(cfg, params, max_seq=64,
+                              n_slots=2).run(reqs(seed=14))}
+    assert c["greedy"] == a["greedy"]
+    assert c["hot"] != a["hot"]
+
+
 def test_cache_report(setup):
     cfg, api, params, absorbed, pj = setup
     eng = ServeEngine(cfg, absorbed, swan=_swan(cfg, k_max=4, quantize=True),

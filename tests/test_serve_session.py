@@ -1,5 +1,6 @@
 """ServeSession end-to-end: batched generation, SWAN plumbing, memory
-accounting, calibrate-absorb-serve pipeline via the public API."""
+accounting, calibrate-absorb-serve pipeline via the public API — plus the
+sampling-path regressions (PRNG key schedule, f32-before-temperature)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +9,7 @@ import pytest
 from repro.configs import SwanConfig, get_smoke_config
 from repro.launch.io import make_batch
 from repro.models import get_model
+from repro.runtime.sampling import sample_token
 from repro.runtime.serve_loop import ServeSession, calibrate_swan
 
 
@@ -79,3 +81,55 @@ def test_sampled_generation_deterministic_per_seed(setup):
     sess2 = ServeSession(cfg, params, max_seq=64, batch=2)
     b = sess2.generate(prompt, 5, temperature=1.0, seed=7)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_generate_key_schedule_splits_before_use(setup):
+    """Regression for the use-then-split PRNG bug: the prefill-token sample
+    must consume a key SPLIT from the root, never the root itself (which is
+    then split again to derive every later draw — key reuse).  Replays the
+    documented schedule draw by draw, which also pins the prefill sample's
+    independence from later draws."""
+    cfg, api, params, _, _ = setup
+    prompt = make_batch(cfg, 2, 8)
+    out = np.asarray(ServeSession(cfg, params, max_seq=64, batch=2)
+                     .generate(prompt, 4, temperature=1.0, seed=11))
+    sess = ServeSession(cfg, params, max_seq=64, batch=2)
+    logits = sess.prefill(prompt)
+    key = jax.random.PRNGKey(11)
+    toks = []
+    for i in range(4):
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(
+            sub, jnp.asarray(logits, jnp.float32), axis=-1).astype(jnp.int32)
+        toks.append(np.asarray(tok))
+        if i < 3:
+            logits = sess.decode(tok)
+    np.testing.assert_array_equal(out, np.stack(toks, axis=1))
+
+
+def test_sampled_prefix_independent_of_horizon(setup):
+    """Draw i depends only on (seed, i): generating longer must not change
+    the earlier samples."""
+    cfg, api, params, _, _ = setup
+    prompt = make_batch(cfg, 2, 8)
+    a = np.asarray(ServeSession(cfg, params, max_seq=64, batch=2)
+                   .generate(prompt, 2, temperature=0.8, seed=5))
+    b = np.asarray(ServeSession(cfg, params, max_seq=64, batch=2)
+                   .generate(prompt, 6, temperature=0.8, seed=5))
+    np.testing.assert_array_equal(a, b[:, :2])
+
+
+def test_sample_token_casts_to_f32_before_temperature():
+    """The shared sampler must divide f32 logits, not raw bf16: dividing in
+    bf16 re-rounds the distribution and can flip near-tie draws.  Pin the
+    contract (categorical over f32(logits)/T) across a battery of keys."""
+    logits = jnp.asarray(
+        np.linspace(90.0, 100.5, 32), jnp.bfloat16)[None]   # near-tie tail
+    for s in range(50):
+        key = jax.random.PRNGKey(s)
+        want = jax.random.categorical(
+            key, jnp.asarray(logits, jnp.float32) / 7.0, axis=-1)
+        got = sample_token(logits, 7.0, key)
+        assert int(got[0]) == int(want[0]), s
+    # greedy path: argmax, key untouched
+    assert int(sample_token(logits, 0.0, jax.random.PRNGKey(0))[0]) == 31
