@@ -38,8 +38,17 @@ def main():
     ap.add_argument("--page-size", type=int, default=32)
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill: power-of-two tokens per chunk — "
-                         "one chunk per engine step, so long admissions "
-                         "never stall active decodes")
+                         "bounded prefill work per engine step, so long "
+                         "admissions never stall active decodes")
+    ap.add_argument("--prefill-slots", type=int, default=1,
+                    help="batched concurrent prefill: up to P in-flight "
+                         "prefills advance per step, packed into ONE "
+                         "multi-slot chunk dispatch (cuts TTFT under "
+                         "admission bursts; requires --prefill-chunk)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="per-step prefill token budget round-robined "
+                         "across in-flight prefills (default: "
+                         "prefill-slots * prefill-chunk)")
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--buffer", type=int, default=16)
     ap.add_argument("--quantize", action="store_true")
@@ -49,6 +58,10 @@ def main():
     ap.add_argument("--gen-tokens", type=int, default=48)
     ap.add_argument("--max-seq", type=int, default=256)
     args = ap.parse_args()
+    if ((args.prefill_slots > 1 or args.prefill_budget is not None)
+            and not args.prefill_chunk):
+        raise SystemExit("--prefill-slots/--prefill-budget require "
+                         "--prefill-chunk")
 
     cfg = get_smoke_config("llama3-8b").replace(
         n_layers=4, d_model=128, n_heads=8, n_kv_heads=4, d_head=16,
@@ -78,7 +91,9 @@ def main():
               + (f" ({rep['saving']:.0%} saved)" if "saving" in rep else ""))
 
     dense = ServeEngine(cfg, params, max_seq=args.max_seq, n_slots=args.slots,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        prefill_slots=args.prefill_slots,
+                        prefill_budget=args.prefill_budget)
     bench(dense, requests([None]), "dense")
 
     if not args.no_swan:
@@ -90,7 +105,9 @@ def main():
                           quantize=args.quantize)
         eng = ServeEngine(cfg, absorbed, swan=swan, projections=projections,
                           max_seq=args.max_seq, n_slots=args.slots,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk,
+                          prefill_slots=args.prefill_slots,
+                          prefill_budget=args.prefill_budget)
         # per-request runtime-tunable compression: mix full and half k
         bench(eng, requests([k_max, max(k_max // 2, 1)]), "swan")
         print(f"        decode executables for the mixed-k batch: "
@@ -100,7 +117,9 @@ def main():
                              projections=projections, max_seq=args.max_seq,
                              n_slots=args.slots, paged=True,
                              page_size=args.page_size,
-                             prefill_chunk=args.prefill_chunk)
+                             prefill_chunk=args.prefill_chunk,
+                             prefill_slots=args.prefill_slots,
+                             prefill_budget=args.prefill_budget)
             bench(pg, requests([k_max, max(k_max // 2, 1)]), "paged")
             rep = pg.cache_report()
             print(f"        paged: slab layout would reserve "

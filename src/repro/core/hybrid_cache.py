@@ -260,14 +260,18 @@ def swan_cache_insert_prefill(cache: Params, swan, cfg, k_hat: jnp.ndarray,
 
 def chunk_evict_winnow(cache: Params, swan, k_hat: jnp.ndarray,
                        v_hat: jnp.ndarray, start, true_len, k_act=None):
-    """Bulk analogue of ``decode_evict_winnow`` for a prefill CHUNK of S
-    (padded) tokens at absolute positions [start, start + true_len) —
-    chunked prefill resumes a cache already holding tokens [0, start).
+    """Bulk analogue of ``decode_evict_winnow`` for prefill CHUNKS of S
+    (padded) tokens, one per lane, at absolute positions
+    [start_p, start_p + true_len_p) — chunked prefill resumes a cache whose
+    lane ``p`` already holds tokens [0, start_p).  ``start`` / ``true_len``
+    are per-lane [B] (or scalars, broadcast): the batched concurrent
+    prefill advances several slots' chunks in one executable, each resuming
+    at its own offset.
 
-    Conceptually the chunk performs ``true_len`` decode-style insertions,
-    each popping its ring slot's occupant.  The popped set is exactly
-    positions [start - b, start + true_len - b): the first ``true_len``
-    entries of the position-ordered sequence
+    Conceptually each lane's chunk performs ``true_len`` decode-style
+    insertions, each popping its ring slot's occupant.  The popped set is
+    exactly positions [start - b, start + true_len - b): the first
+    ``true_len`` entries of the lane's position-ordered sequence
 
         combined = [ring occupants at start-b .. start-1 ‖ chunk tokens]
 
@@ -277,9 +281,10 @@ def chunk_evict_winnow(cache: Params, swan, k_hat: jnp.ndarray,
     monolithic ``true_len``-anchored prefill of start + true_len tokens
     would put it.
 
-    Returns ``(dest, packed_k, packed_v, ring_updates)``: the caller
-    commits the S packed vectors CONTIGUOUSLY at sparse positions
-    [dest, dest + S), dest = max(start - b, 0).  Entries past position
+    Returns ``(dest [B], packed_k, packed_v, ring_updates)``: the caller
+    commits each lane's S packed vectors CONTIGUOUSLY at sparse positions
+    [dest, dest + S), dest = max(start - b, 0) (slab: ``write_sparse_rows``;
+    paged: page-table indirect).  Entries past position
     start + true_len - b are not-yet-valid overshoot (bucket padding /
     future-ring tokens): every such position is rewritten — by a later
     chunk's winnow window (windows of consecutive chunks overlap-cover) or
@@ -289,64 +294,74 @@ def chunk_evict_winnow(cache: Params, swan, k_hat: jnp.ndarray,
     """
     B, S = k_hat.shape[:2]
     b = swan.buffer
-    start = jnp.asarray(start, jnp.int32)
-    true_len = jnp.asarray(true_len, jnp.int32)
+    start = per_seq_pos(start, B)                        # [B]
+    true_len = per_seq_pos(true_len, B)                  # [B]
     kt = k_hat.transpose(0, 2, 1, 3)                     # [B, Kv, S, dh]
     vt = v_hat.transpose(0, 2, 1, 3)
     if b == 0:   # winnow immediately, no ring
         return (start, winnow_vector(kt, swan, "k", k_act),
                 winnow_vector(vt, swan, "v", k_act), {})
-    # position-ordered old ring: entry j holds position start - b + j
-    # ([start-b, start) spans every residue mod b exactly once; entries with
-    # negative position read never-written slots — junk skipped below)
-    ring_order = jnp.mod(start - b + jnp.arange(b), b)   # [b]
+    # position-ordered old ring: entry j of lane p holds position
+    # start_p - b + j ([start-b, start) spans every residue mod b exactly
+    # once; entries with negative position read never-written slots — junk
+    # skipped below)
+    ring_order = jnp.mod(start[:, None] - b + jnp.arange(b)[None], b)  # [B,b]
+    ord_idx = ring_order[:, None, :, None]
     comb_k = jnp.concatenate(
-        [cache["buf_k"][:, :, ring_order].astype(kt.dtype), kt], axis=2)
+        [jnp.take_along_axis(cache["buf_k"], ord_idx, axis=2).astype(kt.dtype),
+         kt], axis=2)                                    # [B, Kv, b+S, dh]
     comb_v = jnp.concatenate(
-        [cache["buf_v"][:, :, ring_order].astype(vt.dtype), vt], axis=2)
+        [jnp.take_along_axis(cache["buf_v"], ord_idx, axis=2).astype(vt.dtype),
+         vt], axis=2)
     # winnow the popped set: S entries starting at combined index
     # b - min(start, b) (skips the empty pre-sequence slots while start < b)
     # -> positions [max(start - b, 0), max(start - b, 0) + S)
-    w_off = jnp.clip(b - start, 0, b)
-    dest = jnp.maximum(start - b, 0)
-    packed_k = winnow_vector(
-        jax.lax.dynamic_slice_in_dim(comb_k, w_off, S, axis=2),
-        swan, "k", k_act)
-    packed_v = winnow_vector(
-        jax.lax.dynamic_slice_in_dim(comb_v, w_off, S, axis=2),
-        swan, "v", k_act)
+    w_off = jnp.clip(b - start, 0, b)                    # [B]
+    dest = jnp.maximum(start - b, 0)                     # [B]
+    sel = (w_off[:, None] + jnp.arange(S)[None])[:, None, :, None]
+    packed_k = winnow_vector(jnp.take_along_axis(comb_k, sel, axis=2),
+                             swan, "k", k_act)
+    packed_v = winnow_vector(jnp.take_along_axis(comb_v, sel, axis=2),
+                             swan, "v", k_act)
     # new ring: positions end - b + j at slots (end - b + j) % b
     end = start + true_len
-    tail = end - b + jnp.arange(b)
+    tail = end[:, None] - b + jnp.arange(b)[None]        # [B, b]
     slots = jnp.mod(tail, b)
-    r_k = jax.lax.dynamic_slice_in_dim(comb_k, true_len, b, axis=2)
-    r_v = jax.lax.dynamic_slice_in_dim(comb_v, true_len, b, axis=2)
+    src = (true_len[:, None] + jnp.arange(b)[None])[:, None, :, None]
+    r_k = jnp.take_along_axis(comb_k, src, axis=2)       # [B, Kv, b, dh]
+    r_v = jnp.take_along_axis(comb_v, src, axis=2)
     ring_pos = jnp.where(tail >= 0, tail, -1).astype(jnp.int32)
+    bi = jnp.arange(B)[:, None]
     ring = {
-        "buf_k": cache["buf_k"].at[:, :, slots].set(
-            r_k.astype(cache["buf_k"].dtype)),
-        "buf_v": cache["buf_v"].at[:, :, slots].set(
-            r_v.astype(cache["buf_v"].dtype)),
-        "buf_pos": cache["buf_pos"].at[:, slots].set(
-            jnp.broadcast_to(ring_pos[None], (B, b))),
+        "buf_k": cache["buf_k"].at[bi, :, slots].set(
+            r_k.swapaxes(1, 2).astype(cache["buf_k"].dtype)),
+        "buf_v": cache["buf_v"].at[bi, :, slots].set(
+            r_v.swapaxes(1, 2).astype(cache["buf_v"].dtype)),
+        "buf_pos": cache["buf_pos"].at[bi, slots].set(ring_pos),
     }
     return dest, packed_k, packed_v, ring
 
 
-def swan_cache_insert_prefill_chunk(cache: Params, swan, cfg,
-                                    k_hat: jnp.ndarray, v_hat: jnp.ndarray,
-                                    start, true_len, k_act=None) -> Params:
-    """Insert one prefill chunk (rotated k̂/v̂ [B, S, Kv, dh] at positions
-    [start, start + true_len)) into a slab cache already holding tokens
-    [0, start) — the cache-resume analogue of ``swan_cache_insert_prefill``.
-    ``start`` / ``true_len`` are traced scalars; one executable serves every
-    chunk of a given padded size S."""
-    dest, packed_k, packed_v, ring = chunk_evict_winnow(
-        cache, swan, k_hat, v_hat, start, true_len, k_act)
-    out = dict(cache)
-    out.update(ring)
-    out["k"] = _write_sparse(cache["k"], packed_k, dest)
-    out["v"] = _write_sparse(cache["v"], packed_v, dest)
+def write_sparse_rows(side: Params, packed: Params, lane: jnp.ndarray,
+                      dest: jnp.ndarray) -> Params:
+    """Commit packed chunk vectors [P, Kv, S, ...] at rows
+    [dest_p, dest_p + S) of batch lanes ``lane`` [P] — the slab commit of
+    the batched chunked prefill (``chunk_evict_winnow``'s contiguous
+    per-lane write, indirected by lane index).  Dead lanes park out of
+    range and are dropped, as are rows past the slab (overshoot near
+    max_seq)."""
+    S = packed["vals"].shape[2]
+    rows = dest[:, None] + jnp.arange(S)[None]           # [P, S]
+    li = lane[:, None]
+    out = dict(side)
+    out["vals"] = side["vals"].at[li, :, rows].set(
+        packed["vals"].swapaxes(1, 2).astype(side["vals"].dtype), mode="drop")
+    if "idx" in side:
+        out["idx"] = side["idx"].at[li, :, rows].set(
+            packed["idx"].swapaxes(1, 2), mode="drop")
+    if "scale" in side:
+        out["scale"] = side["scale"].at[li, :, rows].set(
+            packed["scale"].swapaxes(1, 2), mode="drop")
     return out
 
 

@@ -142,45 +142,56 @@ def paged_insert_decode(cache: Params, swan, cfg, k_hat: jnp.ndarray,
 
 def _pool_write_rows(side: Params, packed: Params, phys: jnp.ndarray,
                      row: jnp.ndarray) -> Params:
-    """Write packed vectors [1, Kv, S, ...] at physical (page, row)
-    addresses ``phys``/``row`` [S] — the chunked-prefill bulk write.
-    Distinct in-range positions map to distinct (page, row) pairs; the only
-    collisions are on the trash page, where any winner is fine."""
+    """Write packed vectors [P, Kv, S, ...] at physical (page, row)
+    addresses ``phys``/``row`` [P, S] — the chunked-prefill bulk write,
+    one lane per in-flight prefill.  Distinct in-range positions of live
+    lanes map to distinct (page, row) pairs (live lanes own disjoint
+    pages); the only collisions are on the trash page, where any winner is
+    fine."""
     out = dict(side)
     out["vals"] = side["vals"].at[phys, :, row].set(
-        packed["vals"][0].swapaxes(0, 1).astype(side["vals"].dtype))
+        packed["vals"].swapaxes(1, 2).astype(side["vals"].dtype))
     if "idx" in side:
         out["idx"] = side["idx"].at[phys, :, row].set(
-            packed["idx"][0].swapaxes(0, 1))
+            packed["idx"].swapaxes(1, 2))
     if "scale" in side:
         out["scale"] = side["scale"].at[phys, :, row].set(
-            packed["scale"][0].swapaxes(0, 1))
+            packed["scale"].swapaxes(1, 2))
     return out
 
 
 def paged_insert_prefill_chunk(cache: Params, swan, cfg, k_hat: jnp.ndarray,
                                v_hat: jnp.ndarray, start, true_len,
-                               page_row: jnp.ndarray, k_act=None) -> Params:
-    """Insert one prefill chunk ([1, S, Kv, dh] at positions
-    [start, start + true_len)) through the page table — the paged analogue
-    of ``hybrid_cache.swan_cache_insert_prefill_chunk``, sharing its
+                               page_rows: jnp.ndarray, k_act=None,
+                               dead=None) -> Params:
+    """Insert prefill chunks ([P, S, Kv, dh], lane ``p`` at positions
+    [start_p, start_p + true_len_p)) through the page table — the paged
+    commit of the batched concurrent prefill, sharing the slab path's
     eviction/ring mechanics (``chunk_evict_winnow``).
 
-    ``page_row`` is THIS slot's page-table row (a prefix of length P).
-    Sparse position ``t`` lands at (page_row[t // ps], t % ps); positions
-    past the shipped prefix, and positions on not-yet-mapped pages
-    (row = trash), write to the trash page — they are overshoot that later
-    chunks rewrite once their pages exist.
+    ``page_rows [P, Pg]`` holds each lane's page-table row (a prefix of
+    length Pg).  Lane ``p``'s sparse position ``t`` lands at
+    (page_rows[p, t // ps], t % ps); positions past the shipped prefix,
+    and positions on not-yet-mapped pages (row = trash), write to the
+    trash page — they are overshoot that later chunks rewrite once their
+    pages exist.  ``dead [P]`` lanes (padding of a partially filled
+    prefill batch) write to the trash page outright: their clamped lane
+    gather may alias a LIVE slot's page row, and a garbage write there
+    must not land.
     """
     ps = cache["pool"]["k"]["vals"].shape[2]
-    P = page_row.shape[0]
+    Pg = page_rows.shape[1]
     dest, packed_k, packed_v, ring = chunk_evict_winnow(
         cache, swan, k_hat, v_hat, start, true_len, k_act)
     S = packed_k["vals"].shape[2]
-    tok = dest + jnp.arange(S)                              # [S]
+    tok = dest[:, None] + jnp.arange(S)[None]               # [P, S]
     logical = tok // ps
-    phys = jnp.where(logical < P,
-                     page_row[jnp.minimum(logical, P - 1)], TRASH_PAGE)
+    phys = jnp.where(
+        logical < Pg,
+        jnp.take_along_axis(page_rows, jnp.minimum(logical, Pg - 1), axis=1),
+        TRASH_PAGE)
+    if dead is not None:
+        phys = jnp.where(dead[:, None], TRASH_PAGE, phys)
     row = tok % ps
     out = dict(cache)
     out.update(ring)

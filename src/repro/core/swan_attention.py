@@ -254,10 +254,12 @@ def swan_chunk_prefill_attention(q_hat: jnp.ndarray, k_hat: jnp.ndarray,
     """Attention for a prefill CHUNK resuming from a populated hybrid cache.
 
     ``q_hat [B, S, Kv, G, dh]`` / ``k_hat [B, S, Kv, dh]`` / ``v_new
-    [B, S, Kv, dh]`` are the chunk's fresh rotated projections at absolute
-    positions [start, start + S); ``cache`` holds tokens [0, start) (a slab
-    layout, or a ``paged_logical_view`` of the slot's pages).  Joint exact
-    softmax per query over
+    [B, S, Kv, dh]`` are the chunks' fresh rotated projections; ``start``
+    may be a scalar or per-lane [B] — the batched concurrent prefill packs
+    several slots' chunks into one call, lane ``p`` at absolute positions
+    [start_p, start_p + S) against a ``cache`` holding its tokens
+    [0, start_p) (a slab layout, or a ``paged_logical_view`` of each lane's
+    pages).  Joint exact softmax per query over
 
         [ winnowed sparse prefix [0, start-b) ‖ ring [start-b, start) ‖
           chunk (causal) ]
@@ -268,15 +270,15 @@ def swan_chunk_prefill_attention(q_hat: jnp.ndarray, k_hat: jnp.ndarray,
     dirty ring (from the previous occupant, positions that may exceed
     ``start``) never leaks into a new prompt's first chunks.  Chunk padding
     keys sit at positions >= start + true_len > every real query position,
-    so the causal mask hides them; padded queries produce garbage rows the
-    caller discards.
+    so the causal mask hides them; padded queries (and whole dead lanes)
+    produce garbage rows the caller discards.
     """
     B, S, Kv, G, dh = q_hat.shape
     scale = 1.0 / math.sqrt(dh)
-    start = jnp.asarray(start, jnp.int32)
+    start = per_seq_pos(start, B)                            # [B]
     qf = q_hat.astype(jnp.float32).transpose(0, 2, 1, 3, 4)  # [B,Kv,S,G,dh]
 
-    sp_len = jnp.broadcast_to(jnp.maximum(start - swan.buffer, 0), (B,))
+    sp_len = jnp.maximum(start - swan.buffer, 0)             # [B]
     m_sp, l_sp, o_sp = _sparse_stats_bulk(qf.reshape(B, Kv, S * G, dh),
                                           cache["k"], cache["v"], swan,
                                           sp_len, dh)
@@ -291,13 +293,12 @@ def swan_chunk_prefill_attention(q_hat: jnp.ndarray, k_hat: jnp.ndarray,
                          axis=2)                             # [B,Kv,b+S,dh]
     bv = jnp.concatenate([cache["buf_v"], vt.astype(cache["buf_v"].dtype)],
                          axis=2)
-    qpos = start + jnp.arange(S)                             # [S]
-    kpos = jnp.concatenate(
-        [cache["buf_pos"], jnp.broadcast_to(qpos[None], (B, S))], axis=1)
+    qpos = start[:, None] + jnp.arange(S)[None]              # [B, S]
+    kpos = jnp.concatenate([cache["buf_pos"], qpos], axis=1)
     in_seq = jnp.concatenate(                                # [B, b+S]
-        [cache["buf_pos"] < start, jnp.ones((B, S), bool)], axis=1)
+        [cache["buf_pos"] < start[:, None], jnp.ones((B, S), bool)], axis=1)
     valid = ((kpos[:, None, :] >= 0)
-             & (kpos[:, None, :] <= qpos[None, :, None])
+             & (kpos[:, None, :] <= qpos[:, :, None])
              & in_seq[:, None, :])                           # [B, S, b+S]
     s_b = _dot_f32("bjsgd,bjtd->bjsgt", qf.astype(bk.dtype), bk) * scale
     s_b = jnp.where(valid[:, None, :, None, :], s_b, -jnp.inf)

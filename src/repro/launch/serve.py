@@ -59,12 +59,25 @@ def main():
                          "(default: full reservation; smaller over-commits)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="engine: chunked prefill — split prompts into "
-                         "power-of-two chunks, one chunk per engine step, "
-                         "so long admissions never stall decoding "
-                         "(default: monolithic admission)")
+                         "power-of-two chunks with bounded prefill work "
+                         "per engine step, so long admissions never stall "
+                         "decoding (default: monolithic admission)")
+    ap.add_argument("--prefill-slots", type=int, default=1,
+                    help="engine: batched concurrent prefill — up to P "
+                         "in-flight prefills advance per step, packed into "
+                         "one multi-slot chunk dispatch (cuts TTFT under "
+                         "admission bursts; requires --prefill-chunk)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="engine: per-step prefill token budget "
+                         "round-robined across in-flight prefills "
+                         "(default: prefill-slots * prefill-chunk)")
     args = ap.parse_args()
     if args.prefill_chunk and not args.engine:
         raise SystemExit("--prefill-chunk requires --engine")
+    if ((args.prefill_slots > 1 or args.prefill_budget is not None)
+            and not args.prefill_chunk):
+        raise SystemExit("--prefill-slots/--prefill-budget require "
+                         "--prefill-chunk")
     if args.paged and not (args.engine and args.swan):
         raise SystemExit("--paged requires --engine and --swan")
 
@@ -113,7 +126,9 @@ def _run_engine(cfg, params, swan, projections, args):
                       max_seq=args.max_seq, n_slots=args.batch,
                       paged=args.paged, page_size=args.page_size,
                       n_pages=args.pool_pages,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      prefill_slots=args.prefill_slots,
+                      prefill_budget=args.prefill_budget)
     n_req = args.requests or args.batch * 2
     k_cycle = ([None] if (swan is None or not args.mixed_k)
                else [swan.k_max, max(swan.k_max // 2, 1),

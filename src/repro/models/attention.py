@@ -97,8 +97,10 @@ def _expand_kv(k: jnp.ndarray, group: int) -> jnp.ndarray:
 
 def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     mask: Optional[jnp.ndarray], causal: bool,
-                    q_offset: int = 0) -> jnp.ndarray:
-    """Plain softmax attention.  q: [B,Sq,H,dh], k/v: [B,Sk,Kv,dh]."""
+                    q_offset=0) -> jnp.ndarray:
+    """Plain softmax attention.  q: [B,Sq,H,dh], k/v: [B,Sk,Kv,dh].
+    ``q_offset`` may be a scalar or per-sequence [B] (batched chunked
+    prefill: each lane's chunk resumes at its own absolute position)."""
     B, Sq, H, dh = q.shape
     Sk, Kv = k.shape[1], k.shape[2]
     k = _expand_kv(k, H // Kv)
@@ -107,9 +109,10 @@ def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     scores = scores / math.sqrt(dh)
     neg = jnp.finfo(jnp.float32).min
     if causal:
-        qp = jnp.arange(Sq)[:, None] + q_offset
-        kp = jnp.arange(Sk)[None, :]
-        scores = jnp.where((kp <= qp)[None, None], scores, neg)
+        off = jnp.asarray(q_offset)
+        qp = jnp.arange(Sq)[None, :, None] + off.reshape(-1, 1, 1)  # [B|1,Sq,1]
+        kp = jnp.arange(Sk)[None, None, :]
+        scores = jnp.where((kp <= qp)[:, None], scores, neg)
     if mask is not None:
         scores = jnp.where(mask[:, None, None, :], scores, neg)
     w = jax.nn.softmax(scores, axis=-1)
@@ -118,9 +121,11 @@ def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                      causal: bool, q_offset: int = 0,
+                      causal: bool, q_offset=0,
                       block: int = ATTN_BLOCK) -> jnp.ndarray:
     """Online-softmax attention, O(Sq·block) memory.  Pure JAX; shardable.
+    ``q_offset`` may be a scalar or per-sequence [B], like
+    ``dense_attention``.
 
     Scans over KV blocks carrying (m, l, acc) flash-attention stats.
     """
@@ -137,22 +142,23 @@ def blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     vb = v.reshape(B, nb, block, H, dh).transpose(1, 0, 2, 3, 4)
     scale = 1.0 / math.sqrt(dh)
     qf = q.astype(jnp.float32)
-    q_pos = jnp.arange(Sq) + q_offset
+    off = jnp.asarray(q_offset)
+    q_pos = jnp.arange(Sq)[None] + off.reshape(-1, 1)        # [B|1, Sq]
 
     def step(carry, inp):
         m, l, acc = carry
         bi, kblk, vblk = inp
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32)) * scale
         k_pos = bi * block + jnp.arange(block)
-        valid = k_pos[None, :] < Sk
+        valid = (k_pos[None, None, :] < Sk)                  # [1, 1, block]
         if causal:
-            valid = valid & (k_pos[None, :] <= q_pos[:, None])
-        s = jnp.where(valid[None, None], s, -jnp.inf)
+            valid = valid & (k_pos[None, None, :] <= q_pos[:, :, None])
+        s = jnp.where(valid[:, None], s, -jnp.inf)
         m_new = jnp.maximum(m, s.max(axis=-1))
         # guard fully-masked rows (m_new == -inf)
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         p = jnp.exp(s - m_safe[..., None])
-        p = jnp.where(valid[None, None], p, 0.0)
+        p = jnp.where(valid[:, None], p, 0.0)
         corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
         l_new = l * corr + p.sum(axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
@@ -220,6 +226,23 @@ def dense_cache_insert(cache: Params, k: jnp.ndarray, v: jnp.ndarray,
     return {
         "k": jax.lax.dynamic_update_slice(cache["k"], kt, idx),
         "v": jax.lax.dynamic_update_slice(cache["v"], vt, idx),
+    }
+
+
+def dense_cache_insert_rows(cache: Params, k: jnp.ndarray, v: jnp.ndarray,
+                            lane: jnp.ndarray, start: jnp.ndarray) -> Params:
+    """Insert chunk K/V [P, S, Kv, dh] at rows [start_p, start_p + S) of
+    batch lanes ``lane`` [P] — the batched chunked-prefill insert (each
+    in-flight prefill resumes at its own offset).  Dead lanes park out of
+    range and are dropped, as are rows past max_seq."""
+    S = k.shape[1]
+    rows = start[:, None] + jnp.arange(S)[None]              # [P, S]
+    li = lane[:, None]
+    return {
+        "k": cache["k"].at[li, :, rows].set(k.astype(cache["k"].dtype),
+                                            mode="drop"),
+        "v": cache["v"].at[li, :, rows].set(v.astype(cache["v"].dtype),
+                                            mode="drop"),
     }
 
 

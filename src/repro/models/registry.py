@@ -31,9 +31,11 @@ class ModelApi:
     # (cfg, swan, batch, max_seq, n_pages, page_size) -> paged state; None
     # when the family has no paged sparse layout (recurrent/encdec state)
     init_paged_state: Optional[Callable] = None
-    # (p, cfg, batch, state, slot, start, ...) -> (logits, state): advance
-    # one slot's prefill by a chunk against the BATCHED serve state; None
-    # when the family cannot resume a prefill mid-prompt (recurrent state)
+    # (p, cfg, batch, state, slot [P], start [P], ...) -> (logits [P, V],
+    # state): advance up to P slots' prefills by one chunk each against the
+    # BATCHED serve state in ONE executable (batched concurrent prefill;
+    # dead lanes park slot out of range); None when the family cannot
+    # resume a prefill mid-prompt (recurrent state)
     prefill_chunk: Optional[Callable] = None
 
     def abstract_params(self, cfg):
@@ -76,11 +78,11 @@ def _tfm_prefill(p, cfg, batch, state, swan=None, proj=None, k_active=None,
 
 def _tfm_prefill_chunk(p, cfg, batch, state, slot, start, swan=None,
                        proj=None, k_active=None, true_len=None,
-                       page_row=None, prefix_len=None):
-    return tfm.lm_prefill_chunk(p, cfg, batch["tokens"], state, slot, start,
-                                swan, proj, k_active=k_active,
-                                true_len=true_len, page_row=page_row,
-                                prefix_len=prefix_len)
+                       page_tab=None, prefix_len=None):
+    return tfm.lm_prefill_chunk_batched(p, cfg, batch["tokens"], state, slot,
+                                        start, swan, proj, k_active=k_active,
+                                        true_len=true_len, page_tab=page_tab,
+                                        prefix_len=prefix_len)
 
 
 def _jamba_forward(p, cfg, batch):

@@ -374,61 +374,61 @@ def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
 
 def _swan_layer_prefill_chunk(lp: Params, p_qk_l, cache_l: Params, cfg, swan,
                               x: jnp.ndarray, slot, start, true_len,
-                              positions, k_act=None, page_row=None,
+                              positions, k_act=None, page_tab=None,
                               prefix_len: Optional[int] = None
                               ) -> Tuple[jnp.ndarray, Params]:
-    """One layer of chunked prefill against the BATCHED serve state: slice
-    the slot's lanes, attend to [winnowed sparse prefix ‖ ring ‖ chunk],
-    commit the chunk at offset, and scatter the lanes back.  Only the
-    slot's lanes (and, paged, the slot's own pages) are touched — decode
-    steps for other slots interleave freely between chunks."""
+    """One layer of BATCHED chunked prefill against the batched serve
+    state: gather the P selected slots' lanes (traced ``slot [P]``), attend
+    each lane to its [winnowed sparse prefix ‖ ring ‖ chunk], commit each
+    chunk at its own offset, and scatter the lanes back.  Only the selected
+    lanes (and, paged, their own pages) are touched — decode steps for
+    other slots interleave freely between chunks.  Dead lanes (``slot >=
+    n_slots``, padding of a partially filled prefill batch) gather clamped
+    garbage that is computed but never written: slab/ring scatters drop
+    out-of-range lanes, paged writes are redirected to the trash page."""
     Kv = cfg.n_kv_heads
+    n_slots = cache_l["buf_pos"].shape[0]
     q, k, v = attn.project_qkv(lp["attn"], cfg, x, positions)
-    q_hat = rotate_q(q, p_qk_l, Kv)                      # [1,S,Kv,G,dh]
+    q_hat = rotate_q(q, p_qk_l, Kv)                      # [P,S,Kv,G,dh]
     k_hat = rotate_k(k, p_qk_l)
-
-    def take_lane(a):
-        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0)
-
-    def put_lane(big, one):
-        return jax.lax.dynamic_update_slice_in_dim(
-            big, one.astype(big.dtype), slot, axis=0)
-
-    ring = {n: take_lane(cache_l[n]) for n in ("buf_k", "buf_v", "buf_pos")}
+    lane_ix = jnp.minimum(slot, n_slots - 1)             # clamped gather
+    ring = {n: cache_l[n][lane_ix] for n in ("buf_k", "buf_v", "buf_pos")}
     out_l = dict(cache_l)
-    if page_row is None:                                 # slab layout
-        lane = dict(ring)
-        lane["k"] = jax.tree_util.tree_map(take_lane, cache_l["k"])
-        lane["v"] = jax.tree_util.tree_map(take_lane, cache_l["v"])
-        view = lane
-        if prefix_len is not None and prefix_len < lane["k"]["vals"].shape[2]:
+    if page_tab is None:                                 # slab layout
+        view = dict(ring)
+        for n in ("k", "v"):
             # attend to a STATIC power-of-two prefix of the slab rows (the
-            # caller buckets start+S up): the bulk read's transient then
-            # follows the prompt so far, not max_seq — one executable per
-            # (chunk, prefix) bucket, O(log max_seq) total
-            view = dict(ring)
-            for n in ("k", "v"):
-                view[n] = jax.tree_util.tree_map(
-                    lambda a: jax.lax.slice_in_dim(a, 0, prefix_len, axis=2),
-                    lane[n])
+            # caller buckets max(start)+S up): the bulk read's transient
+            # then follows the prompts so far, not max_seq — one executable
+            # per (P, chunk, prefix) bucket, O(log³) total
+            pl = (min(prefix_len, cache_l[n]["vals"].shape[2])
+                  if prefix_len is not None else cache_l[n]["vals"].shape[2])
+            view[n] = jax.tree_util.tree_map(
+                lambda a: jax.lax.slice_in_dim(a, 0, pl, axis=2)[lane_ix],
+                cache_l[n])
         o = swa.swan_chunk_prefill_attention(q_hat, k_hat, v, view, swan,
                                              cfg, start, true_len)
-        lane = hc.swan_cache_insert_prefill_chunk(lane, swan, cfg, k_hat, v,
-                                                  start, true_len, k_act=k_act)
-        for n in ("k", "v"):
-            out_l[n] = jax.tree_util.tree_map(put_lane, cache_l[n], lane[n])
+        dest, packed_k, packed_v, upd = hc.chunk_evict_winnow(
+            ring, swan, k_hat, v, start, true_len, k_act=k_act)
+        ring_new = {**ring, **upd}
+        out_l["k"] = hc.write_sparse_rows(cache_l["k"], packed_k, slot, dest)
+        out_l["v"] = hc.write_sparse_rows(cache_l["v"], packed_v, slot, dest)
     else:                                                # paged layout
+        page_rows = page_tab[lane_ix]                    # [P, Pg]
         lane = dict(ring)
         lane["pool"] = cache_l["pool"]
-        view = swa.paged_logical_view(lane, page_row[None])
+        view = swa.paged_logical_view(lane, page_rows)
         o = swa.swan_chunk_prefill_attention(q_hat, k_hat, v, view, swan,
                                              cfg, start, true_len)
         lane = pc.paged_insert_prefill_chunk(lane, swan, cfg, k_hat, v,
-                                             start, true_len, page_row,
-                                             k_act=k_act)
+                                             start, true_len, page_rows,
+                                             k_act=k_act,
+                                             dead=slot >= n_slots)
         out_l["pool"] = lane["pool"]
+        ring_new = {n: lane[n] for n in ("buf_k", "buf_v", "buf_pos")}
     for n in ("buf_k", "buf_v", "buf_pos"):
-        out_l[n] = put_lane(cache_l[n], lane[n])
+        out_l[n] = cache_l[n].at[slot].set(
+            ring_new[n].astype(cache_l[n].dtype), mode="drop")
     return attn.output_proj(lp["attn"], o), out_l
 
 
@@ -436,80 +436,87 @@ def _dense_layer_prefill_chunk(lp: Params, cache_l: Params, cfg,
                                x: jnp.ndarray, slot, start, positions,
                                prefix_len: Optional[int] = None
                                ) -> Tuple[jnp.ndarray, Params]:
-    """Chunked prefill for the dense-cache baseline: insert the chunk's K/V
-    at [start, start+S) in the slot's lane, then causal attention of the
-    chunk against the lane's first ``prefix_len`` rows (a static bucket
-    >= start + S; rows past the chunk are masked by the causal offset)."""
+    """Batched chunked prefill for the dense-cache baseline: insert each
+    lane's chunk K/V at [start_p, start_p+S) in its slot's lane, then
+    causal attention of each chunk against its lane's first ``prefix_len``
+    rows (a static bucket >= max(start) + S; rows past a lane's chunk are
+    masked by the per-lane causal offset)."""
+    n_slots = cache_l["k"].shape[0]
     q, k, v = attn.project_qkv(lp["attn"], cfg, x, positions)
-    lane = jax.tree_util.tree_map(
-        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0), cache_l)
-    lane = attn.dense_cache_insert(lane, k, v, start)
-    view = lane
-    if prefix_len is not None and prefix_len < lane["k"].shape[2]:
-        view = jax.tree_util.tree_map(
-            lambda a: jax.lax.slice_in_dim(a, 0, prefix_len, axis=2), lane)
-    kc = view["k"].transpose(0, 2, 1, 3)                 # [1, P, Kv, dh]
+    cache_l = attn.dense_cache_insert_rows(cache_l, k, v, slot, start)
+    lane_ix = jnp.minimum(slot, n_slots - 1)
+    pl = (min(prefix_len, cache_l["k"].shape[2])
+          if prefix_len is not None else cache_l["k"].shape[2])
+    view = jax.tree_util.tree_map(
+        lambda a: jax.lax.slice_in_dim(a, 0, pl, axis=2)[lane_ix], cache_l)
+    kc = view["k"].transpose(0, 2, 1, 3)                 # [P, pl, Kv, dh]
     vc = view["v"].transpose(0, 2, 1, 3)
     if kc.shape[1] > attn.DENSE_ATTN_MAX_SEQ:
         o = attn.blocked_attention(q, kc, vc, causal=True, q_offset=start)
     else:
         o = attn.dense_attention(q, kc, vc, mask=None, causal=True,
                                  q_offset=start)
-    cache_l = jax.tree_util.tree_map(
-        lambda big, one: jax.lax.dynamic_update_slice_in_dim(
-            big, one.astype(big.dtype), slot, axis=0), cache_l, lane)
     return attn.output_proj(lp["attn"], o), cache_l
 
 
-def lm_prefill_chunk(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
-                     slot, start, swan=None,
-                     projections: Optional[Params] = None,
-                     k_active=None, true_len=None, page_row=None,
-                     prefix_len: Optional[int] = None
-                     ) -> Tuple[jnp.ndarray, Params]:
-    """Advance ONE slot's prefill by a chunk of S tokens against the
-    engine's BATCHED serve state (chunked prefill — cache-resume mode).
+def lm_prefill_chunk_batched(p: Params, cfg, tokens: jnp.ndarray,
+                             caches: Params, slot, start, swan=None,
+                             projections: Optional[Params] = None,
+                             k_active=None, true_len=None, page_tab=None,
+                             prefix_len: Optional[int] = None
+                             ) -> Tuple[jnp.ndarray, Params]:
+    """Advance up to P slots' prefills by one chunk EACH against the
+    engine's BATCHED serve state — ONE executable per step no matter how
+    many prefills are in flight (batched concurrent chunked prefill).
 
-    ``tokens [1, S]``: the chunk, padded to a power-of-two bucket;
-    ``slot`` / ``start`` / ``true_len`` are traced scalars — the slot index
-    in the batched state, the absolute position of the chunk's first token,
-    and the number of real tokens in this chunk.  One executable serves
-    every chunk of a given padded size.
+    ``tokens [P, C]``: the packed chunks, one lane per in-flight prefill,
+    padded to a power-of-two width C; ``slot`` / ``start`` / ``true_len``
+    (and per-request ``k_active``) are traced int32 [P] — each lane's slot
+    index in the batched state, the absolute position of its chunk's first
+    token, and its number of real chunk tokens.  P is a power-of-two
+    bucket: lanes past the selected prefills are DEAD (``slot = n_slots``,
+    out of range) — they compute clamped garbage whose writes are dropped
+    (slab/ring) or land on the trash page (paged).  One executable serves
+    every (P, C) bucket pair, so admission bursts compile O(log n_slots ×
+    log chunk) shapes, not one per combination of in-flight prefills.
 
-    The chunk attends causally to [already-cached tokens ‖ chunk]: with
-    SWAN, positions [0, start) are seen exactly as a decode step at the
-    same position sees them (winnowed sparse prefix + dense ring) while
-    in-chunk positions stay dense, and the hybrid cache is advanced so that
-    after the chunk the ring holds [start + true_len - b, start + true_len)
-    — indistinguishable at the boundary from a monolithic prefill of
-    start + true_len tokens.  ``page_row`` (the slot's page-table row)
+    Each lane's chunk attends causally to [its already-cached tokens ‖
+    chunk]: with SWAN, positions [0, start_p) are seen exactly as a decode
+    step at the same position sees them (winnowed sparse prefix + dense
+    ring) while in-chunk positions stay dense, and the hybrid cache is
+    advanced so that after the chunk the ring holds [start + true_len - b,
+    start + true_len) — indistinguishable at the boundary from a monolithic
+    prefill of start + true_len tokens.  ``page_tab [n_slots, Pg]`` (a
+    power-of-two page-table prefix; lanes gather their own rows by slot)
     routes sparse reads/writes through the shared page pool instead.
 
-    ``prefix_len`` (STATIC python int >= start + S, power-of-two-bucketed
-    by the caller) bounds the attention read to the lane's first rows on
-    the slab/dense layouts, so the bulk-read transient follows the prompt
-    so far instead of max_seq (the paged layout is already bounded by its
-    shipped ``page_row`` prefix).
+    ``prefix_len`` (STATIC python int >= max(start) + C,
+    power-of-two-bucketed by the caller) bounds the attention read to each
+    lane's first slab/dense rows, so the bulk-read transient follows the
+    prompts so far instead of max_seq (the paged layout is already bounded
+    by its shipped ``page_tab`` prefix).
 
     VLM prefix embeddings are not supported on the chunked path (the
     engine's monolithic admission handles those prompts).
 
-    Returns (logits at the chunk's last real token [1, 1, V], caches).
+    Returns (logits at each chunk's last real token [P, V], caches) —
+    dead lanes' logits are garbage the caller discards.
     """
-    B, S = tokens.shape
-    start = jnp.asarray(start, jnp.int32)
-    true_len = jnp.asarray(S if true_len is None else true_len, jnp.int32)
+    P, S = tokens.shape
+    start = hc.per_seq_pos(start, P)
+    true_len = (jnp.full((P,), S, jnp.int32) if true_len is None
+                else hc.per_seq_pos(true_len, P))
     use_swan = swan is not None and swan.enabled
-    if page_row is not None and not use_swan:
-        raise ValueError("page_row given but SWAN disabled — only the "
+    if page_tab is not None and not use_swan:
+        raise ValueError("page_tab given but SWAN disabled — only the "
                          "sparse sides are paged")
     x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
-    positions = jnp.broadcast_to(start + jnp.arange(S)[None], (B, S))
+    positions = start[:, None] + jnp.arange(S)[None]     # [P, S]
     if cfg.pos == "learned":
         x = x + jnp.take(p["pos_embed"], jnp.minimum(
             positions, p["pos_embed"].shape[0] - 1), axis=0).astype(x.dtype)
     x = shard(x, "residual")
-    k_req = None if k_active is None else jnp.asarray(k_active, jnp.int32)
+    k_req = None if k_active is None else hc.per_seq_pos(k_active, P)
 
     def body(x, xs):
         lp, cache_l, p_qk_l, k_l = xs
@@ -518,7 +525,7 @@ def lm_prefill_chunk(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
             k_eff = k_l if k_req is None else jnp.minimum(k_l, k_req)
             h, cache_l = _swan_layer_prefill_chunk(
                 lp, p_qk_l, cache_l, cfg, swan, h, slot, start, true_len,
-                positions, k_act=k_eff, page_row=page_row,
+                positions, k_act=k_eff, page_tab=page_tab,
                 prefix_len=prefix_len)
         else:
             h, cache_l = _dense_layer_prefill_chunk(lp, cache_l, cfg, h,
@@ -530,10 +537,11 @@ def lm_prefill_chunk(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
 
     pq, k_arr = _swan_scan_xs(cfg, swan, projections, use_swan)
     x, caches = jax.lax.scan(body, x, (p["layers"], caches, pq, k_arr))
-    x = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    x = jnp.take_along_axis(                             # last REAL token
+        x, jnp.maximum(true_len - 1, 0)[:, None, None], axis=1)
     x = apply_norm(p["ln_f"], cfg, x)
     head = p["embed"].T if cfg.tie_embeddings else p["head"]
-    return x @ head.astype(x.dtype), caches
+    return (x @ head.astype(x.dtype))[:, 0], caches
 
 
 def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,

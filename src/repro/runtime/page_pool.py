@@ -64,6 +64,10 @@ class PagePool:
         self.n_mapped = np.zeros((n_slots,), np.int64)
         self._owner = np.full((n_pages,), -1, np.int64)   # -1 = free/trash
         self._held = np.zeros((n_slots,), np.int64)       # outstanding holds
+        # dirty counter: bumped on every ``table`` mutation so the engine
+        # can cache device uploads of table prefixes and re-ship only when
+        # the mapping actually changed (most decode steps map nothing)
+        self.version = 0
 
     # ------------------------------------------------------------------
     # Allocation
@@ -109,6 +113,7 @@ class PagePool:
         self._owner[p] = slot
         self.table[slot, self.n_mapped[slot]] = p
         self.n_mapped[slot] += 1
+        self.version += 1
         return p
 
     def free_slot(self, slot: int) -> int:
@@ -123,6 +128,8 @@ class PagePool:
         self.table[slot, :] = TRASH_PAGE
         self.n_mapped[slot] = 0
         self._held[slot] = 0
+        if n:
+            self.version += 1
         return n
 
     # ------------------------------------------------------------------

@@ -44,16 +44,30 @@ prompt's prefill.  With chunking, each slot moves through a small state
 machine::
 
     queued -> PREFILLING -> DECODING -> retired
-               |  one chunk of <= C tokens per engine step, via
+               |  chunks of <= C tokens per engine step, via
                |  ``api.prefill_chunk`` straight into the slot's lanes of
                |  the BATCHED state (no single-slot transient at all: the
                |  slab path's init_serve_state(1, max_seq) admission
                |  allocation is gone, and paged admissions map pages per
                |  chunk, not per prompt)
 
-Every engine step spends a bounded prefill budget — at most ONE in-flight
-prefill advances by one chunk — and then runs the batched decode for all
-DECODING slots, so a long-prompt admission never stalls decoding.
+Batched concurrent prefill (``prefill_slots=P``, ``prefill_budget=T``):
+up to ``P`` slots may be PREFILLING at once, and every engine step
+round-robins the per-step token budget ``T`` (default ``P * C``) across
+them — a rotating pointer picks up to ``P`` in-flight prefills, each
+advances by one full chunk, and ALL the selected chunks are packed into
+ONE jitted multi-slot executable (``transformer.lm_prefill_chunk_batched``,
+traced ``[P]`` slot/start/true_len/k operands).  The lane count is
+bucketed to a power of two (dead lanes park their slot index out of range:
+slab/ring writes drop, paged writes land on the trash page), so an
+admission burst compiles O(log n_slots × log chunk) executables instead of
+one per combination of in-flight prefills — and each engine step issues
+exactly ONE chunk dispatch plus ONE decode dispatch no matter how many
+prefills are in flight.  Under a burst of admissions, time-to-first-token
+is therefore O(prompt chunks), not O(queue depth × prompt chunks), and the
+round-robin keeps every in-flight prefill advancing (no starvation) —
+benchmarks/bench_concurrent_prefill.py gates the p99 TTFT win.
+
 PREFILLING slots sit at ``pos = -1``; the decode step treats ``pos < 0``
 lanes as dead (ring untouched, sparse/dense writes dropped or sent to the
 trash page), which is what makes mid-prefill interleaving safe.  The last
@@ -62,7 +76,9 @@ DECODING.  Chunk boundaries are invisible in the cache: after a chunk the
 ring holds the last ``b`` tokens and the winnowed prefix everything older,
 exactly as a monolithic prefill of the same tokens would leave them —
 chunked and monolithic engines are token-identical whenever winnowing is
-(tests/test_chunked_prefill.py).
+(tests/test_chunked_prefill.py), and the batched-concurrent scheduler is
+token-identical to the serial one at ANY compression because per-lane
+chunk boundaries stay full chunks (tests/test_concurrent_prefill.py).
 """
 from __future__ import annotations
 
@@ -112,6 +128,10 @@ class Completion:
     k: Optional[int]
     admitted_step: int
     finished_step: int
+    # engine step that sampled the request's FIRST token (prefill
+    # completion) — time-to-first-token in scheduler steps; what the
+    # concurrent-prefill benchmark gates
+    first_token_step: int = -1
 
 
 @dataclass
@@ -125,6 +145,7 @@ class _Slot:
     admitted_step: int = 0
     state: str = "decoding"
     n_prefilled: int = 0
+    first_token_step: int = -1
 
 
 class ServeEngine:
@@ -134,7 +155,9 @@ class ServeEngine:
                  max_seq: int = 4096, n_slots: int = 4, jit: bool = True,
                  paged: bool = False, page_size: int = 64,
                  n_pages: Optional[int] = None, bucket_prompts: bool = True,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 prefill_slots: int = 1,
+                 prefill_budget: Optional[int] = None):
         self.cfg = cfg
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
@@ -177,6 +200,24 @@ class ServeEngine:
                 raise ValueError(f"{cfg.family!r} family cannot resume a "
                                  "prefill mid-prompt (recurrent state) — "
                                  "chunked prefill unsupported")
+        if prefill_slots < 1:
+            raise ValueError(f"prefill_slots={prefill_slots} must be >= 1")
+        if prefill_slots > 1 and prefill_chunk is None:
+            raise ValueError("prefill_slots > 1 (batched concurrent "
+                             "prefill) requires prefill_chunk")
+        self.prefill_slots = min(prefill_slots, n_slots)
+        # soft per-step token cap round-robined across in-flight prefills:
+        # lanes are selected until the budget is spent, and every selected
+        # lane still advances a FULL chunk — boundaries never depend on the
+        # budget, which is what keeps the batched scheduler token-identical
+        # to the serial one at any compression level
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(f"prefill_budget={prefill_budget} must be >= 1")
+        if prefill_budget is not None and prefill_chunk is None:
+            raise ValueError("prefill_budget requires prefill_chunk — a "
+                             "monolithic admission has no per-step budget")
+        self.prefill_budget = (prefill_budget if prefill_budget is not None
+                               else self.prefill_slots * (prefill_chunk or 0))
 
         self.paged = paged
         if paged:
@@ -238,16 +279,19 @@ class ServeEngine:
                                            page_size)
 
         def chunk_fn(p, tokens, state, slot, start, k_act, true_len,
-                     page_row, prefix_len):
+                     page_tab, prefix_len):
             kw = {}
             if self._k_threading:
                 kw["k_active"] = k_act
             if self.paged:
-                kw["page_row"] = page_row
-            return self.api.prefill_chunk(p, cfg, {"tokens": tokens}, state,
-                                          slot, start, sw, pj,
-                                          true_len=true_len,
-                                          prefix_len=prefix_len, **kw)
+                kw["page_tab"] = page_tab
+            logits, state = self.api.prefill_chunk(
+                p, cfg, {"tokens": tokens}, state, slot, start, sw, pj,
+                true_len=true_len, prefix_len=prefix_len, **kw)
+            # device-side greedy first-token sampling, mirroring decode_fn:
+            # ship back [P] ids; logits rows cross to host only for lanes
+            # that finished a temperature request's prompt
+            return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), state
 
         if jit:
             self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
@@ -267,9 +311,15 @@ class ServeEngine:
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.slot_pos = np.full((n_slots,), -1, np.int32)   # next decode position
         self.slot_k = np.full((n_slots,), k_fill, np.int32)
+        self._k_fill = k_fill
         self.next_tok = np.zeros((n_slots,), np.int32)
         self.step_count = 0
         self.completions: List[Completion] = []
+        self._prefill_rr = 0        # round-robin pointer over prefill lanes
+        # device copies of page-table prefixes, keyed by shipped width and
+        # invalidated by the pool's dirty counter — decode steps and chunk
+        # dispatches between page-mapping events reuse the last upload
+        self._table_cache: Dict[int, Any] = {}
 
     # ------------------------------------------------------------------
     # Scheduling
@@ -329,6 +379,20 @@ class ServeEngine:
         key = jax.random.fold_in(jax.random.PRNGKey(req.seed), n_prev)
         return int(sample_token(logits, req.temperature, key))
 
+    def _lane_tokens(self, logits, greedy, picks) -> List[int]:
+        """One token per (lane, request, draw-index) triple against device
+        ``logits [N, V]`` / ``greedy [N]``: greedy lanes take the device
+        argmax ([N] ints, tiny), and ONLY the temperature lanes' [V] rows
+        are gathered on device before the host transfer — a greedy batch
+        never round-trips the full logits."""
+        greedy = np.asarray(greedy)
+        temp = [lane for lane, req, _ in picks if req.temperature > 0.0]
+        rows = (np.asarray(logits[jnp.asarray(temp, np.int32)])
+                if temp else None)
+        return [int(greedy[lane]) if req.temperature <= 0.0
+                else self._sample(rows[temp.index(lane)], req, draw)
+                for lane, req, draw in picks]
+
     def _bucket_len(self, plen: int) -> int:
         """Smallest power-of-two bucket holding ``plen`` (capped at
         max_seq) — prefill compiles once per bucket, not per length."""
@@ -351,8 +415,8 @@ class ServeEngine:
         right now ([n_slots, p_bucket] int32) — the device-side table
         operand, as opposed to the host-resident full table.  The bucket
         covers DECODING slots, exactly as ``step()`` computes it
-        (prefilling lanes are dead in the decode and read via their own
-        per-chunk ``page_row`` operand instead)."""
+        (prefilling lanes are dead in the decode; chunk dispatches ship
+        their own table prefix bucketed over the selected lanes)."""
         dec = [i for i, s in enumerate(self.slots)
                if s is not None and s.state == "decoding"]
         return self.n_slots * self._page_bucket(dec) * 4
@@ -366,9 +430,10 @@ class ServeEngine:
     def _admit(self, req: Request, slot: int) -> None:
         k_req = self.swan.k_max if (self.swan and req.k is None) else (req.k or 0)
         if self.prefill_chunk is not None:
-            # chunked admission: just claim the slot — chunks land one per
-            # engine step (see _advance_prefill), straight into the slot's
-            # lanes of the batched state.  No single-slot transient at all.
+            # chunked admission: just claim the slot — chunks land as the
+            # round-robin budget reaches this lane (see _advance_prefills),
+            # straight into the slot's lanes of the batched state.  No
+            # single-slot transient at all.
             if self.paged:
                 # pages are MAPPED per chunk, but the prompt's whole winnow
                 # need is HELD now — the admission gate checked it against
@@ -409,6 +474,7 @@ class ServeEngine:
         s = _Slot(req=req, admitted_step=self.step_count)
         first = self._sample(logits[0, -1], req, 0)
         s.generated.append(first)
+        s.first_token_step = self.step_count
         self.slots[slot] = s
         self.slot_pos[slot] = plen
         self.slot_k[slot] = k_req
@@ -425,7 +491,8 @@ class ServeEngine:
         self.completions.append(Completion(
             uid=s.req.uid, tokens=list(s.generated),
             prompt_len=len(s.req.tokens), k=s.req.k,
-            admitted_step=s.admitted_step, finished_step=self.step_count))
+            admitted_step=s.admitted_step, finished_step=self.step_count,
+            first_token_step=s.first_token_step))
         self.slots[slot] = None
         self.slot_pos[slot] = -1
         self.slot_k[slot] = self.swan.k_max if self.swan else 0
@@ -464,59 +531,122 @@ class ServeEngine:
     # Engine step
     # ------------------------------------------------------------------
 
-    def _advance_prefill(self) -> None:
-        """Advance the oldest in-flight chunked prefill by ONE chunk — the
-        per-step prefill token budget.  Full chunks share one executable;
-        the remainder chunk is bucketed to a power of two, so the chunked
-        path compiles O(log prefill_chunk) prefill executables total (plus
-        one decode-page bucket dimension on paged engines)."""
+    def _device_table(self, width: int):
+        """Device copy of the page table's first ``width`` columns
+        ([n_slots, width] int32) — cached per width and re-uploaded only
+        when the host table changed (``pool.version`` dirty counter).
+        Decode steps and chunk dispatches between page-mapping events
+        reuse the previous upload instead of shipping the table every
+        step."""
+        ver = self.pool.version
+        hit = self._table_cache.get(width)
+        if hit is None or hit[0] != ver:
+            hit = (ver, jnp.asarray(self.pool.table[:, :width]))
+            self._table_cache[width] = hit
+        return hit[1]
+
+    def _select_prefills(self):
+        """Round-robin up to ``prefill_slots`` PREFILLING lanes within the
+        per-step token budget.  A rotating pointer keeps every in-flight
+        prefill advancing (no starvation when more prefills are in flight
+        than ``prefill_slots``); each selected lane advances one FULL
+        chunk, so per-lane chunk boundaries — and therefore tokens — never
+        depend on the schedule."""
         cands = [i for i, s in enumerate(self.slots)
                  if s is not None and s.state == "prefilling"]
         if not cands:
+            return []
+        order = sorted(cands,
+                       key=lambda j: (j - self._prefill_rr) % self.n_slots)
+        sel: List[int] = []
+        spent = 0
+        for i in order:
+            if len(sel) >= self.prefill_slots or spent >= self.prefill_budget:
+                break
+            s = self.slots[i]
+            sel.append(i)
+            spent += min(len(s.req.tokens) - s.n_prefilled, self.prefill_chunk)
+        self._prefill_rr = (sel[-1] + 1) % self.n_slots
+        return sel
+
+    def _advance_prefills(self) -> None:
+        """Advance the round-robin-selected in-flight prefills by one chunk
+        EACH, packed into ONE batched chunk dispatch.  The lane count is
+        bucketed to a power of two (dead lanes park slot = n_slots, out of
+        range) and full chunks share one width, so admission bursts compile
+        O(log n_slots × log chunk) executables (times a slab-prefix or
+        paged-table bucket dimension)."""
+        sel = self._select_prefills()
+        if not sel:
             return
-        i = min(cands, key=lambda j: (self.slots[j].admitted_step, j))
-        s = self.slots[i]
-        plen = len(s.req.tokens)
-        start = s.n_prefilled
-        rem = plen - start
-        t = min(rem, self.prefill_chunk)
-        pad = self.prefill_chunk if rem >= self.prefill_chunk else self._pow2(t)
-        toks = np.zeros((pad,), np.int32)
-        toks[:t] = np.asarray(s.req.tokens[start:start + t], np.int32)
+        P = self._pow2(len(sel))
+        pads, lens = [], []
+        for i in sel:
+            s = self.slots[i]
+            rem = len(s.req.tokens) - s.n_prefilled
+            t = min(rem, self.prefill_chunk)
+            lens.append(t)
+            pads.append(self.prefill_chunk if rem >= self.prefill_chunk
+                        else self._pow2(t))
+        C = max(pads)
+        toks = np.zeros((P, C), np.int32)
+        slot_v = np.full((P,), self.n_slots, np.int32)  # dead lanes park OOB
+        start_v = np.zeros((P,), np.int32)
+        tlen_v = np.ones((P,), np.int32)
+        k_v = np.full((P,), self._k_fill, np.int32)
+        for lane, i in enumerate(sel):
+            s = self.slots[i]
+            st, t = s.n_prefilled, lens[lane]
+            toks[lane, :t] = np.asarray(s.req.tokens[st:st + t], np.int32)
+            slot_v[lane] = i
+            start_v[lane] = st
+            tlen_v[lane] = t
+            k_v[lane] = self.slot_k[i]
         if self.paged:
-            # map pages for the tokens this chunk winnows; overshoot writes
-            # past them land on the trash page and are rewritten by the
-            # next chunk once its pages exist
-            self.pool.ensure(i, self._sparse_tokens(start + t - 1))
-            p_row = self._pow2(max(1, int(self.pool.n_mapped[i])))
-            p_row = min(p_row, self.pool.pages_per_seq)
-            page_row = jnp.asarray(self.pool.table[i, :p_row])
-            prefix = None                   # the page_row prefix bounds reads
+            for lane, i in enumerate(sel):
+                # map pages for the tokens this chunk winnows; overshoot
+                # writes past them land on the trash page and are rewritten
+                # by the next chunk once its pages exist
+                self.pool.ensure(i, self._sparse_tokens(
+                    start_v[lane] + lens[lane] - 1))
+            pg = self._pow2(max(1, max(int(self.pool.n_mapped[i])
+                                       for i in sel)))
+            page_tab = self._device_table(min(pg, self.pool.pages_per_seq))
+            prefix = None               # the page_tab prefix bounds reads
         else:
-            page_row = jnp.zeros((), jnp.int32)         # unused operand
-            prefix = min(self._pow2(start + pad), self.max_seq)
-        logits, self.state = self._chunk(
-            self.params, jnp.asarray(toks)[None], self.state,
-            jnp.asarray(i, jnp.int32), jnp.asarray(start, jnp.int32),
-            jnp.asarray(self.slot_k[i], jnp.int32),
-            jnp.asarray(t, jnp.int32), page_row, prefix)
-        s.n_prefilled = start + t
-        if s.n_prefilled == plen:                       # prompt complete
+            page_tab = jnp.zeros((), jnp.int32)         # unused operand
+            prefix = min(self._pow2(int(start_v.max()) + C), self.max_seq)
+        logits, greedy, self.state = self._chunk(
+            self.params, jnp.asarray(toks), self.state,
+            jnp.asarray(slot_v), jnp.asarray(start_v), jnp.asarray(k_v),
+            jnp.asarray(tlen_v), page_tab, prefix)
+        fins = []
+        for lane, i in enumerate(sel):
+            s = self.slots[i]
+            s.n_prefilled += lens[lane]
+            if s.n_prefilled == len(s.req.tokens):      # prompt complete
+                fins.append((lane, i))
+        if not fins:
+            return
+        firsts = self._lane_tokens(
+            logits, greedy, [(lane, self.slots[i].req, 0) for lane, i in fins])
+        for (lane, i), first in zip(fins, firsts):
+            s = self.slots[i]
             s.state = "decoding"
-            first = self._sample(logits[0, -1], s.req, 0)
             s.generated.append(first)
-            self.slot_pos[i] = plen
+            s.first_token_step = self.step_count
+            self.slot_pos[i] = len(s.req.tokens)
             self.next_tok[i] = first
             self._maybe_retire(i)
 
     def step(self) -> int:
-        """One scheduler iteration: admit → advance one prefill chunk →
-        batched decode → retire.  Returns the number of sequences that
-        finished this step."""
+        """One scheduler iteration: admit → one batched multi-slot prefill
+        chunk dispatch → one batched decode dispatch → retire.  Returns the
+        number of sequences that finished this step."""
         n_done0 = len(self.completions)
         self._admit_pending()
         if self.prefill_chunk is not None:
-            self._advance_prefill()
+            self._advance_prefills()
         active = [i for i, s in enumerate(self.slots)
                   if s is not None and s.state == "decoding"]
         if active:
@@ -529,25 +659,22 @@ class ServeEngine:
                 # ship only a power-of-two bucket of logical pages: the
                 # attention gather then materialises a view sized by LIVE
                 # pages, not max_seq (transient memory follows tokens too);
-                # one decode executable per bucket — O(log max_pages) total
-                page_tab = jnp.asarray(
-                    self.pool.table[:, :self._page_bucket(active)])
+                # one decode executable per bucket — O(log max_pages) total.
+                # The upload itself is cached (dirty-flag) in _device_table.
+                page_tab = self._device_table(self._page_bucket(active))
             else:
                 page_tab = jnp.zeros((), jnp.int32)     # unused operand
             logits, greedy, self.state = self._decode(
                 self.params, jnp.asarray(self.next_tok),
                 jnp.asarray(self.slot_pos), jnp.asarray(self.slot_k),
                 page_tab, self.state)
-            greedy = np.asarray(greedy)                 # [B] ints — tiny
-            need_logits = any(self.slots[i].req.temperature > 0.0
-                              for i in active)
-            logits_h = np.asarray(logits) if need_logits else None
-            for i in active:
+            toks = self._lane_tokens(
+                logits, greedy,
+                [(i, self.slots[i].req, len(self.slots[i].generated))
+                 for i in active])
+            for i, tok in zip(active, toks):
                 self.slot_pos[i] += 1
-                s = self.slots[i]
-                tok = (int(greedy[i]) if s.req.temperature <= 0.0
-                       else self._sample(logits_h[i], s.req, len(s.generated)))
-                s.generated.append(tok)
+                self.slots[i].generated.append(tok)
                 self.next_tok[i] = tok
                 self._maybe_retire(i)
         self.step_count += 1
