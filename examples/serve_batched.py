@@ -49,6 +49,12 @@ def main():
                     help="per-step prefill token budget round-robined "
                          "across in-flight prefills (default: "
                          "prefill-slots * prefill-chunk)")
+    ap.add_argument("--data-parallel", type=int, default=None,
+                    help="shard slots, caches and the paged pool over a "
+                         "('data',) mesh of this many devices (run with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N to simulate a mesh on CPU; --slots must "
+                         "divide)")
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--buffer", type=int, default=16)
     ap.add_argument("--quantize", action="store_true")
@@ -62,6 +68,10 @@ def main():
             and not args.prefill_chunk):
         raise SystemExit("--prefill-slots/--prefill-budget require "
                          "--prefill-chunk")
+    mesh = None
+    if args.data_parallel:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.data_parallel)
 
     cfg = get_smoke_config("llama3-8b").replace(
         n_layers=4, d_model=128, n_heads=8, n_kv_heads=4, d_head=16,
@@ -93,7 +103,7 @@ def main():
     dense = ServeEngine(cfg, params, max_seq=args.max_seq, n_slots=args.slots,
                         prefill_chunk=args.prefill_chunk,
                         prefill_slots=args.prefill_slots,
-                        prefill_budget=args.prefill_budget)
+                        prefill_budget=args.prefill_budget, mesh=mesh)
     bench(dense, requests([None]), "dense")
 
     if not args.no_swan:
@@ -107,7 +117,7 @@ def main():
                           max_seq=args.max_seq, n_slots=args.slots,
                           prefill_chunk=args.prefill_chunk,
                           prefill_slots=args.prefill_slots,
-                          prefill_budget=args.prefill_budget)
+                          prefill_budget=args.prefill_budget, mesh=mesh)
         # per-request runtime-tunable compression: mix full and half k
         bench(eng, requests([k_max, max(k_max // 2, 1)]), "swan")
         print(f"        decode executables for the mixed-k batch: "
@@ -119,7 +129,7 @@ def main():
                              page_size=args.page_size,
                              prefill_chunk=args.prefill_chunk,
                              prefill_slots=args.prefill_slots,
-                             prefill_budget=args.prefill_budget)
+                             prefill_budget=args.prefill_budget, mesh=mesh)
             bench(pg, requests([k_max, max(k_max // 2, 1)]), "paged")
             rep = pg.cache_report()
             print(f"        paged: slab layout would reserve "

@@ -17,7 +17,12 @@ the trash page (never allocated): unmapped table entries point there, so
 clamped garbage writes and gathers of not-yet-live pages are harmless (see
 ``repro.runtime.page_pool``).  One physical page id backs the same logical
 page in EVERY layer and on BOTH k/v sides — one host allocation covers the
-whole model.
+whole model.  Under the mesh-sharded serve engine the page axis is
+partitioned over the mesh's ``data`` axis into equal per-shard blocks and
+table entries are SHARD-LOCAL physical indices, so ``TRASH_PAGE`` (local
+page 0) names each shard's own trash page — redirected garbage writes
+never cross shards, and every function in this module runs unchanged on a
+shard's local block inside ``shard_map``.
 
 Paper Eq. 1 memory accounting, page-granular: each sparse vector still
 costs k·(2+1) bytes (16-bit vals + int8 idx), or k·(1+1) (+4-byte scale)
@@ -234,15 +239,21 @@ def _scatter_side(pool_side: Params, slot_side: Params,
 def paged_insert_prefill(state: Params, one: Params, slot,
                          phys_rows: jnp.ndarray, page_size: int) -> Params:
     """Admit a batch=1 prefilled slab state into the paged batched state:
-    ring leaves go in by ``dynamic_update_slice`` on the batch axis (as in
-    the slab engine); sparse sides scatter page-wise into the pool at the
-    slot's physical pages."""
+    ring leaves scatter into lane ``slot`` of the batch axis; sparse sides
+    scatter page-wise into the pool at the slot's physical pages.
+
+    Shard-safe by construction (the mesh-sharded engine calls this inside
+    ``shard_map`` on every shard with a LOCAL ``slot`` index): the ring
+    scatter uses ``mode="drop"``, so non-owner shards — whose ``slot`` is
+    parked out of range — write nothing, and their ``phys_rows`` are
+    redirected to the local trash page, which absorbs the replicated
+    pool scatter."""
     out = dict(state)
     out["pool"] = {
         "k": _scatter_side(state["pool"]["k"], one["k"], phys_rows, page_size),
         "v": _scatter_side(state["pool"]["v"], one["v"], phys_rows, page_size),
     }
     for leaf in ("buf_k", "buf_v", "buf_pos"):
-        out[leaf] = jax.lax.dynamic_update_slice_in_dim(
-            state[leaf], one[leaf].astype(state[leaf].dtype), slot, axis=1)
+        out[leaf] = state[leaf].at[:, slot].set(
+            one[leaf][:, 0].astype(state[leaf].dtype), mode="drop")
     return out

@@ -15,6 +15,15 @@ VMEM tiles and in-register expansion.
 
 In ``truncate`` mode no gather/scatter happens at all: scores are a dense
 low-rank dot over the leading k dims (pure MXU).
+
+Batch-shardability (audited for the mesh-sharded serve engine): every
+attention path here — decode, paged decode, and the bulk chunk-prefill
+reads — is lane-local: gathers/scatters index each lane's own cache rows
+(or its own page-table row), softmax stats reduce over sequence/k dims
+only, and the ONLY collectives in this module are the opt-in split-S
+pmax/psum merge above, which fires solely when sharding rules place the
+sequence dim on a mesh axis.  The serve engine shards the BATCH axis via
+``shard_map``, under which these functions run unchanged per shard.
 """
 from __future__ import annotations
 

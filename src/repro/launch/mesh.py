@@ -34,3 +34,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small ones, e.g. (2, 4))."""
     return _mk(tuple(shape), tuple(axes))
+
+
+def make_serve_mesh(data_parallel: int):
+    """1-axis ('data',) mesh for the sharded serve engine
+    (repro.runtime.serve_engine with mesh=): the engine's batched state —
+    and the paged pool's page axis — shard over 'data'; model weights are
+    replicated across it."""
+    return _mk((int(data_parallel),), ("data",))

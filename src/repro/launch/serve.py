@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import SwanConfig, get_config, get_smoke_config
 from repro.launch.io import make_batch
+from repro.launch.mesh import make_mesh, make_serve_mesh
 from repro.models import get_model, swan_applicable
 from repro.runtime.serve_engine import Request, ServeEngine
 from repro.runtime.serve_loop import ServeSession, calibrate_swan
@@ -71,6 +72,23 @@ def main():
                     help="engine: per-step prefill token budget "
                          "round-robined across in-flight prefills "
                          "(default: prefill-slots * prefill-chunk)")
+    ap.add_argument("--data-parallel", type=int, default=None,
+                    help="engine: shard slots, caches and the paged pool "
+                         "over a ('data',) mesh of this many devices "
+                         "(shard-local slot scheduler; n_slots must "
+                         "divide)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="engine: explicit mesh as 'AXIS=N,AXIS=N' (must "
+                         "include a data axis), e.g. 'data=4' or "
+                         "'data=4,model=2' — overrides --data-parallel")
+    ap.add_argument("--pool-grow", action="store_true",
+                    help="paged: grow the device pool (2x pages, copy, "
+                         "extend free lists) when it runs dry instead of "
+                         "holding admissions")
+    ap.add_argument("--admission", default="fifo", choices=["fifo", "srf"],
+                    help="engine: admission policy — fifo, or srf "
+                         "(shortest-remaining-first: bounds TTFT when the "
+                         "queue exceeds prefill capacity)")
     args = ap.parse_args()
     if args.prefill_chunk and not args.engine:
         raise SystemExit("--prefill-chunk requires --engine")
@@ -80,6 +98,10 @@ def main():
                          "--prefill-chunk")
     if args.paged and not (args.engine and args.swan):
         raise SystemExit("--paged requires --engine and --swan")
+    if (args.data_parallel or args.mesh_shape) and not args.engine:
+        raise SystemExit("--data-parallel/--mesh-shape require --engine")
+    if args.pool_grow and not args.paged:
+        raise SystemExit("--pool-grow requires --paged")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     api = get_model(cfg)
@@ -121,14 +143,31 @@ def main():
     print(f"cache [{rep['mode']}]: {rep['bytes'] / 1e6:.2f} MB{extra}")
 
 
+def _serve_mesh(args):
+    """Build the engine mesh from --mesh-shape / --data-parallel (None =
+    single device)."""
+    if args.mesh_shape:
+        pairs = [kv.split("=") for kv in args.mesh_shape.split(",")]
+        return make_mesh([int(n) for _, n in pairs], [ax for ax, _ in pairs])
+    if args.data_parallel:
+        return make_serve_mesh(args.data_parallel)
+    return None
+
+
 def _run_engine(cfg, params, swan, projections, args):
+    mesh = _serve_mesh(args)
     eng = ServeEngine(cfg, params, swan=swan, projections=projections,
                       max_seq=args.max_seq, n_slots=args.batch,
                       paged=args.paged, page_size=args.page_size,
                       n_pages=args.pool_pages,
                       prefill_chunk=args.prefill_chunk,
                       prefill_slots=args.prefill_slots,
-                      prefill_budget=args.prefill_budget)
+                      prefill_budget=args.prefill_budget,
+                      mesh=mesh, pool_grow=args.pool_grow,
+                      admission=args.admission)
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} — {eng.dp} shards x "
+              f"{eng.n_local} slots")
     n_req = args.requests or args.batch * 2
     k_cycle = ([None] if (swan is None or not args.mixed_k)
                else [swan.k_max, max(swan.k_max // 2, 1),

@@ -499,6 +499,18 @@ def lm_prefill_chunk_batched(p: Params, cfg, tokens: jnp.ndarray,
     VLM prefix embeddings are not supported on the chunked path (the
     engine's monolithic admission handles those prompts).
 
+    Batch-shardability (audited for the mesh-sharded serve engine, which
+    runs this function inside ``shard_map`` over the data axis): every op
+    here is lane-local — lanes only ever index the batched state through
+    their own ``slot`` entry, all reductions run over sequence/head/vocab
+    dims, and there are no cross-lane collectives.  The per-shard call is
+    therefore bit-identical to a single-device call on the shard's local
+    block, with ``slot`` given as SHARD-LOCAL lane indices: dead-lane
+    parking stays correct per shard because the parking value and the
+    clamped gather both derive from the LOCAL batch size
+    (``cache_l["buf_pos"].shape[0]``), and paged trash redirection targets
+    the shard's own local page 0.
+
     Returns (logits at each chunk's last real token [P, V], caches) —
     dead lanes' logits are garbage the caller discards.
     """
@@ -556,7 +568,18 @@ def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
 
     ``page_tab``: optional int32 [B, max_pages] page table — ``caches`` is
     then the paged layout from ``init_paged_caches`` and sparse reads/writes
-    go through the shared page pool (repro.core.paged_cache)."""
+    go through the shared page pool (repro.core.paged_cache).
+
+    Batch-shardability (audited for the mesh-sharded serve engine): the
+    decode step is lane-local end to end — per-sequence ``pos``/``k_active``
+    index nothing but their own lane, dead lanes (pos < 0) drop their
+    writes locally, the paged gather goes through the lane's own table row
+    into its shard's block of the pool, and no reduction crosses the batch
+    axis.  Running it inside ``shard_map`` over the data axis is therefore
+    bit-identical to the single-device step on each shard's local block
+    (the optional split-S collectives in swan_attention only arise when
+    sharding rules put the SEQUENCE dim on a mesh axis, which the serve
+    engine does not)."""
     B = token.shape[0]
     pos = hc.per_seq_pos(pos, B)
     x = jnp.take(p["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))

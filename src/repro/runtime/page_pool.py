@@ -7,16 +7,28 @@ numpy on the host — the scheduler already runs there, and the page table is
 shipped to the device as a tiny ``[n_slots, pages_per_seq]`` int32 operand
 each step.
 
+Sharding (``n_shards > 1``): under the mesh-sharded serve engine the device
+pool's page axis is partitioned over the mesh's ``data`` axis, exactly like
+the slab batch axis.  The allocator mirrors that: physical pages are split
+into ``n_shards`` equal blocks, slot ``s`` belongs to shard
+``s // slots_per_shard``, and a slot only ever maps pages from its own
+shard's free list.  Table entries store SHARD-LOCAL physical indices (what
+the device sees inside its ``shard_map`` block), and every shard has its
+OWN local trash page 0 — a redirected garbage write therefore never
+crosses shards.  ``n_shards=1`` is exactly the old single-device pool.
+
 Invariants (enforced, and property-tested in tests/test_page_pool.py):
 
-  * physical page 0 is the TRASH page: it is never allocated, and every
-    unmapped page-table entry points at it.  Clamped garbage writes (the
-    hybrid cache's pos < buffer eviction trick) and gathers of not-yet-live
-    logical pages all land there, where validity masks hide them;
-  * a physical page != 0 is owned by at most one slot at a time — two live
-    sequences can never alias storage;
-  * ``free_slot`` returns pages to the free list immediately, so a request
-    backfilled into the slot on the same engine step reuses them;
+  * local physical page 0 of every shard is a TRASH page: it is never
+    allocated, and every unmapped page-table entry points at it.  Clamped
+    garbage writes (the hybrid cache's pos < buffer eviction trick) and
+    gathers of not-yet-live logical pages all land there, where validity
+    masks hide them;
+  * a non-trash physical page is owned by at most one slot at a time — two
+    live sequences can never alias storage (and slots on different shards
+    can never even address each other's pages);
+  * ``free_slot`` returns pages to its shard's free list immediately, so a
+    request backfilled into the slot on the same engine step reuses them;
   * exhaustion raises ``PagePoolExhausted`` (a clean, catchable error)
     without corrupting allocator state;
   * reservations (``reserve``): a chunked prefill maps its pages one chunk
@@ -24,7 +36,12 @@ Invariants (enforced, and property-tested in tests/test_page_pool.py):
     need — the slot's own allocations consume the hold first, and no other
     slot may dip into held stock.  This closes the check-without-reserve
     race where a decoding slot's growth (or a same-step second admission)
-    starves an already-admitted in-flight prefill.
+    starves an already-admitted in-flight prefill;
+  * ``grow`` extends every shard's block by the same page count (the device
+    pool's page axis must stay evenly partitioned): existing local indices
+    — and therefore the whole page table — stay valid, and the new pages
+    join the BACK of each free list so warm just-freed pages are still
+    handed out first.
 """
 from __future__ import annotations
 
@@ -40,34 +57,54 @@ class PagePoolExhausted(RuntimeError):
 
 
 class PagePool:
-    """Free-list allocator over ``n_pages`` physical pages.
+    """Free-list allocator over ``n_pages`` physical pages in ``n_shards``
+    equal shard blocks.
 
-    ``table[slot, j]`` is the physical page backing logical page ``j`` of
-    ``slot`` (0 = unmapped / trash).  Logical pages are mapped densely from
-    0 upward — the hybrid cache writes winnowed tokens in position order, so
-    a sequence's mapping only ever grows at the end (until the slot is
-    freed wholesale on retirement).
+    ``table[slot, j]`` is the SHARD-LOCAL physical page backing logical
+    page ``j`` of ``slot`` (0 = unmapped / that shard's trash page).
+    Logical pages are mapped densely from 0 upward — the hybrid cache
+    writes winnowed tokens in position order, so a sequence's mapping only
+    ever grows at the end (until the slot is freed wholesale on
+    retirement).
     """
 
     def __init__(self, n_pages: int, pages_per_seq: int, n_slots: int,
-                 page_size: int):
-        if n_pages < 2:
-            raise ValueError("need >= 2 pages (page 0 is reserved as trash)")
+                 page_size: int, n_shards: int = 1):
+        if n_shards < 1:
+            raise ValueError(f"n_shards={n_shards} must be >= 1")
+        if n_pages % n_shards:
+            raise ValueError(f"n_pages={n_pages} not divisible by "
+                             f"n_shards={n_shards}")
+        if n_slots % n_shards:
+            raise ValueError(f"n_slots={n_slots} not divisible by "
+                             f"n_shards={n_shards}")
+        if n_pages // n_shards < 2:
+            raise ValueError("need >= 2 pages per shard (local page 0 is "
+                             "reserved as trash)")
         self.n_pages = n_pages
         self.pages_per_seq = pages_per_seq
         self.n_slots = n_slots
         self.page_size = page_size
-        # LIFO free list: a just-retired sequence's pages are the next ones
-        # handed out (warm reuse)
-        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self.n_shards = n_shards
+        self.pages_per_shard = n_pages // n_shards
+        self.slots_per_shard = n_slots // n_shards
+        # LIFO free lists (one per shard, local indices): a just-retired
+        # sequence's pages are the next ones handed out (warm reuse)
+        self._free: List[List[int]] = [
+            list(range(self.pages_per_shard - 1, 0, -1))
+            for _ in range(n_shards)]
         self.table = np.full((n_slots, pages_per_seq), TRASH_PAGE, np.int32)
         self.n_mapped = np.zeros((n_slots,), np.int64)
-        self._owner = np.full((n_pages,), -1, np.int64)   # -1 = free/trash
+        # owner[shard, local_page] = slot (-1 = free/trash)
+        self._owner = np.full((n_shards, self.pages_per_shard), -1, np.int64)
         self._held = np.zeros((n_slots,), np.int64)       # outstanding holds
         # dirty counter: bumped on every ``table`` mutation so the engine
         # can cache device uploads of table prefixes and re-ship only when
         # the mapping actually changed (most decode steps map nothing)
         self.version = 0
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self.slots_per_shard
 
     # ------------------------------------------------------------------
     # Allocation
@@ -90,41 +127,51 @@ class PagePool:
     def reserve(self, slot: int, n_pages: int) -> None:
         """Place a HOLD of ``n_pages`` for ``slot`` (a chunked prefill's
         whole winnow need, mapped chunk by chunk later).  The caller must
-        have checked ``free_pages`` first — reserving past it is a bug."""
-        if n_pages > self.free_pages:
+        have checked the slot's shard free pages first — reserving past
+        them is a bug."""
+        if n_pages > self.shard_free_pages(self.shard_of(slot)):
             raise PagePoolExhausted(
                 f"cannot hold {n_pages} pages for slot {slot}: only "
-                f"{self.free_pages} unheld pages free")
+                f"{self.shard_free_pages(self.shard_of(slot))} unheld pages "
+                f"free on its shard")
         self._held[slot] += n_pages
 
+    def _shard_held(self, shard: int) -> int:
+        lo = shard * self.slots_per_shard
+        return int(self._held[lo:lo + self.slots_per_shard].sum())
+
     def _alloc_one(self, slot: int) -> int:
+        sh = self.shard_of(slot)
         if self._held[slot] > 0:
             self._held[slot] -= 1          # consume the slot's own hold
-        elif len(self._free) - int(self._held.sum()) <= 0:
+        elif len(self._free[sh]) - self._shard_held(sh) <= 0:
             raise PagePoolExhausted(
-                f"page pool exhausted: {len(self._free)} free pages all "
-                f"held for in-flight prefills (slot {slot} needs one more)")
-        if not self._free:
+                f"page pool exhausted: {len(self._free[sh])} free pages on "
+                f"shard {sh} all held for in-flight prefills (slot {slot} "
+                "needs one more)")
+        if not self._free[sh]:
             raise PagePoolExhausted(
-                f"page pool exhausted: {self.n_pages - 1} usable pages, "
-                f"all live (slot {slot} needs one more)")
-        p = self._free.pop()
-        assert self._owner[p] == -1 and p != TRASH_PAGE
-        self._owner[p] = slot
+                f"page pool exhausted: {self.pages_per_shard - 1} usable "
+                f"pages on shard {sh}, all live (slot {slot} needs one "
+                "more)")
+        p = self._free[sh].pop()
+        assert self._owner[sh, p] == -1 and p != TRASH_PAGE
+        self._owner[sh, p] = slot
         self.table[slot, self.n_mapped[slot]] = p
         self.n_mapped[slot] += 1
         self.version += 1
         return p
 
     def free_slot(self, slot: int) -> int:
-        """Retire ``slot``: return its pages to the free list (and drop any
-        outstanding hold).  Returns the number of pages freed."""
+        """Retire ``slot``: return its pages to its shard's free list (and
+        drop any outstanding hold).  Returns the number of pages freed."""
+        sh = self.shard_of(slot)
         n = int(self.n_mapped[slot])
         for j in range(n):
             p = int(self.table[slot, j])
-            assert self._owner[p] == slot
-            self._owner[p] = -1
-            self._free.append(p)
+            assert self._owner[sh, p] == slot
+            self._owner[sh, p] = -1
+            self._free[sh].append(p)
         self.table[slot, :] = TRASH_PAGE
         self.n_mapped[slot] = 0
         self._held[slot] = 0
@@ -132,19 +179,49 @@ class PagePool:
             self.version += 1
         return n
 
+    def grow(self, new_pages_per_shard: int) -> None:
+        """Extend EVERY shard's block to ``new_pages_per_shard`` local
+        pages (the device pool's page axis must stay evenly partitioned).
+        Existing local indices stay valid — the page table is untouched —
+        and the new pages join the back of each free list, so warm
+        just-freed pages are still handed out first.  The caller grows the
+        device-side pool arrays to match (see ServeEngine._grow_pool)."""
+        old = self.pages_per_shard
+        if new_pages_per_shard <= old:
+            raise ValueError(f"grow to {new_pages_per_shard} <= current "
+                             f"{old} pages per shard")
+        fresh = list(range(new_pages_per_shard - 1, old - 1, -1))
+        self._free = [fresh.copy() + f for f in self._free]
+        self._owner = np.concatenate(
+            [self._owner,
+             np.full((self.n_shards, new_pages_per_shard - old), -1,
+                     np.int64)], axis=1)
+        self.pages_per_shard = new_pages_per_shard
+        self.n_pages = new_pages_per_shard * self.n_shards
+
     # ------------------------------------------------------------------
     # Accounting / introspection
     # ------------------------------------------------------------------
 
     @property
     def live_pages(self) -> int:
-        return self.n_pages - 1 - len(self._free)
+        return (self.n_pages - self.n_shards
+                - sum(len(f) for f in self._free))
+
+    def shard_live_pages(self, shard: int) -> int:
+        return self.pages_per_shard - 1 - len(self._free[shard])
 
     @property
     def free_pages(self) -> int:
-        """Pages available to NEW claimants: free minus outstanding holds
-        (the admission gate compares prompt needs against this)."""
-        return len(self._free) - int(self._held.sum())
+        """Pages available to NEW claimants across all shards: free minus
+        outstanding holds (admission gates compare against the candidate
+        slot's ``shard_free_pages``; this global view is for reporting)."""
+        return sum(len(f) for f in self._free) - int(self._held.sum())
+
+    def shard_free_pages(self, shard: int) -> int:
+        """Pages available to NEW claimants on ``shard`` — what the
+        admission gate checks a prompt's winnow need against."""
+        return len(self._free[shard]) - self._shard_held(shard)
 
     @property
     def held_pages(self) -> int:
@@ -156,17 +233,31 @@ class PagePool:
     def reserved_bytes(self, bytes_per_page: int) -> int:
         return self.n_pages * bytes_per_page
 
+    def shard_live_bytes(self, shard: int, bytes_per_page: int) -> int:
+        return self.shard_live_pages(shard) * bytes_per_page
+
+    def shard_reserved_bytes(self, shard: int, bytes_per_page: int) -> int:
+        return self.pages_per_shard * bytes_per_page
+
     def check_consistent(self) -> None:
         """Assert the aliasing/accounting invariants (used by tests)."""
         live = self.table[self.table != TRASH_PAGE]
-        assert live.size == len(set(live.tolist())), "page aliased by 2 slots"
-        assert TRASH_PAGE not in self._free
-        assert len(self._free) + live.size == self.n_pages - 1
+        assert TRASH_PAGE not in [p for f in self._free for p in f]
         assert (self._held >= 0).all()
-        assert int(self._held.sum()) <= len(self._free), \
-            "holds exceed free pages"
+        for sh in range(self.n_shards):
+            lo = sh * self.slots_per_shard
+            rows = self.table[lo:lo + self.slots_per_shard]
+            sh_live = rows[rows != TRASH_PAGE]
+            assert sh_live.size == len(set(sh_live.tolist())), \
+                "page aliased by 2 slots"
+            assert len(self._free[sh]) + sh_live.size == \
+                self.pages_per_shard - 1
+            assert self._shard_held(sh) <= len(self._free[sh]), \
+                "holds exceed free pages"
+        assert live.size == self.live_pages
         for slot in range(self.n_slots):
+            sh = self.shard_of(slot)
             n = int(self.n_mapped[slot])
             assert (self.table[slot, :n] != TRASH_PAGE).all()
             assert (self.table[slot, n:] == TRASH_PAGE).all()
-            assert (self._owner[self.table[slot, :n]] == slot).all()
+            assert (self._owner[sh, self.table[slot, :n]] == slot).all()

@@ -1,16 +1,14 @@
-"""Continuous-batching serve engine: request queue + slot scheduler over
-per-sequence hybrid caches.
+"""Continuous-batching serve engine: a shard-local slot scheduler over
+mesh-sharded batched caches.
 
 The lockstep ``ServeSession`` (one scalar ``pos`` for the whole batch)
 wastes slots the moment sequences differ in length: everyone waits for the
 longest prompt and the longest generation.  This engine admits and retires
 sequences independently:
 
-  * a FIFO request queue feeds ``n_slots`` cache slots;
-  * each admission prefers the lowest free slot: the request's prompt is
-    prefilled at batch=1 into a fresh single-slot state which is then
-    written into the batched state (``dynamic_update_slice`` on axis 1 —
-    every serve-state layout stacks layers in front of batch);
+  * a request queue (FIFO by default; ``admission="srf"`` picks the
+    shortest remaining request first, bounding TTFT when the queue exceeds
+    prefill capacity) feeds ``n_slots`` cache slots;
   * one jitted decode executable advances ALL active slots per engine step
     with per-sequence positions ``pos [B]`` (free slots idle at pos = -1;
     their lanes compute masked garbage that is never read);
@@ -19,8 +17,40 @@ sequences independently:
 
 Per-request SWAN ``k`` (the paper's runtime-tunable compression) rides
 along as a traced ``[B]`` operand: a batch can mix compression levels and
-the decode step still compiles exactly once (see
-``decode_cache_size`` — asserted by tests/test_serve_engine.py).
+the decode step still compiles exactly once (see ``decode_cache_size`` —
+asserted by tests/test_serve_engine.py).
+
+Mesh sharding (``mesh=``, a Mesh with a ``data`` axis from
+``repro.launch.mesh``): the ENTIRE batched serve state — dense/slab/ring
+leaves, per-sequence ``pos``/``buf_pos``/``k`` operands, and the paged
+pool (page axis sharded like the slab batch axis) — lives partitioned
+over the mesh's data axis via per-leaf ``PartitionSpec``s from
+``repro.sharding.serve_specs``.  Slots map to shards contiguously::
+
+    slot  ->  (shard = slot // n_local,  lane = slot % n_local)
+
+and the HOST scheduler is shard-local: admission places a request only in
+a shard with a free lane (and, paged, free pages in that shard's block of
+the pool — ``repro.runtime.page_pool`` keeps one free list per shard with
+shard-local physical page indices and a per-shard trash page), the
+budgeted round-robin prefill selection runs independently per shard, and
+retirement returns pages to the owning shard's free list.  Every jitted
+dispatch goes through ``sharding.api.shard_map_compat`` (jax.shard_map on
+new releases, jax.experimental.shard_map at the JAX 0.4.35 floor) with
+those specs, so each shard executes exactly the single-device engine's
+computation on its local block — no cross-shard collectives anywhere on
+the serve path — while the engine still issues exactly ONE prefill-chunk
+dispatch and ONE decode dispatch per step regardless of shard count.
+Model weights are replicated over the mesh by default
+(``shard_params=True`` stores them sharded by ``repro.sharding.specs``
+instead; they are gathered at dispatch).  The sharded engine is
+token-identical to the single-device engine at any compression level
+because lanes never interact (tests/test_sharded_engine.py;
+benchmarks/bench_sharded_serve.py).  What remains for true multi-process
+serving: per-host request routing in front of the shard-local scheduler
+and a device-resident (rather than host-assembled) page table — the slot
+-> (shard, lane) mapping and per-shard pools here are exactly the state a
+per-process scheduler would own.
 
 Prompt-length bucketing: prompts are padded to power-of-two buckets and the
 true length rides along as a traced scalar, so prefill compiles
@@ -34,9 +64,12 @@ Paged sparse cache (``paged=True``; SWAN only): instead of reserving
 host-managed page table (``repro.runtime.page_pool``).  Admission maps just
 enough pages for the prompt's winnowed tokens, decode grows the mapping as
 tokens land, and retirement returns pages for immediate reuse — cache
-memory follows LIVE tokens, not ``n_slots * max_seq`` (see
-``repro.core.paged_cache`` for the Eq. 1 accounting).  The paged engine is
-token-identical to the slab engine (tests/test_paged_engine.py).
+memory follows LIVE tokens, not ``n_slots * max_seq``.  Over-committed
+pools hold admissions until pages free; with ``pool_grow=True`` the engine
+instead GROWS the device pool (2x pages per shard, copy, extend the free
+lists) up to the full-reservation cap, so admissions never wait and
+mid-decode exhaustion disappears.  The paged engine is token-identical to
+the slab engine (tests/test_paged_engine.py).
 
 Chunked prefill (``prefill_chunk=C``, power of two; ``None`` = monolithic):
 a monolithic admission stalls every active decode slot for the whole
@@ -51,34 +84,37 @@ machine::
                |  allocation is gone, and paged admissions map pages per
                |  chunk, not per prompt)
 
-Batched concurrent prefill (``prefill_slots=P``, ``prefill_budget=T``):
-up to ``P`` slots may be PREFILLING at once, and every engine step
-round-robins the per-step token budget ``T`` (default ``P * C``) across
-them — a rotating pointer picks up to ``P`` in-flight prefills, each
-advances by one full chunk, and ALL the selected chunks are packed into
-ONE jitted multi-slot executable (``transformer.lm_prefill_chunk_batched``,
-traced ``[P]`` slot/start/true_len/k operands).  The lane count is
-bucketed to a power of two (dead lanes park their slot index out of range:
-slab/ring writes drop, paged writes land on the trash page), so an
-admission burst compiles O(log n_slots × log chunk) executables instead of
-one per combination of in-flight prefills — and each engine step issues
-exactly ONE chunk dispatch plus ONE decode dispatch no matter how many
-prefills are in flight.  Under a burst of admissions, time-to-first-token
-is therefore O(prompt chunks), not O(queue depth × prompt chunks), and the
-round-robin keeps every in-flight prefill advancing (no starvation) —
-benchmarks/bench_concurrent_prefill.py gates the p99 TTFT win.
+Batched concurrent prefill (``prefill_slots=P``, ``prefill_budget=T``;
+both PER SHARD under a mesh — each shard's lanes are its own device's
+compute): up to ``P`` slots per shard may be PREFILLING at once, and every
+engine step each shard round-robins its per-step token budget ``T``
+(default ``P * C``) across them — a rotating pointer picks up to ``P``
+in-flight prefills, each advances by one full chunk, and ALL shards'
+selected chunks are packed into ONE jitted multi-slot executable
+(``transformer.lm_prefill_chunk_batched``, traced ``[P]``
+slot/start/true_len/k operands; under a mesh the lane axis is laid out
+``[dp, P_local]`` so each shard's block only ever touches its own slots).
+The per-shard lane count is bucketed to a power of two (dead lanes park
+their slot index out of the SHARD'S range: slab/ring writes drop, paged
+writes land on the shard's trash page), so an admission burst compiles
+O(log n_slots × log chunk) executables instead of one per combination of
+in-flight prefills — and each engine step issues exactly ONE chunk
+dispatch plus ONE decode dispatch no matter how many prefills are in
+flight or how many shards the mesh has.  Under a burst of admissions,
+time-to-first-token is therefore O(prompt chunks), not O(queue depth ×
+prompt chunks), and the round-robin keeps every in-flight prefill
+advancing (no starvation) — benchmarks/bench_concurrent_prefill.py gates
+the p99 TTFT win.
 
 PREFILLING slots sit at ``pos = -1``; the decode step treats ``pos < 0``
 lanes as dead (ring untouched, sparse/dense writes dropped or sent to the
 trash page), which is what makes mid-prefill interleaving safe.  The last
 chunk's logits seed the first sampled token and the slot flips to
-DECODING.  Chunk boundaries are invisible in the cache: after a chunk the
-ring holds the last ``b`` tokens and the winnowed prefix everything older,
-exactly as a monolithic prefill of the same tokens would leave them —
-chunked and monolithic engines are token-identical whenever winnowing is
-(tests/test_chunked_prefill.py), and the batched-concurrent scheduler is
-token-identical to the serial one at ANY compression because per-lane
-chunk boundaries stay full chunks (tests/test_concurrent_prefill.py).
+DECODING.  Chunk boundaries are invisible in the cache, and per-lane chunk
+boundaries never depend on the schedule — so chunked == monolithic,
+batched-concurrent == serial, and sharded == single-device, token for
+token, at any compression level (tests/test_chunked_prefill.py,
+tests/test_concurrent_prefill.py, tests/test_sharded_engine.py).
 """
 from __future__ import annotations
 
@@ -90,6 +126,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import hybrid_cache as hc
 from repro.core import paged_cache as pc
@@ -97,6 +134,9 @@ from repro.models import get_model, swan_applicable
 from repro.runtime.page_pool import PagePool, PagePoolExhausted
 from repro.runtime.sampling import sample_token
 from repro.runtime.serve_loop import serve_cache_report
+from repro.sharding.api import shard_map_compat
+from repro.sharding.serve_specs import sanitize_tree, serve_state_pspecs
+from repro.sharding.specs import dp_axes, params_pspecs
 
 Params = Dict[str, Any]
 
@@ -149,7 +189,8 @@ class _Slot:
 
 
 class ServeEngine:
-    """Continuous-batching generation over a slot-based batched cache."""
+    """Continuous-batching generation over a slot-based batched cache,
+    optionally sharded over a device mesh's ``data`` axis."""
 
     def __init__(self, cfg, params, swan=None, projections=None,
                  max_seq: int = 4096, n_slots: int = 4, jit: bool = True,
@@ -157,7 +198,9 @@ class ServeEngine:
                  n_pages: Optional[int] = None, bucket_prompts: bool = True,
                  prefill_chunk: Optional[int] = None,
                  prefill_slots: int = 1,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 mesh=None, shard_params: bool = False,
+                 pool_grow: bool = False, admission: str = "fifo"):
         self.cfg = cfg
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
@@ -173,6 +216,29 @@ class ServeEngine:
             if projections is None:
                 raise ValueError("SWAN enabled but no projections given — "
                                  "run calibrate_swan first")
+        if admission not in ("fifo", "srf"):
+            raise ValueError(f"admission={admission!r}: 'fifo' or 'srf'")
+        self.admission = admission
+        self.pool_grow = pool_grow
+        self._jit = jit
+
+        # --- mesh topology: slot -> (shard, lane) ----------------------
+        self.mesh = mesh
+        if mesh is not None:
+            if "data" not in mesh.axis_names:
+                raise ValueError("serve mesh needs a 'data' axis — build it "
+                                 "with repro.launch.mesh.make_serve_mesh")
+            self._dpx = dp_axes(mesh)
+            self.dp = int(np.prod([mesh.shape[a] for a in self._dpx]))
+        else:
+            self._dpx = None
+            self.dp = 1
+        if self.dp < 1 or n_slots % self.dp:
+            raise ValueError(f"n_slots={n_slots} not divisible by the "
+                             f"mesh's data-parallel degree {self.dp}")
+        self.n_local = n_slots // self.dp
+        if shard_params and (mesh is None or "model" not in mesh.axis_names):
+            raise ValueError("shard_params needs a mesh with a 'model' axis")
         self.params = params
 
         prefill_sig = inspect.signature(self.api.prefill).parameters
@@ -205,12 +271,14 @@ class ServeEngine:
         if prefill_slots > 1 and prefill_chunk is None:
             raise ValueError("prefill_slots > 1 (batched concurrent "
                              "prefill) requires prefill_chunk")
-        self.prefill_slots = min(prefill_slots, n_slots)
-        # soft per-step token cap round-robined across in-flight prefills:
-        # lanes are selected until the budget is spent, and every selected
-        # lane still advances a FULL chunk — boundaries never depend on the
-        # budget, which is what keeps the batched scheduler token-identical
-        # to the serial one at any compression level
+        # per-shard: each shard's selected lanes form its own block of the
+        # packed chunk dispatch
+        self.prefill_slots = min(prefill_slots, self.n_local)
+        # soft per-step token cap round-robined across in-flight prefills
+        # (per shard): lanes are selected until the budget is spent, and
+        # every selected lane still advances a FULL chunk — boundaries
+        # never depend on the budget, which is what keeps the batched
+        # scheduler token-identical to the serial one at any compression
         if prefill_budget is not None and prefill_budget < 1:
             raise ValueError(f"prefill_budget={prefill_budget} must be >= 1")
         if prefill_budget is not None and prefill_chunk is None:
@@ -231,16 +299,20 @@ class ServeEngine:
                 raise ValueError(f"max_seq={max_seq} not divisible by "
                                  f"page_size={page_size}")
             max_pages = max_seq // page_size
-            # default pool: full reservation (+1 trash page) rounded up to
-            # a multiple of 8 so the page-axis dp sharding spec survives
-            # the divisibility sanitizer on dp<=8 meshes (extra pages are
-            # plain free capacity) — operators shrink n_pages to
+            # default pool: full per-shard reservation (+1 trash page per
+            # shard) rounded up to a multiple of 8 pages per shard (extra
+            # pages are plain free capacity) — operators shrink n_pages to
             # over-commit; live accounting still tracks tokens, and
-            # admission waits for pages instead of failing
+            # admission waits for pages (or grows the pool, pool_grow)
+            # instead of failing
             if n_pages is None:
-                n_pages = -(-(n_slots * max_pages + 1) // 8) * 8
+                n_pages = self.dp * (
+                    -(-(self.n_local * max_pages + 1) // 8) * 8)
+            elif n_pages % self.dp:
+                raise ValueError(f"n_pages={n_pages} not divisible by the "
+                                 f"mesh's data-parallel degree {self.dp}")
             self.pool: Optional[PagePool] = PagePool(
-                n_pages, max_pages, n_slots, page_size)
+                n_pages, max_pages, n_slots, page_size, n_shards=self.dp)
             self.state = self.api.init_paged_state(
                 cfg, self.swan, n_slots, max_seq, n_pages, page_size)
         else:
@@ -248,6 +320,39 @@ class ServeEngine:
             self.state = self.api.init_serve_state(cfg, self.swan, n_slots,
                                                    max_seq)
         sw, pj = self.swan, self.projections
+
+        # --- mesh placement -------------------------------------------
+        if mesh is not None:
+            # data-parallel compute ONLY: the serve dispatch bodies are
+            # lane-local (no split-S stat merge), so strip every non-dp
+            # axis from the production serve-state specs — on a mesh that
+            # also carries 'model', cache sequence dims must stay
+            # replicated across it (sharding them without collectives in
+            # the shard_map body would silently corrupt the softmax)
+            keep = set(self._dpx)
+
+            def _dp_only(spec):
+                return P(*[ax if (ax in keep
+                                  or (isinstance(ax, tuple)
+                                      and set(ax) <= keep)) else None
+                           for ax in tuple(spec)])
+
+            self._state_specs = jax.tree_util.tree_map(
+                _dp_only, serve_state_pspecs(self.state, mesh),
+                is_leaf=lambda x: isinstance(x, P))
+            self.state = jax.device_put(
+                self.state, jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), self._state_specs))
+            if shard_params:
+                p_specs = sanitize_tree(params_pspecs(params, cfg, mesh),
+                                        params, mesh)
+                self.params = jax.device_put(
+                    params, jax.tree_util.tree_map(
+                        lambda s: NamedSharding(mesh, s), p_specs))
+            else:
+                self.params = jax.device_put(params, NamedSharding(mesh, P()))
+        else:
+            self._state_specs = None
 
         def prefill_fn(p, batch_in, state, k_act, true_len):
             kw = {}
@@ -269,43 +374,84 @@ class ServeEngine:
             # [B, V] logits (host fetches logits only for temperature > 0)
             return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), state
 
+        n_local = self.n_local
+
+        def local_slot(slot):
+            """Global slot index -> this shard's local lane (parked at the
+            out-of-range value ``n_local`` off-shard, so scatters with
+            mode="drop" write nothing there — NEVER left negative, which
+            jnp index ops would wrap)."""
+            if mesh is None:
+                return slot
+            ls = slot - _dp_index(mesh, self._dpx) * n_local
+            return jnp.where((ls >= 0) & (ls < n_local), ls, n_local)
+
         def insert_fn(big, one, slot):
+            ls = local_slot(slot)
             return jax.tree_util.tree_map(
-                lambda b, o: jax.lax.dynamic_update_slice_in_dim(
-                    b, o.astype(b.dtype), slot, axis=1), big, one)
+                lambda b, o: b.at[:, ls].set(o[:, 0].astype(b.dtype),
+                                             mode="drop"), big, one)
 
         def insert_paged_fn(big, one, slot, phys_rows):
-            return pc.paged_insert_prefill(big, one, slot, phys_rows,
+            ls = local_slot(slot)
+            if mesh is not None:
+                phys_rows = jnp.where(ls < n_local, phys_rows, pc.TRASH_PAGE)
+            return pc.paged_insert_prefill(big, one, ls, phys_rows,
                                            page_size)
 
-        def chunk_fn(p, tokens, state, slot, start, k_act, true_len,
-                     page_tab, prefix_len):
-            kw = {}
-            if self._k_threading:
-                kw["k_active"] = k_act
-            if self.paged:
-                kw["page_tab"] = page_tab
-            logits, state = self.api.prefill_chunk(
-                p, cfg, {"tokens": tokens}, state, slot, start, sw, pj,
-                true_len=true_len, prefix_len=prefix_len, **kw)
-            # device-side greedy first-token sampling, mirroring decode_fn:
-            # ship back [P] ids; logits rows cross to host only for lanes
-            # that finished a temperature request's prompt
-            return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+        def make_chunk_fn(prefix_len):
+            def chunk_fn(p, tokens, state, slot, start, k_act, true_len,
+                         page_tab):
+                kw = {}
+                if self._k_threading:
+                    kw["k_active"] = k_act
+                if self.paged:
+                    kw["page_tab"] = page_tab
+                logits, state = self.api.prefill_chunk(
+                    p, cfg, {"tokens": tokens}, state, slot, start, sw, pj,
+                    true_len=true_len, prefix_len=prefix_len, **kw)
+                # device-side greedy first-token sampling, mirroring
+                # decode_fn: ship back [P] ids; logits rows cross to host
+                # only for lanes that finished a temperature request's
+                # prompt
+                return (logits,
+                        jnp.argmax(logits, axis=-1).astype(jnp.int32), state)
+            return chunk_fn
 
+        self._make_chunk_fn = make_chunk_fn
+        # one jitted chunk executable family per STATIC slab/dense read
+        # prefix bucket (None for paged — its read window is the shipped
+        # page-table prefix); each family still retraces per (P, C, table
+        # width) shape bucket exactly as static_argnums would
+        self._chunk_fns: Dict[Optional[int], Any] = {}
+
+        if mesh is not None:
+            dpx = self._dpx
+            rep, lane, lane2 = P(), P(dpx), P(dpx, None)
+            st = self._state_specs
+            tab = lane2 if paged else rep
+            self._decode_specs = ((rep, lane, lane, lane, tab, st),
+                                  (lane2, lane, st))
+            self._chunk_specs = ((rep, lane2, st, lane, lane, lane, lane,
+                                  tab), (lane2, lane, st))
+            # monolithic admission: the batch=1 prefill is replicated
+            # compute (every shard runs it; only the owner's insert lands)
+            prefill_fn = shard_map_compat(prefill_fn, mesh,
+                                          (rep, rep, rep, rep, rep),
+                                          (rep, rep))
+            decode_fn = shard_map_compat(decode_fn, mesh,
+                                         *self._decode_specs)
+            insert_fn = shard_map_compat(insert_fn, mesh, (st, rep, rep), st)
+            insert_paged_fn = shard_map_compat(insert_paged_fn, mesh,
+                                               (st, rep, rep, rep), st)
         if jit:
             self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
             self._decode = jax.jit(decode_fn, donate_argnums=(5,))
             self._insert = jax.jit(insert_fn, donate_argnums=(0,))
             self._insert_paged = jax.jit(insert_paged_fn, donate_argnums=(0,))
-            # prefix_len is a STATIC power-of-two bucket (slab/dense read
-            # window): one executable per (chunk, prefix) bucket pair
-            self._chunk = jax.jit(chunk_fn, donate_argnums=(2,),
-                                  static_argnums=(8,))
         else:
             self._prefill, self._decode = prefill_fn, decode_fn
             self._insert, self._insert_paged = insert_fn, insert_paged_fn
-            self._chunk = chunk_fn
 
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
@@ -315,11 +461,16 @@ class ServeEngine:
         self.next_tok = np.zeros((n_slots,), np.int32)
         self.step_count = 0
         self.completions: List[Completion] = []
-        self._prefill_rr = 0        # round-robin pointer over prefill lanes
+        # per-shard round-robin pointers over prefill lanes
+        self._prefill_rr = [s * self.n_local for s in range(self.dp)]
         # device copies of page-table prefixes, keyed by shipped width and
         # invalidated by the pool's dirty counter — decode steps and chunk
         # dispatches between page-mapping events reuse the last upload
         self._table_cache: Dict[int, Any] = {}
+        # jitted-call counters per engine lifetime: the sharded-serve
+        # benchmark gates that per-step dispatch count is independent of
+        # shard count (one chunk + one decode dispatch per step)
+        self.dispatches = {"prefill": 0, "chunk": 0, "decode": 0}
 
     # ------------------------------------------------------------------
     # Scheduling
@@ -364,11 +515,15 @@ class ServeEngine:
         """Compiled prefill executables, monolithic + chunked (bucketing
         keeps the total <= O(log max_seq))."""
         total = -1
-        for fn in (self._prefill, self._chunk):
+        for fn in [self._prefill] + list(self._chunk_fns.values()):
             size = getattr(fn, "_cache_size", None)
             if callable(size):
                 total = size() if total < 0 else total + size()
         return total
+
+    def shard_of(self, slot: int) -> int:
+        """Which mesh shard owns ``slot`` (0 on a single device)."""
+        return slot // self.n_local
 
     def _sample(self, logits, req: Request, n_prev: int) -> int:
         """Host-side sampling for temperature requests (greedy lanes use
@@ -410,6 +565,11 @@ class ServeEngine:
         p_used = max([1] + [int(self.pool.n_mapped[i]) for i in slots])
         return min(self._pow2(p_used), self.pool.pages_per_seq)
 
+    def _decode_bucket(self) -> int:
+        dec = [i for i, s in enumerate(self.slots)
+               if s is not None and s.state == "decoding"]
+        return self._page_bucket(dec)
+
     def page_table_shipped_bytes(self) -> int:
         """Bytes of the page-table prefix a decode step ships to the device
         right now ([n_slots, p_bucket] int32) — the device-side table
@@ -417,9 +577,7 @@ class ServeEngine:
         covers DECODING slots, exactly as ``step()`` computes it
         (prefilling lanes are dead in the decode; chunk dispatches ship
         their own table prefix bucketed over the selected lanes)."""
-        dec = [i for i, s in enumerate(self.slots)
-               if s is not None and s.state == "decoding"]
-        return self.n_slots * self._page_bucket(dec) * 4
+        return self.n_slots * self._decode_bucket() * 4
 
     def _pow2(self, n: int) -> int:
         b = 1
@@ -437,8 +595,9 @@ class ServeEngine:
             if self.paged:
                 # pages are MAPPED per chunk, but the prompt's whole winnow
                 # need is HELD now — the admission gate checked it against
-                # free_pages, and without the hold a decoding slot's growth
-                # could starve this in-flight prefill mid-chunking
+                # the shard's free pages, and without the hold a decoding
+                # slot's growth could starve this in-flight prefill
+                # mid-chunking
                 self.pool.reserve(slot, self.pool.pages_for(
                     self._sparse_tokens(len(req.tokens) - 1)))
             self.slots[slot] = _Slot(req=req, admitted_step=self.step_count,
@@ -460,17 +619,17 @@ class ServeEngine:
         state1 = self.api.init_serve_state(self.cfg, self.swan, 1, s1)
         toks = np.zeros((pad_len,), np.int32)
         toks[:plen] = np.asarray(req.tokens, np.int32)
-        logits, state1 = self._prefill(self.params, {"tokens": jnp.asarray(toks)[None]},
-                                       state1, jnp.asarray(k_req, jnp.int32),
-                                       jnp.asarray(plen, jnp.int32))
+        logits, state1 = self._prefill(self.params, {"tokens": toks[None]},
+                                       state1, np.int32(k_req),
+                                       np.int32(plen))
+        self.dispatches["prefill"] += 1
         if self.paged:
-            self.pool.ensure(slot, self._sparse_tokens(plen - 1))
+            self._ensure_pages(slot, self._sparse_tokens(plen - 1))
             self.state = self._insert_paged(
-                self.state, state1, jnp.asarray(slot, jnp.int32),
-                jnp.asarray(self.pool.table[slot, :s1 // ps]))
+                self.state, state1, np.int32(slot),
+                self.pool.table[slot, :s1 // ps])
         else:
-            self.state = self._insert(self.state, state1,
-                                      jnp.asarray(slot, jnp.int32))
+            self.state = self._insert(self.state, state1, np.int32(slot))
         s = _Slot(req=req, admitted_step=self.step_count)
         first = self._sample(logits[0, -1], req, 0)
         s.generated.append(first)
@@ -498,34 +657,112 @@ class ServeEngine:
         self.slot_k[slot] = self.swan.k_max if self.swan else 0
         self.next_tok[slot] = 0
         if self.paged:
-            # pages return to the free list NOW — a request backfilled into
-            # this slot on the same engine step reuses them
+            # pages return to the owning shard's free list NOW — a request
+            # backfilled into this slot on the same engine step reuses them
             self.pool.free_slot(slot)
+
+    def _next_request(self) -> Optional[Request]:
+        """Admission policy over ARRIVED requests: FIFO takes the oldest;
+        ``srf`` (shortest-remaining-first) takes the smallest total work
+        (prompt + generation budget), FIFO-tiebroken, which bounds TTFT for
+        short requests when the queue exceeds prefill capacity."""
+        avail = [r for r in self.queue if r.arrival_step <= self.step_count]
+        if not avail:
+            return None
+        if self.admission == "srf":
+            return min(avail, key=lambda r: len(r.tokens) + r.max_new_tokens)
+        return avail[0]
 
     def _admit_pending(self) -> None:
         while self.n_active < self.n_slots:
-            nxt = next((r for r in self.queue
-                        if r.arrival_step <= self.step_count), None)
+            nxt = self._next_request()
             if nxt is None:
                 return
+            free = [i for i, s in enumerate(self.slots) if s is None]
             if self.paged:
-                # a request whose LIFETIME need exceeds the whole pool can
-                # never run — fail fast instead of waiting forever
+                # a request whose LIFETIME need exceeds a whole pool shard
+                # can never run — grow the pool (pool_grow) or fail fast
+                # instead of waiting forever
                 lifetime = self.pool.pages_for(self._sparse_tokens(
                     len(nxt.tokens) + nxt.max_new_tokens - 1))
-                if lifetime > self.pool.n_pages - 1:
-                    raise PagePoolExhausted(
-                        f"request {nxt.uid} needs {lifetime} pages over its "
-                        f"lifetime; pool holds {self.pool.n_pages - 1}")
-                # over-committed pool: hold admissions until retirements
-                # free enough pages for this prompt (FIFO head-of-line)
+                if lifetime > self.pool.pages_per_shard - 1:
+                    if not self.pool_grow:
+                        raise PagePoolExhausted(
+                            f"request {nxt.uid} needs {lifetime} pages over "
+                            "its lifetime; each pool shard holds "
+                            f"{self.pool.pages_per_shard - 1}")
+                    self._grow_pool(lifetime + 1)
+                # over-committed pool: admit only into a shard with enough
+                # free pages for this prompt; otherwise grow (pool_grow) or
+                # hold admissions until retirements free pages (FIFO
+                # head-of-line on the policy's next pick)
                 need = self.pool.pages_for(
                     self._sparse_tokens(len(nxt.tokens) - 1))
-                if need > self.pool.free_pages:
+                fits = [i for i in free if need <=
+                        self.pool.shard_free_pages(self.shard_of(i))]
+                if not fits and self.pool_grow:
+                    self._grow_pool(self.pool.pages_per_shard + max(need, 1))
+                    fits = [i for i in free if need <=
+                            self.pool.shard_free_pages(self.shard_of(i))]
+                if not fits:
                     return
+                slot = fits[0]
+            else:
+                slot = free[0]
             self.queue.remove(nxt)
-            slot = self.slots.index(None)
             self._admit(nxt, slot)
+
+    # ------------------------------------------------------------------
+    # Paged-pool elasticity
+    # ------------------------------------------------------------------
+
+    def _ensure_pages(self, slot: int, n_tokens: int) -> None:
+        """``pool.ensure`` with elasticity: when the pool is over-committed
+        past live capacity, either grow it (``pool_grow``) or surface
+        ``PagePoolExhausted`` to the caller."""
+        if not self.pool_grow:
+            self.pool.ensure(slot, n_tokens)
+            return
+        try:
+            self.pool.ensure(slot, n_tokens)
+        except PagePoolExhausted:
+            self._grow_pool(self.pool.pages_per_shard
+                            + self.pool.pages_for(n_tokens))
+            self.pool.ensure(slot, n_tokens)
+
+    def _grow_pool(self, min_pages_per_shard: int) -> None:
+        """Grow the device pool: allocate at least ``min_pages_per_shard``
+        (typically 2x) pages PER SHARD, copy the old pages over, extend the
+        host free lists, and keep every page-table entry valid (local
+        indices don't move; new pages append at the end of each shard's
+        block).  Capped at the full-reservation size — at the cap a free
+        slot can always admit and ``ensure`` can always succeed, so growth
+        makes over-commit waits and mid-decode exhaustion impossible."""
+        cap = self.n_local * self.pool.pages_per_seq + 1
+        new_per = min(max(2 * self.pool.pages_per_shard,
+                          min_pages_per_shard), cap)
+        if new_per <= self.pool.pages_per_shard:
+            raise PagePoolExhausted(
+                f"page pool already at full reservation "
+                f"({self.pool.pages_per_shard} pages/shard) — cannot grow")
+        extra = new_per - self.pool.pages_per_shard
+
+        def pad_pool(pool):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.zeros(x.shape[:1] + (extra,) + x.shape[2:],
+                                  x.dtype)], axis=1), pool)
+
+        fn = pad_pool
+        if self.mesh is not None:
+            specs = self._state_specs["pool"]
+            fn = shard_map_compat(fn, self.mesh, (specs,), specs)
+        if self._jit:
+            fn = jax.jit(fn, donate_argnums=(0,))
+        state = dict(self.state)
+        state["pool"] = fn(self.state["pool"])
+        self.state = state
+        self.pool.grow(new_per)
 
     # ------------------------------------------------------------------
     # Engine step
@@ -533,31 +770,41 @@ class ServeEngine:
 
     def _device_table(self, width: int):
         """Device copy of the page table's first ``width`` columns
-        ([n_slots, width] int32) — cached per width and re-uploaded only
-        when the host table changed (``pool.version`` dirty counter).
-        Decode steps and chunk dispatches between page-mapping events
-        reuse the previous upload instead of shipping the table every
-        step."""
+        ([n_slots, width] int32, batch-sharded over the mesh's data axis —
+        each shard sees its own slots' rows with shard-local physical
+        indices) — cached per width and re-uploaded only when the host
+        table changed (``pool.version`` dirty counter).  Decode steps and
+        chunk dispatches between page-mapping events reuse the previous
+        upload instead of shipping the table every step."""
         ver = self.pool.version
         hit = self._table_cache.get(width)
         if hit is None or hit[0] != ver:
-            hit = (ver, jnp.asarray(self.pool.table[:, :width]))
+            tab = np.ascontiguousarray(self.pool.table[:, :width])
+            if self.mesh is not None:
+                arr = jax.device_put(
+                    tab, NamedSharding(self.mesh, P(self._dpx, None)))
+            else:
+                arr = jnp.asarray(tab)
+            hit = (ver, arr)
             self._table_cache[width] = hit
         return hit[1]
 
-    def _select_prefills(self):
-        """Round-robin up to ``prefill_slots`` PREFILLING lanes within the
-        per-step token budget.  A rotating pointer keeps every in-flight
-        prefill advancing (no starvation when more prefills are in flight
-        than ``prefill_slots``); each selected lane advances one FULL
-        chunk, so per-lane chunk boundaries — and therefore tokens — never
-        depend on the schedule."""
-        cands = [i for i, s in enumerate(self.slots)
-                 if s is not None and s.state == "prefilling"]
+    def _select_prefills(self, shard: int):
+        """Round-robin up to ``prefill_slots`` PREFILLING lanes of
+        ``shard`` within its per-step token budget — a SHARD-LOCAL
+        decision: each shard has its own rotating pointer, so every
+        in-flight prefill keeps advancing (no starvation when more
+        prefills are in flight than ``prefill_slots``); each selected lane
+        advances one FULL chunk, so per-lane chunk boundaries — and
+        therefore tokens — never depend on the schedule."""
+        lo = shard * self.n_local
+        cands = [i for i in range(lo, lo + self.n_local)
+                 if self.slots[i] is not None
+                 and self.slots[i].state == "prefilling"]
         if not cands:
             return []
-        order = sorted(cands,
-                       key=lambda j: (j - self._prefill_rr) % self.n_slots)
+        rr = self._prefill_rr[shard]
+        order = sorted(cands, key=lambda j: (j - rr) % self.n_slots)
         sel: List[int] = []
         spent = 0
         for i in order:
@@ -566,64 +813,78 @@ class ServeEngine:
             s = self.slots[i]
             sel.append(i)
             spent += min(len(s.req.tokens) - s.n_prefilled, self.prefill_chunk)
-        self._prefill_rr = (sel[-1] + 1) % self.n_slots
+        self._prefill_rr[shard] = (sel[-1] + 1) % self.n_slots
         return sel
 
     def _advance_prefills(self) -> None:
-        """Advance the round-robin-selected in-flight prefills by one chunk
-        EACH, packed into ONE batched chunk dispatch.  The lane count is
-        bucketed to a power of two (dead lanes park slot = n_slots, out of
-        range) and full chunks share one width, so admission bursts compile
-        O(log n_slots × log chunk) executables (times a slab-prefix or
-        paged-table bucket dimension)."""
-        sel = self._select_prefills()
-        if not sel:
+        """Advance every shard's round-robin-selected in-flight prefills by
+        one chunk EACH, packed into ONE batched chunk dispatch.  The lane
+        axis is laid out ``[dp, P_local]`` — shard ``s``'s block holds only
+        its own slots (as LOCAL lane indices), which is what lets the
+        dispatch shard_map over the data axis with no cross-shard traffic.
+        The per-shard lane count is bucketed to a power of two (dead lanes
+        park slot = n_local, out of the shard's range) and full chunks
+        share one width, so admission bursts compile O(log n_slots × log
+        chunk) executables (times a slab-prefix or paged-table bucket
+        dimension)."""
+        sels = [self._select_prefills(s) for s in range(self.dp)]
+        widest = max(len(s) for s in sels)
+        if widest == 0:
             return
-        P = self._pow2(len(sel))
-        pads, lens = [], []
-        for i in sel:
-            s = self.slots[i]
-            rem = len(s.req.tokens) - s.n_prefilled
-            t = min(rem, self.prefill_chunk)
-            lens.append(t)
-            pads.append(self.prefill_chunk if rem >= self.prefill_chunk
-                        else self._pow2(t))
+        Pl = self._pow2(widest)
+        n_lanes = self.dp * Pl
+        lens: Dict[int, int] = {}
+        pads = []
+        for sel in sels:
+            for i in sel:
+                s = self.slots[i]
+                rem = len(s.req.tokens) - s.n_prefilled
+                t = min(rem, self.prefill_chunk)
+                lens[i] = t
+                pads.append(self.prefill_chunk if rem >= self.prefill_chunk
+                            else self._pow2(t))
         C = max(pads)
-        toks = np.zeros((P, C), np.int32)
-        slot_v = np.full((P,), self.n_slots, np.int32)  # dead lanes park OOB
-        start_v = np.zeros((P,), np.int32)
-        tlen_v = np.ones((P,), np.int32)
-        k_v = np.full((P,), self._k_fill, np.int32)
-        for lane, i in enumerate(sel):
-            s = self.slots[i]
-            st, t = s.n_prefilled, lens[lane]
-            toks[lane, :t] = np.asarray(s.req.tokens[st:st + t], np.int32)
-            slot_v[lane] = i
-            start_v[lane] = st
-            tlen_v[lane] = t
-            k_v[lane] = self.slot_k[i]
+        toks = np.zeros((n_lanes, C), np.int32)
+        slot_v = np.full((n_lanes,), self.n_local, np.int32)  # dead: local OOB
+        start_v = np.zeros((n_lanes,), np.int32)
+        tlen_v = np.ones((n_lanes,), np.int32)
+        k_v = np.full((n_lanes,), self._k_fill, np.int32)
+        picks = []                                  # (lane, global slot)
+        for sh, sel in enumerate(sels):
+            for j, i in enumerate(sel):
+                lane = sh * Pl + j
+                s = self.slots[i]
+                st0, t = s.n_prefilled, lens[i]
+                toks[lane, :t] = np.asarray(s.req.tokens[st0:st0 + t],
+                                            np.int32)
+                slot_v[lane] = i - sh * self.n_local
+                start_v[lane] = st0
+                tlen_v[lane] = t
+                k_v[lane] = self.slot_k[i]
+                picks.append((lane, i))
+        sel_all = [i for _, i in picks]
         if self.paged:
-            for lane, i in enumerate(sel):
+            for lane, i in picks:
                 # map pages for the tokens this chunk winnows; overshoot
                 # writes past them land on the trash page and are rewritten
                 # by the next chunk once its pages exist
-                self.pool.ensure(i, self._sparse_tokens(
-                    start_v[lane] + lens[lane] - 1))
+                self._ensure_pages(i, self._sparse_tokens(
+                    int(start_v[lane]) + lens[i] - 1))
             pg = self._pow2(max(1, max(int(self.pool.n_mapped[i])
-                                       for i in sel)))
+                                       for i in sel_all)))
             page_tab = self._device_table(min(pg, self.pool.pages_per_seq))
             prefix = None               # the page_tab prefix bounds reads
         else:
-            page_tab = jnp.zeros((), jnp.int32)         # unused operand
+            page_tab = np.zeros((), np.int32)           # unused operand
             prefix = min(self._pow2(int(start_v.max()) + C), self.max_seq)
-        logits, greedy, self.state = self._chunk(
-            self.params, jnp.asarray(toks), self.state,
-            jnp.asarray(slot_v), jnp.asarray(start_v), jnp.asarray(k_v),
-            jnp.asarray(tlen_v), page_tab, prefix)
+        logits, greedy, self.state = self._chunk_call(
+            self.params, toks, self.state, slot_v, start_v, k_v, tlen_v,
+            page_tab, prefix=prefix)
+        self.dispatches["chunk"] += 1
         fins = []
-        for lane, i in enumerate(sel):
+        for lane, i in picks:
             s = self.slots[i]
-            s.n_prefilled += lens[lane]
+            s.n_prefilled += lens[i]
             if s.n_prefilled == len(s.req.tokens):      # prompt complete
                 fins.append((lane, i))
         if not fins:
@@ -639,6 +900,21 @@ class ServeEngine:
             self.next_tok[i] = first
             self._maybe_retire(i)
 
+    def _chunk_call(self, *args, prefix: Optional[int]):
+        """Dispatch the batched chunk executable for a STATIC slab/dense
+        read-prefix bucket (one jit per bucket — the moral equivalent of
+        static_argnums, kept explicit so the mesh path can close the
+        prefix into its shard_map body)."""
+        fn = self._chunk_fns.get(prefix)
+        if fn is None:
+            fn = self._make_chunk_fn(prefix)
+            if self.mesh is not None:
+                fn = shard_map_compat(fn, self.mesh, *self._chunk_specs)
+            if self._jit:
+                fn = jax.jit(fn, donate_argnums=(2,))
+            self._chunk_fns[prefix] = fn
+        return fn(*args)
+
     def step(self) -> int:
         """One scheduler iteration: admit → one batched multi-slot prefill
         chunk dispatch → one batched decode dispatch → retire.  Returns the
@@ -652,10 +928,11 @@ class ServeEngine:
         if active:
             if self.paged:
                 # grow each sequence's page mapping to cover the token its
-                # decode step is about to winnow (raises PagePoolExhausted
-                # if the pool was over-committed past live-token capacity)
+                # decode step is about to winnow (grows the pool, or raises
+                # PagePoolExhausted, if over-committed past live capacity)
                 for i in active:
-                    self.pool.ensure(i, self._sparse_tokens(int(self.slot_pos[i])))
+                    self._ensure_pages(i, self._sparse_tokens(
+                        int(self.slot_pos[i])))
                 # ship only a power-of-two bucket of logical pages: the
                 # attention gather then materialises a view sized by LIVE
                 # pages, not max_seq (transient memory follows tokens too);
@@ -663,11 +940,11 @@ class ServeEngine:
                 # The upload itself is cached (dirty-flag) in _device_table.
                 page_tab = self._device_table(self._page_bucket(active))
             else:
-                page_tab = jnp.zeros((), jnp.int32)     # unused operand
+                page_tab = np.zeros((), np.int32)       # unused operand
             logits, greedy, self.state = self._decode(
-                self.params, jnp.asarray(self.next_tok),
-                jnp.asarray(self.slot_pos), jnp.asarray(self.slot_k),
+                self.params, self.next_tok, self.slot_pos, self.slot_k,
                 page_tab, self.state)
+            self.dispatches["decode"] += 1
             toks = self._lane_tokens(
                 logits, greedy,
                 [(i, self.slots[i].req, len(self.slots[i].generated))
@@ -707,6 +984,10 @@ class ServeEngine:
         engine commits the worst case up front, so the two coincide there
         (checked against the actually-resident state arrays); the paged
         engine is the one whose live bytes track generated tokens.
+
+        ``shards`` breaks both down per mesh shard (one entry on a single
+        device); the per-shard entries always sum exactly to the totals —
+        asserted in tests/test_paged_engine.py.
         """
         rep = serve_cache_report(self.cfg, self.swan, self.n_slots,
                                  self.max_seq)
@@ -714,7 +995,7 @@ class ServeEngine:
                      if self.cfg.layer_kind(i) == "attn")
         if self.api.init_paged_state is None:
             # recurrent-state families: no row-granular layout to page or
-            # audit — keep the analytic Eq. 1 report
+            # audit — keep the analytic Eq. 1 report (no shard breakdown)
             rep["reserved_bytes"] = rep["live_bytes"] = rep["bytes"]
             return rep
         dense_phys = n_attn * hc.dense_cache_bytes(self.cfg, self.n_slots,
@@ -728,15 +1009,26 @@ class ServeEngine:
                        jax.tree_util.tree_leaves(self.state))
             if self.swan is None:
                 reserved = dense_phys
+                shard_res = n_attn * hc.dense_cache_bytes(
+                    self.cfg, self.n_local, self.max_seq)
             else:
                 reserved = n_attn * (
                     hc.cache_bytes(self.cfg, self.swan, self.n_slots,
                                    self.max_seq)
                     + self.n_slots * self.swan.buffer * 4)      # buf_pos
+                shard_res = n_attn * (
+                    hc.cache_bytes(self.cfg, self.swan, self.n_local,
+                                   self.max_seq)
+                    + self.n_local * self.swan.buffer * 4)
             assert reserved == live, \
                 f"slab reserved {reserved} != resident {live}"
             rep["reserved_bytes"] = rep["live_bytes"] = reserved
             rep["bytes"] = reserved
+            # the slab layout is linear in the batch axis, so each shard
+            # carries exactly its slots' share
+            rep["shards"] = [{"reserved_bytes": shard_res,
+                              "live_bytes": shard_res}
+                             for _ in range(self.dp)]
             if self.swan is not None:
                 rep["dense_bytes"] = dense_phys
                 rep["saving"] = 1.0 - reserved / dense_phys
@@ -744,8 +1036,9 @@ class ServeEngine:
         page_b = pc.page_bytes(self.cfg, self.swan, self.pool.page_size)
         # device overhead counts the SHIPPED page-table prefix (the actual
         # per-step device operand), not the host-resident numpy table
+        bucket = self._decode_bucket()
         overhead = (pc.ring_bytes(self.cfg, self.swan, self.n_slots)
-                    + self.page_table_shipped_bytes())
+                    + self.n_slots * bucket * 4)
         rep["mode"] += "+paged"
         rep["slab_bytes"] = n_attn * hc.cache_bytes(
             self.cfg, self.swan, self.n_slots, self.max_seq)
@@ -756,4 +1049,26 @@ class ServeEngine:
         rep["saving"] = 1.0 - rep["live_bytes"] / dense_phys
         rep.update(page_size=self.pool.page_size, n_pages=self.pool.n_pages,
                    live_pages=self.pool.live_pages)
+        # per-shard: each shard owns its block of the pool, its slots'
+        # rings, and its rows of the shipped table prefix (ring_bytes and
+        # the table are linear in the batch axis, page blocks are equal by
+        # construction — so the entries sum exactly to the totals above)
+        sh_over = (pc.ring_bytes(self.cfg, self.swan, self.n_local)
+                   + self.n_local * bucket * 4)
+        rep["shards"] = [
+            {"reserved_bytes": self.pool.shard_reserved_bytes(s, page_b)
+             + sh_over,
+             "live_bytes": self.pool.shard_live_bytes(s, page_b) + sh_over,
+             "page_table_shipped_bytes": self.n_local * bucket * 4,
+             "live_pages": self.pool.shard_live_pages(s)}
+            for s in range(self.dp)]
         return rep
+
+
+def _dp_index(mesh, dpx):
+    """This device's linear index along the mesh's data axes (inside
+    shard_map)."""
+    idx = jax.lax.axis_index(dpx[0])
+    for a in dpx[1:]:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx

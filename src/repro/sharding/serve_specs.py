@@ -4,11 +4,19 @@ recurrent states) and serve-step inputs.
 Decode distribution (DESIGN.md §4): caches shard batch over ('pod','data')
 and the *sequence* dim over 'model' — flash-decoding-style split-S, valid
 for any head count (incl. GQA kv < mesh) and any batch (axes that don't
-divide are dropped by the sanitizer, e.g. long_500k's batch=1).
-"""
+divide, or that the mesh doesn't carry, are dropped by the sanitizer —
+e.g. long_500k's batch=1, or the serve engine's data-only mesh).
+
+The sharded serve engine (``repro.runtime.serve_engine`` with ``mesh=``)
+builds its ``shard_map`` in/out specs from ``serve_state_pspecs``: every
+serve-state leaf MUST therefore have an explicit rule here — an unknown
+leaf would silently ship replicated, which on a data mesh means every
+shard carries (and writes!) the full array.  ``unspecced_serve_leaves``
+exposes the leaves that would fall through to the replicated fallback so
+tests can assert completeness (tests/test_sharding.py)."""
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -18,13 +26,17 @@ from repro.sharding.specs import dp_axes
 
 
 def _sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
-    """Drop sharding on axes that don't divide the dim size."""
+    """Drop sharding on axes the mesh doesn't carry or that don't divide
+    the dim size."""
     out = []
     for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
         if ax is None:
             out.append(None)
             continue
         axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        if any(a not in mesh.shape for a in axes):
+            out.append(None)
+            continue
         n = int(np.prod([mesh.shape[a] for a in axes]))
         out.append(ax if (dim % n == 0 and dim >= n) else None)
     return P(*out)
@@ -35,18 +47,24 @@ def sanitize_tree(specs, tree, mesh: Mesh):
         lambda s, x: _sanitize(s, x.shape, mesh), specs, tree)
 
 
-def _leaf_spec(name: str, ndim: int, mesh: Mesh) -> P:
-    dp = dp_axes(mesh)
+def _leaf_spec_raw(name: str, ndim: int) -> Optional[P]:
+    """Spec for a serve-state leaf by path name, over the PRODUCTION axis
+    names ('pod'/'data' for batch-like dims, 'model' for sequence-like
+    dims) — the sanitizer drops whatever a concrete mesh can't carry.
+    Returns None for leaves with no explicit rule (see
+    ``unspecced_serve_leaves``)."""
+    dp = ("pod", "data")
     leaf = name.split("/")[-1]
     # stacked caches have a leading layer/group axis (never sharded)
     if "pool/" in name:
         # paged sparse pool [L,n_pages,Kv,ps,k]: the page axis plays the
-        # role batch has in the slab layout (a page belongs to one slot)
-        # and within-page rows are the sequence dim — so the pool shards
-        # over the same mesh axes as the slab sparse leaves: pages over
-        # dp, page rows over 'model'.  (The page TABLE is a host-owned jit
-        # operand, not serve state; multi-host serving would partition it
-        # alongside a local-slot scheduler — see ROADMAP.)
+        # role batch has in the slab layout (a page belongs to one slot, a
+        # slot to one data shard — see repro.runtime.page_pool's per-shard
+        # blocks) and within-page rows are the sequence dim — so the pool
+        # shards over the same mesh axes as the slab sparse leaves: pages
+        # over dp, page rows over 'model'.  (The page TABLE is a host-owned
+        # jit operand, not serve state; the sharded engine ships it batch-
+        # sharded with shard-local physical indices.)
         if leaf in ("vals", "idx"):
             return P(None, dp, None, "model", None)
         if leaf == "scale":              # [L,n_pages,Kv,ps]
@@ -69,16 +87,40 @@ def _leaf_spec(name: str, ndim: int, mesh: Mesh) -> P:
         return P(None, dp, None, None, None)
     if leaf in ("x_tm", "x_cm"):         # rwkv shifts [L,B,1,d]
         return P(None, dp, None, None)
-    return P(*([None] * ndim))
+    return None
+
+
+def _leaf_spec(name: str, ndim: int, mesh: Mesh) -> P:
+    spec = _leaf_spec_raw(name, ndim)
+    if spec is None:
+        return P(*([None] * ndim))
+    # collapse the production dp tuple to what this mesh carries (the
+    # sanitizer then drops axes that don't divide or don't exist)
+    dp = dp_axes(mesh)
+    return P(*[dp if ax == ("pod", "data") else ax for ax in tuple(spec)])
+
+
+def _walk(state):
+    flat, tdef = jax.tree_util.tree_flatten_with_path(state)
+    named = [("/".join(getattr(k, "key", str(k)) for k in path), leaf)
+             for path, leaf in flat]
+    return named, tdef
+
+
+def unspecced_serve_leaves(state) -> List[str]:
+    """Names of serve-state leaves that have NO explicit spec rule and
+    would silently ship replicated over a data mesh.  Tests assert this is
+    empty for every engine state layout so new leaves can't land without a
+    sharding decision."""
+    named, _ = _walk(state)
+    return [name for name, leaf in named
+            if _leaf_spec_raw(name, leaf.ndim) is None]
 
 
 def serve_state_pspecs(state, mesh: Mesh):
-    flat, tdef = jax.tree_util.tree_flatten_with_path(state)
-    specs = []
-    for path, leaf in flat:
-        name = "/".join(getattr(k, "key", str(k)) for k in path)
-        specs.append(_sanitize(_leaf_spec(name, leaf.ndim, mesh),
-                               leaf.shape, mesh))
+    named, tdef = _walk(state)
+    specs = [_sanitize(_leaf_spec(name, leaf.ndim, mesh), leaf.shape, mesh)
+             for name, leaf in named]
     return jax.tree_util.tree_unflatten(tdef, specs)
 
 

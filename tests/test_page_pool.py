@@ -114,6 +114,69 @@ def test_over_capacity_request_rejected():
         pool.ensure(0, 100)
 
 
+def test_grow_extends_pool_without_moving_pages():
+    """Growth appends fresh pages to the BACK of each free list (warm
+    just-freed pages still go out first) and never invalidates existing
+    table entries."""
+    pool = PagePool(4, 8, 2, 16)          # 3 usable pages
+    pool.ensure(0, 48)                    # takes all 3
+    mapped = pool.table[0, :3].copy()
+    with pytest.raises(PagePoolExhausted):
+        pool.ensure(1, 16)
+    pool.grow(8)                          # 4 -> 8 pages
+    assert pool.n_pages == 8 and pool.free_pages == 4
+    assert (pool.table[0, :3] == mapped).all()   # mapping untouched
+    pool.ensure(1, 64)                    # the new pages are allocatable
+    pool.check_consistent()
+    assert pool.live_pages == 7
+    # warm reuse across growth: a just-freed old page is the next one out
+    pool.free_slot(0)
+    pool.ensure(1, 80)
+    assert int(pool.table[1, 4]) == int(mapped[-1])
+    pool.check_consistent()
+    with pytest.raises(ValueError, match="grow"):
+        pool.grow(8)                      # must strictly grow
+
+
+def test_sharded_pool_grow_is_uniform():
+    """Growth extends EVERY shard's block by the same count (the device
+    pool's page axis must stay evenly partitioned) and keeps shard-local
+    indices valid."""
+    pool = PagePool(4, 4, 2, 8, n_shards=2)     # 1 usable page per shard
+    pool.ensure(0, 8)
+    pool.ensure(1, 8)
+    with pytest.raises(PagePoolExhausted):
+        pool.ensure(0, 16)
+    pool.grow(4)
+    assert pool.n_pages == 8 and pool.pages_per_shard == 4
+    assert pool.shard_free_pages(0) == 2 and pool.shard_free_pages(1) == 2
+    pool.ensure(0, 24)                          # grows within shard 0 only
+    assert pool.shard_free_pages(0) == 0 and pool.shard_free_pages(1) == 2
+    assert (pool.table[0, :3] < 4).all()        # local indices stay local
+    pool.check_consistent()
+
+
+def test_sharded_pool_validation():
+    with pytest.raises(ValueError, match="divisible"):
+        PagePool(7, 4, 2, 8, n_shards=2)
+    with pytest.raises(ValueError, match="divisible"):
+        PagePool(8, 4, 3, 8, n_shards=2)
+    with pytest.raises(ValueError, match="trash"):
+        PagePool(2, 4, 2, 8, n_shards=2)
+
+
+def test_sharded_reserve_is_shard_local():
+    """A hold on one shard must not block allocations on the other, and
+    reserve checks the slot's OWN shard's free pages."""
+    pool = PagePool(8, 4, 2, 8, n_shards=2)     # 3 usable pages per shard
+    pool.reserve(0, 3)                          # shard 0 fully held
+    assert pool.shard_free_pages(0) == 0 and pool.shard_free_pages(1) == 3
+    pool.ensure(1, 24)                          # shard 1 unaffected
+    with pytest.raises(PagePoolExhausted):
+        pool.reserve(1, 1)                      # its own shard is dry
+    pool.check_consistent()
+
+
 def test_reservations_protect_inflight_prefills():
     """A hold placed at chunked admission is consumed by the holder's own
     allocations; other slots cannot dip into held stock, and free_pages

@@ -147,6 +147,71 @@ def test_slab_engine_reserved_equals_live(setup):
     assert rep_d["reserved_bytes"] == rep_d["live_bytes"]
 
 
+def test_cache_report_shard_breakdown_sums_to_totals(setup):
+    """``shards`` must break reserved/live/shipped-table bytes down
+    per mesh shard with entries that sum EXACTLY to the totals (one entry
+    on a single device) — for the paged and slab engines alike."""
+    cfg, api, params, absorbed, pj = setup
+    eng = ServeEngine(cfg, absorbed, swan=_swan(), projections=pj,
+                      max_seq=64, n_slots=2, paged=True, page_size=PAGE)
+    eng.submit(Request(uid="x", tokens=_prompt(cfg, 20), max_new_tokens=8))
+    for _ in range(4):
+        eng.step()
+    rep = eng.cache_report()
+    assert len(rep["shards"]) == 1                       # dp=1
+    assert sum(s["reserved_bytes"] for s in rep["shards"]) \
+        == rep["reserved_bytes"]
+    assert sum(s["live_bytes"] for s in rep["shards"]) == rep["live_bytes"]
+    assert sum(s["page_table_shipped_bytes"] for s in rep["shards"]) \
+        == eng.page_table_shipped_bytes()
+    assert sum(s["live_pages"] for s in rep["shards"]) == rep["live_pages"]
+    slab = ServeEngine(cfg, absorbed, swan=_swan(), projections=pj,
+                       max_seq=64, n_slots=2).cache_report()
+    assert sum(s["reserved_bytes"] for s in slab["shards"]) \
+        == slab["reserved_bytes"]
+    assert sum(s["live_bytes"] for s in slab["shards"]) == slab["live_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Pool growth (pool_grow=True): exhaustion -> grow -> drain
+# ---------------------------------------------------------------------------
+
+def test_exhausted_pool_grows_and_drains(setup):
+    """An over-committed pool that would hold admissions (and raise
+    mid-decode) instead GROWS — 2x pages, copy, extended free list — and
+    the trace drains token-identically to an uncommitted engine."""
+    cfg, api, params, absorbed, pj = setup
+    kw = dict(swan=_swan(), projections=pj, max_seq=64, n_slots=2)
+    want = {c.uid: c.tokens for c in
+            ServeEngine(cfg, absorbed, **kw).run(_mixed_trace(cfg))}
+    # 1 usable page = 16 sparse tokens: the long request's lifetime alone
+    # overflows it (PagePoolExhausted at admission without pool_grow)
+    eng = ServeEngine(cfg, absorbed, paged=True, page_size=PAGE, n_pages=2,
+                      pool_grow=True, **kw)
+    v0 = eng.pool.version
+    got = {c.uid: c.tokens for c in eng.run(_mixed_trace(cfg))}
+    assert got == want
+    assert eng.pool.n_pages > 2                  # it actually grew
+    assert eng.pool.version > v0
+    assert eng.pool.live_pages == 0              # drained -> fully reclaimed
+    eng.pool.check_consistent()
+    # device pool arrays grew in lockstep with the allocator
+    assert eng.state["pool"]["k"]["vals"].shape[1] == eng.pool.n_pages
+
+
+def test_growth_is_capped_at_full_reservation(setup):
+    """pool_grow never allocates past the full-reservation cap — at the cap
+    every admission fits, so the cap is also the point where growth stops
+    being needed."""
+    cfg, api, params, absorbed, pj = setup
+    eng = ServeEngine(cfg, absorbed, swan=_swan(), projections=pj,
+                      max_seq=64, n_slots=2, paged=True, page_size=PAGE,
+                      n_pages=4, pool_grow=True, prefill_chunk=16)
+    eng.run(_mixed_trace(cfg))
+    cap = eng.n_slots * eng.pool.pages_per_seq + 1
+    assert eng.pool.pages_per_shard <= cap
+
+
 # ---------------------------------------------------------------------------
 # Failure modes
 # ---------------------------------------------------------------------------

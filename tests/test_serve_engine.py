@@ -217,6 +217,42 @@ def test_engine_temperature_path(setup):
     assert c["hot"] != a["hot"]
 
 
+# ---------------------------------------------------------------------------
+# Admission policy (FIFO default, shortest-remaining-first opt-in)
+# ---------------------------------------------------------------------------
+
+def test_fifo_remains_default_and_srf_token_identical(setup):
+    """The admission policy must never change token streams (per-lane
+    chunk boundaries and decode math are schedule-independent); FIFO stays
+    the default ordering, and SRF reorders admissions shortest-first."""
+    cfg, api, params, absorbed, pj = setup
+    reqs = lambda: [
+        Request(uid="long", tokens=_prompt(cfg, 24, seed=1), max_new_tokens=8),
+        Request(uid="mid", tokens=_prompt(cfg, 12, seed=2), max_new_tokens=6),
+        Request(uid="short", tokens=_prompt(cfg, 5, seed=3), max_new_tokens=3),
+    ]
+    fifo_eng = ServeEngine(cfg, params, max_seq=64, n_slots=1)
+    assert fifo_eng.admission == "fifo"          # regression: the default
+    fifo = {c.uid: c for c in fifo_eng.run(reqs())}
+    srf = {c.uid: c
+           for c in ServeEngine(cfg, params, max_seq=64, n_slots=1,
+                                admission="srf").run(reqs())}
+    assert {u: c.tokens for u, c in fifo.items()} == \
+        {u: c.tokens for u, c in srf.items()}
+    # FIFO serves in submission order; SRF bounds short-request TTFT when
+    # the queue exceeds slot capacity
+    assert fifo["long"].first_token_step < fifo["short"].first_token_step
+    assert srf["short"].first_token_step < srf["mid"].first_token_step
+    assert srf["mid"].first_token_step < srf["long"].first_token_step
+    assert srf["short"].first_token_step < fifo["short"].first_token_step
+
+
+def test_srf_validation(setup):
+    cfg, api, params, absorbed, pj = setup
+    with pytest.raises(ValueError, match="admission"):
+        ServeEngine(cfg, params, max_seq=64, n_slots=1, admission="lifo")
+
+
 def test_cache_report(setup):
     cfg, api, params, absorbed, pj = setup
     eng = ServeEngine(cfg, absorbed, swan=_swan(cfg, k_max=4, quantize=True),

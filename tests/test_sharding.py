@@ -163,3 +163,45 @@ def test_serve_state_specs_cover_all_archs():
         assert len(jax.tree_util.tree_leaves(
             specs, is_leaf=lambda x: isinstance(x, P))) == \
             len(jax.tree_util.tree_leaves(state))
+
+
+def test_serve_state_specs_leaf_complete_for_engine_states():
+    """Every leaf of a REAL engine serve state — dense, slab (SWAN incl.
+    quantized scales), and paged — must have an EXPLICIT spec rule, not the
+    replicated fallback: the mesh-sharded engine builds its shard_map specs
+    from this table, and an unspecced leaf would silently ship (and be
+    written) replicated on every shard.  New state leaves can't land
+    without a sharding decision."""
+    from repro.configs import SwanConfig
+    from repro.sharding.serve_specs import unspecced_serve_leaves
+
+    cfg = get_smoke_config("llama3-8b")
+    api = get_model(cfg)
+    swan = SwanConfig(k_max=8, buffer=4, mode="topk", quantize=True)
+    states = {
+        "dense": jax.eval_shape(
+            lambda: api.init_serve_state(cfg, None, 2, 32)),
+        "slab": jax.eval_shape(
+            lambda: api.init_serve_state(cfg, swan, 2, 32)),
+        "paged": jax.eval_shape(
+            lambda: api.init_paged_state(cfg, swan, 2, 32, 8, 8)),
+    }
+    for name, state in states.items():
+        missing = unspecced_serve_leaves(state)
+        assert not missing, f"{name} serve state has unspecced leaves: " \
+                            f"{missing}"
+
+
+def test_sanitizer_drops_axes_missing_from_mesh():
+    """A data-only serve mesh must be able to consume the production specs
+    (which also name 'model'): axes the mesh doesn't carry are dropped
+    instead of raising."""
+    from repro.sharding.serve_specs import _sanitize
+
+    class M:
+        shape = {"data": 2}
+        axis_names = ("data",)
+
+    out = _sanitize(P(None, "data", None, "model", None),
+                    (2, 4, 2, 32, 8), M())
+    assert tuple(out) == (None, "data", None, None, None)
