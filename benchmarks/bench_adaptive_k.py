@@ -18,9 +18,10 @@ from repro.configs import SwanConfig
 from repro.core.adaptive import allocate_k, spectra_from_joint, uniform_k
 from benchmarks.common import (emit, eval_tokens, swan_teacher_forced_nll,
                                trained_tiny_lm)
+from benchmarks.common import bench_record
 
 
-def run() -> None:
+def _run() -> None:
     cfg, params, pj, absorbed = trained_tiny_lm()
     tokens = eval_tokens(cfg)
     spec = spectra_from_joint(pj["spectrum_qk"])
@@ -42,6 +43,11 @@ def run() -> None:
         emit("adaptive_k", us_a,
              f"avg_k={avg_k}_adaptive_nll={nll_a:.4f}_alloc={list(k_ad)}"
              f"_delta={nll_a - nll_u:+.4f}")
+
+
+def run() -> None:
+    with bench_record("adaptive_k"):
+        _run()
 
 
 if __name__ == "__main__":

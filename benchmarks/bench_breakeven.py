@@ -11,6 +11,7 @@ import time
 from repro.core.analytical import (breakeven_length, flops_standard,
                                    flops_swan)
 from benchmarks.common import emit
+from benchmarks.common import bench_record
 
 
 def _crossing(dh, k, b, lo=1, hi=1 << 20):
@@ -24,7 +25,7 @@ def _crossing(dh, k, b, lo=1, hi=1 << 20):
     return lo
 
 
-def run() -> None:
+def _run() -> None:
     dh = 128
     for b in (0, 128):
         for k in (32, 64, 96):
@@ -41,6 +42,11 @@ def run() -> None:
     for k in (32, 64):
         ratio = flops_swan(L, dh, k, 128) / flops_standard(L, dh)
         emit("eq2_longctx_flop_ratio", 0.0, f"L=32768_k={k}_swan/std={ratio:.3f}")
+
+
+def run() -> None:
+    with bench_record("breakeven"):
+        _run()
 
 
 if __name__ == "__main__":

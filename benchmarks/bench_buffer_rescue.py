@@ -14,11 +14,12 @@ import time
 from repro.configs import SwanConfig
 from benchmarks.common import (emit, eval_tokens, swan_teacher_forced_nll,
                                trained_tiny_lm)
+from benchmarks.common import bench_record
 
 RATIOS = [0.5, 0.19, 0.09, 0.06]
 
 
-def run() -> None:
+def _run() -> None:
     cfg, params, pj, absorbed = trained_tiny_lm()
     tokens = eval_tokens(cfg)
     variants = [("bt0_fp", 0, False), ("bt8_fp", 8, False),
@@ -31,6 +32,11 @@ def run() -> None:
             nll = swan_teacher_forced_nll(cfg, absorbed, tokens, swan, pj)
             emit("fig2b_buffer_rescue", (time.perf_counter() - t0) * 1e6,
                  f"ratio={ratio:.2f}_{name}_nll={nll:.4f}")
+
+
+def run() -> None:
+    with bench_record("buffer_rescue"):
+        _run()
 
 
 if __name__ == "__main__":

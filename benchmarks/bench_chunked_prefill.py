@@ -31,7 +31,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit, gate
 from repro.configs import SwanConfig, get_smoke_config
 from repro.launch.io import make_batch
 from repro.models import get_model
@@ -87,7 +87,7 @@ def _timed_steps(engine, reqs):
     return np.asarray(durs)
 
 
-def run(smoke: bool = False) -> None:
+def _run(smoke: bool = False) -> None:
     n_requests, gen_tokens, long_len = (6, 10, 320) if smoke else (9, 20, 384)
     cfg = _cfg()
     api = get_model(cfg)
@@ -122,19 +122,19 @@ def run(smoke: bool = False) -> None:
         stats[mode] = min(passes, key=lambda s: s["p99"])
         stats[mode]["prefill_execs"] = eng.prefill_cache_size
 
-    # --- acceptance checks -------------------------------------------------
-    assert tokens["chunked"] == tokens["monolithic"], \
-        "chunked prefill diverged from monolithic admission"
+    # --- acceptance gates --------------------------------------------------
+    gate("token_identity", tokens["chunked"] == tokens["monolithic"],
+         "chunked prefill diverged from monolithic admission")
     mono, chk = stats["monolithic"], stats["chunked"]
     # timing gate with noise headroom (CI shares runners; identity and
-    # executable-count asserts above/below stay exact)
-    assert chk["p99"] * P99_MARGIN < mono["p99"], \
-        (f"chunked p99 {chk['p99'] * 1e3:.2f} ms did not improve on "
+    # executable-count gates above/below stay exact)
+    gate("p99_improves", chk["p99"] * P99_MARGIN < mono["p99"],
+         f"chunked p99 {chk['p99'] * 1e3:.2f} ms did not improve on "
          f"monolithic {mono['p99'] * 1e3:.2f} ms by >= {P99_MARGIN}x")
     if chk["prefill_execs"] != -1:
         bound = 2 * int(math.log2(MAX_SEQ)) + 2
-        assert chk["prefill_execs"] <= bound, \
-            f"{chk['prefill_execs']} prefill executables > O(log max_seq)"
+        gate("prefill_execs_log_bound", chk["prefill_execs"] <= bound,
+             f"{chk['prefill_execs']} prefill executables > O(log max_seq)")
 
     for mode, s in stats.items():
         emit(f"chunked_prefill_{mode}", s["p99"] * 1e6,
@@ -144,6 +144,11 @@ def run(smoke: bool = False) -> None:
     emit("chunked_prefill_p99_speedup", mono["p99"] / chk["p99"],
          f"chunk={CHUNK};long_len={long_len};slots={N_SLOTS};"
          f"max_seq={MAX_SEQ}")
+
+
+def run(smoke: bool = False) -> None:
+    with bench_record("chunked_prefill"):
+        _run(smoke=smoke)
 
 
 def main() -> None:

@@ -36,7 +36,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit, gate
 from repro.configs import SwanConfig, get_smoke_config
 from repro.launch.io import make_batch
 from repro.models import get_model
@@ -86,7 +86,7 @@ def _drain_timed(engine, reqs):
     return np.asarray(durs)
 
 
-def run(smoke: bool = False) -> None:
+def _run(smoke: bool = False) -> None:
     n_requests, gen_tokens, long_len = (8, 6, 96) if smoke else (8, 16, 192)
     cfg = _cfg()
     api = get_model(cfg)
@@ -120,17 +120,17 @@ def run(smoke: bool = False) -> None:
 
     # --- acceptance gates ---------------------------------------------------
     ser, bat = stats["serial"], stats["batched"]
-    assert tokens["batched"] == tokens["serial"], \
-        "batched concurrent prefill diverged from the serial scheduler"
-    assert bat["ttft_p99"] <= TTFT_GATE * ser["ttft_p99"], \
-        (f"batched p99 TTFT {bat['ttft_p99']:.0f} steps did not reach "
+    gate("token_identity", tokens["batched"] == tokens["serial"],
+         "batched concurrent prefill diverged from the serial scheduler")
+    gate("ttft_p99", bat["ttft_p99"] <= TTFT_GATE * ser["ttft_p99"],
+         f"batched p99 TTFT {bat['ttft_p99']:.0f} steps did not reach "
          f"{TTFT_GATE}x serial ({ser['ttft_p99']:.0f} steps)")
-    assert bat["engine_steps"] <= ser["engine_steps"], \
-        "batched scheduler slowed decode drain (more engine steps)"
+    gate("no_extra_steps", bat["engine_steps"] <= ser["engine_steps"],
+         "batched scheduler slowed decode drain (more engine steps)")
     if bat["prefill_execs"] != -1:
         bound = (int(math.log2(N_SLOTS)) + 1) * 2 * (int(math.log2(MAX_SEQ)) + 1)
-        assert bat["prefill_execs"] <= bound, \
-            f"{bat['prefill_execs']} multi-slot prefill executables > bound"
+        gate("prefill_execs_bound", bat["prefill_execs"] <= bound,
+             f"{bat['prefill_execs']} multi-slot prefill executables > bound")
 
     for mode, s in stats.items():
         emit(f"concurrent_prefill_{mode}", s["ttft_p99"],
@@ -142,6 +142,11 @@ def run(smoke: bool = False) -> None:
          ser["ttft_p99"] / max(bat["ttft_p99"], 1e-9),
          f"slots={N_SLOTS};chunk={CHUNK};burst_rate={BURST_RATE};"
          f"gate={TTFT_GATE}")
+
+
+def run(smoke: bool = False) -> None:
+    with bench_record("concurrent_prefill"):
+        _run(smoke=smoke)
 
 
 def main() -> None:

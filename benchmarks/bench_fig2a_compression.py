@@ -11,9 +11,10 @@ import time
 from repro.core.analytical import (compression_ratio,
                                    memory_breakeven_retention)
 from benchmarks.common import emit
+from benchmarks.common import bench_record
 
 
-def run() -> None:
+def _run() -> None:
     d_head = 128
     t0 = time.perf_counter()
     rows = []
@@ -29,6 +30,11 @@ def run() -> None:
     for r, c16, c8 in rows:
         emit("fig2a_curve", us / len(rows),
              f"retention={r:.2f}_fp16={c16:.3f}_int8={c8:.3f}")
+
+
+def run() -> None:
+    with bench_record("fig2a_compression"):
+        _run()
 
 
 if __name__ == "__main__":

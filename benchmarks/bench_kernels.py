@@ -20,9 +20,10 @@ from repro.kernels.swan_decode.ops import swan_decode_attention_kernel
 from repro.kernels.swan_prune.ops import swan_prune
 from repro.core.projections import random_orthogonal
 from benchmarks.common import emit, timeit_call
+from benchmarks.common import bench_record
 
 
-def run() -> None:
+def _run() -> None:
     cfg = get_smoke_config("llama3-8b").replace(dtype="float32")
     B, S, b, k = 2, 256, 16, 8
     swan = SwanConfig(k_max=k, buffer=b, mode="topk")
@@ -74,6 +75,11 @@ def run() -> None:
                                                         P).transpose(0, 2, 1, 3), 8))
     us = timeit_call(prune_ref, x, P)
     emit("swan_prune_xla_ref", us, "T=128_dh=32_k=8")
+
+
+def run() -> None:
+    with bench_record("kernels"):
+        _run()
 
 
 if __name__ == "__main__":

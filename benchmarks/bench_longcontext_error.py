@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.configs import SwanConfig
 from repro.models import get_model
 from benchmarks.common import emit, eval_tokens, trained_tiny_lm
+from benchmarks.common import bench_record
 
 CHECKPOINTS = [32, 64, 128, 224]
 
@@ -54,7 +55,7 @@ def _drift(cfg, params_d, params_s, pj, swan, tokens):
     return out
 
 
-def run() -> None:
+def _run() -> None:
     cfg, params, pj, absorbed = trained_tiny_lm()
     tokens = eval_tokens(cfg, seq=228)
     k = cfg.d_head // 8   # deep-compression regime where drift is visible
@@ -66,6 +67,11 @@ def run() -> None:
         for t, (agree, err) in sorted(drift.items()):
             emit("fig4_longcontext_drift", us,
                  f"{name}_pos={t}_top1agree={agree:.3f}_logit_err={err:.3f}")
+
+
+def run() -> None:
+    with bench_record("longcontext_error"):
+        _run()
 
 
 if __name__ == "__main__":

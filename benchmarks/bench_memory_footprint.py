@@ -10,9 +10,10 @@ from repro.configs import ARCH_IDS, SHAPES, SwanConfig, get_config
 from repro.core.analytical import model_cache_footprint
 from repro.models import swan_applicable
 from benchmarks.common import emit
+from benchmarks.common import bench_record
 
 
-def run() -> None:
+def _run() -> None:
     shape = SHAPES["decode_32k"]
     for arch in ARCH_IDS:
         cfg = get_config(arch)
@@ -29,6 +30,11 @@ def run() -> None:
             emit("cache_footprint", 0.0,
                  f"{arch}_{tag}_dense={fp.dense_bytes / 1e9:.1f}GB"
                  f"_swan={fp.swan_bytes / 1e9:.1f}GB_saving={fp.saving:.1%}")
+
+
+def run() -> None:
+    with bench_record("memory_footprint"):
+        _run()
 
 
 if __name__ == "__main__":

@@ -29,7 +29,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit, gate, record_metrics
 from repro.configs import SwanConfig, get_smoke_config
 from repro.launch.io import make_batch
 from repro.models import get_model
@@ -65,20 +65,22 @@ def _trace(cfg, n_requests, gen_tokens):
 
 
 def _drain_sampling(engine, reqs):
-    """Run the trace step-by-step, sampling live bytes after each step."""
+    """Run the trace step-by-step, sampling live bytes after each step —
+    read off the ``kv_cache_live_bytes`` gauge the engine samples every
+    step (same ``_cache_bytes()`` source as ``cache_report()``)."""
     for r in reqs:
         engine.submit(r)
     live_series, retired_at = [], []
     t0 = time.perf_counter()
     while not engine.done:
         n_ret = engine.step()
-        live_series.append(engine.cache_report()["live_bytes"])
+        live_series.append(int(engine.metrics.value("kv_cache_live_bytes")))
         if n_ret:
             retired_at.append(len(live_series) - 1)
     return time.perf_counter() - t0, live_series, retired_at
 
 
-def run(smoke: bool = False) -> None:
+def _run(smoke: bool = False) -> None:
     n_requests, gen_tokens = (4, 12) if smoke else (6, 24)
     cfg = _cfg()
     api = get_model(cfg)
@@ -99,23 +101,32 @@ def run(smoke: bool = False) -> None:
         paged, _trace(cfg, n_requests, gen_tokens))
     got = {c.uid: c.tokens for c in paged.completions}
 
-    # --- acceptance checks -------------------------------------------------
-    assert got == want, "paged engine diverged from slab engine"
+    # --- acceptance gates --------------------------------------------------
+    gate("token_identity", got == want,
+         "paged engine diverged from slab engine")
     rep = paged.cache_report()
     slab_rep = slab.cache_report()
-    assert slab_rep["reserved_bytes"] == slab_rep["live_bytes"]
+    gate("slab_reserved_eq_live",
+         slab_rep["reserved_bytes"] == slab_rep["live_bytes"],
+         f"{slab_rep['reserved_bytes']} != {slab_rep['live_bytes']}")
+    # the gauge and cache_report() read the same _cache_bytes() source
+    gate("gauge_matches_report",
+         live[-1] == rep["live_bytes"],
+         f"gauge {live[-1]} != report {rep['live_bytes']}")
     peak = max(live)
-    assert peak < rep["slab_bytes"], \
-        f"live bytes {peak} should undercut slab residency {rep['slab_bytes']}"
+    gate("peak_under_slab", peak < rep["slab_bytes"],
+         f"live bytes {peak} should undercut slab {rep['slab_bytes']}")
     # memory must TRACK tokens: strictly growing while sequences only decode
     first_ret = retired_at[0]
     grow = [b for b in live[:first_ret]]
-    assert any(b2 > b1 for b1, b2 in zip(grow, grow[1:])), \
-        "live bytes never grew with generated tokens"
+    gate("live_bytes_grow",
+         any(b2 > b1 for b1, b2 in zip(grow, grow[1:])),
+         "live bytes never grew with generated tokens")
     # retirement reclaims pages: some later sample dips below the peak...
-    assert min(live[first_ret:]) < peak, "no pages reclaimed on retirement"
+    gate("retirement_reclaims", min(live[first_ret:]) < peak,
+         "no pages reclaimed on retirement")
     # ...and a drained pool holds zero live pages
-    assert rep["live_pages"] == 0, "pages leaked after drain"
+    gate("pool_drained", rep["live_pages"] == 0, "pages leaked after drain")
     paged.pool.check_consistent()
 
     n_tok = sum(len(t) for t in got.values())
@@ -127,6 +138,12 @@ def run(smoke: bool = False) -> None:
     emit("paged_cache_reclaim", 0.0,
          f"live_series_head={'|'.join(str(b) for b in live[:6])};"
          f"retired_steps={len(retired_at)};final_live_pages=0")
+    record_metrics(paged.metrics, "paged")
+
+
+def run(smoke: bool = False) -> None:
+    with bench_record("paged_cache"):
+        _run(smoke=smoke)
 
 
 def main() -> None:

@@ -15,7 +15,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit, gate
 from repro.configs import SwanConfig, get_smoke_config
 from repro.launch.io import make_batch
 from repro.models import get_model
@@ -65,7 +65,7 @@ def _bench(tag, engine, reqs):
          + (f";saving={rep['saving']:.2f}" if "saving" in rep else ""))
 
 
-def run() -> None:
+def _run() -> None:
     cfg = _cfg()
     api = get_model(cfg)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
@@ -80,7 +80,13 @@ def run() -> None:
                       max_seq=MAX_SEQ, n_slots=N_SLOTS)
     # two distinct per-request compression levels in one trace
     _bench("swan_mixed_k", eng, _trace(cfg, [8, 4]))
-    assert eng.decode_cache_size in (1, -1), "mixed k must not re-jit decode"
+    gate("mixed_k_one_executable", eng.decode_cache_size in (1, -1),
+         "mixed k must not re-jit decode")
+
+
+def run() -> None:
+    with bench_record("serve_engine"):
+        _run()
 
 
 if __name__ == "__main__":

@@ -47,7 +47,8 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit, gate, record_metrics
+from repro.obs import EventTrace
 from repro.configs import SwanConfig, get_smoke_config
 from repro.launch.io import make_batch
 from repro.launch.mesh import make_serve_mesh
@@ -102,7 +103,7 @@ def _drain(engine, reqs):
     return per_step, np.asarray(durs)
 
 
-def run(smoke: bool = False) -> None:
+def _run(smoke: bool = False) -> None:
     n_requests, gen_tokens = (10, 5) if smoke else (24, 12)
     cfg = _cfg()
     api = get_model(cfg)
@@ -131,27 +132,32 @@ def run(smoke: bool = False) -> None:
         }
         assert eng.pool.live_pages == 0
         eng.pool.check_consistent()
+        record_metrics(eng.metrics, mode)
 
     # --- acceptance gates ---------------------------------------------------
     one, sh = stats["single"], stats["sharded"]
-    assert sh["dp"] == DP and one["dp"] == 1
-    assert tokens["sharded"] == tokens["single"], \
-        "sharded engine diverged from the single-device engine"
+    gate("shard_counts", sh["dp"] == DP and one["dp"] == 1,
+         f"dp={one['dp']}/{sh['dp']}")
+    gate("token_identity", tokens["sharded"] == tokens["single"],
+         "sharded engine diverged from the single-device engine")
     # the property that scales: per-step dispatch count is INDEPENDENT of
     # shard count — at most one packed chunk + one decode dispatch per
     # step on ANY mesh (the shard fan-out lives inside shard_map, never in
     # a host loop), so 8 shards never issue more per-step work than 1
-    assert max(one["max_per_step"], sh["max_per_step"]) <= 2, \
-        "more than one chunk + one decode dispatch in a step"
-    assert all(c <= 1 and d <= 1 for c, d in sh["per_step"]), \
-        "a sharded step issued per-shard dispatches"
+    gate("one_dispatch_per_step",
+         max(one["max_per_step"], sh["max_per_step"]) <= 2,
+         "more than one chunk + one decode dispatch in a step")
+    gate("no_per_shard_dispatch",
+         all(c <= 1 and d <= 1 for c, d in sh["per_step"]),
+         "a sharded step issued per-shard dispatches")
     # per-SHARD prefill budgets mean the sharded engine admits bursts at
     # least as fast — never more total dispatches or steps than 1 device
-    assert sh["engine_steps"] <= one["engine_steps"], \
-        "sharding slowed the drain (more engine steps)"
-    assert (sh["chunk_dispatches"] + sh["decode_dispatches"]
-            <= one["chunk_dispatches"] + one["decode_dispatches"]), \
-        "sharding increased total dispatch count"
+    gate("no_extra_steps", sh["engine_steps"] <= one["engine_steps"],
+         "sharding slowed the drain (more engine steps)")
+    gate("no_extra_dispatches",
+         sh["chunk_dispatches"] + sh["decode_dispatches"]
+         <= one["chunk_dispatches"] + one["decode_dispatches"],
+         "sharding increased total dispatch count")
 
     for mode, s in stats.items():
         emit(f"sharded_serve_{mode}",
@@ -166,6 +172,48 @@ def run(smoke: bool = False) -> None:
          / max(one["chunk_dispatches"] + one["decode_dispatches"], 1),
          f"dp={DP};slots={N_SLOTS};chunk={CHUNK};page={PAGE};"
          f"burst_rate={BURST_RATE}")
+
+    # --- instrumentation overhead (observability acceptance: < 3% p99) ----
+    # identical single-device drains, compile-warmed, with the full stack
+    # OFF (null registry, no trace) vs ON (metrics + in-memory trace);
+    # also re-proves token identity and dispatch-count identity on/off
+    def _mk(instrumented):
+        return ServeEngine(cfg, absorbed, swan=swan, projections=pj,
+                           max_seq=MAX_SEQ, n_slots=N_SLOTS, paged=True,
+                           page_size=PAGE, prefill_chunk=CHUNK,
+                           prefill_slots=4, metrics=instrumented,
+                           trace=EventTrace() if instrumented else None)
+
+    p99, toks_oo, disp_oo = {}, {}, {}
+    for tag in ("off", "on"):
+        eng = _mk(tag == "on")
+        _drain(eng, _trace(cfg, n_requests, gen_tokens))     # warm compiles
+        best = []
+        for _ in range(2):
+            _, durs = _drain(eng, _trace(cfg, n_requests, gen_tokens))
+            best.append(float(np.percentile(durs, 99)))
+        p99[tag] = min(best)
+        toks_oo[tag] = {c.uid: c.tokens for c in eng.completions}
+        disp_oo[tag] = dict(eng.dispatches)
+    gate("obs_token_identity", toks_oo["on"] == toks_oo["off"],
+         "metrics/tracing changed output tokens")
+    gate("obs_dispatch_identity", disp_oo["on"] == disp_oo["off"],
+         f"metrics/tracing changed dispatch counts: "
+         f"{disp_oo['off']} vs {disp_oo['on']}")
+    # 3% relative + 300us absolute slack (absorbs host-timer noise on the
+    # tiny smoke model, where one step is only a few ms)
+    budget = p99["off"] * 1.03 + 300e-6
+    gate("obs_overhead_p99", p99["on"] <= budget,
+         f"instrumented p99 {p99['on'] * 1e6:.0f}us exceeds "
+         f"{budget * 1e6:.0f}us (off: {p99['off'] * 1e6:.0f}us)")
+    emit("sharded_serve_obs_overhead_p99", p99["on"] * 1e6,
+         f"off_p99_us={p99['off'] * 1e6:.0f};"
+         f"ratio={p99['on'] / max(p99['off'], 1e-12):.3f}")
+
+
+def run(smoke: bool = False) -> None:
+    with bench_record("sharded_serve"):
+        _run(smoke=smoke)
 
 
 def main() -> None:

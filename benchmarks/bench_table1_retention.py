@@ -11,11 +11,12 @@ import time
 from repro.configs import SwanConfig
 from benchmarks.common import (emit, eval_tokens, swan_teacher_forced_nll,
                                trained_tiny_lm)
+from benchmarks.common import bench_record
 
 RATIOS = [1.0, 0.9, 0.75, 0.5, 0.3, 0.1]
 
 
-def run() -> None:
+def _run() -> None:
     cfg, params, pj, absorbed = trained_tiny_lm()
     tokens = eval_tokens(cfg)
     t0 = time.perf_counter()
@@ -29,6 +30,11 @@ def run() -> None:
         nll = swan_teacher_forced_nll(cfg, absorbed, tokens, swan, pj)
         emit("table1_retention", (time.perf_counter() - t0) * 1e6,
              f"ratio={ratio:.2f}_k={k}_nll={nll:.4f}_delta={nll - base:+.4f}")
+
+
+def run() -> None:
+    with bench_record("table1_retention"):
+        _run()
 
 
 if __name__ == "__main__":

@@ -10,11 +10,12 @@ import time
 from repro.configs import SwanConfig
 from benchmarks.common import (emit, eval_tokens, swan_teacher_forced_nll,
                                trained_tiny_lm)
+from benchmarks.common import bench_record
 
 SPLITS = [(0.2, 0.8), (0.35, 0.65), (0.5, 0.5), (0.65, 0.35), (0.8, 0.2)]
 
 
-def run() -> None:
+def _run() -> None:
     cfg, params, pj, absorbed = trained_tiny_lm()
     tokens = eval_tokens(cfg)
     for kr, vr in SPLITS:
@@ -26,6 +27,11 @@ def run() -> None:
         nll = swan_teacher_forced_nll(cfg, absorbed, tokens, swan, pj)
         emit("table2_kv_split", (time.perf_counter() - t0) * 1e6,
              f"topk_r={kr:.2f}_topv_r={vr:.2f}_nll={nll:.4f}")
+
+
+def run() -> None:
+    with bench_record("table2_kv_split"):
+        _run()
 
 
 if __name__ == "__main__":

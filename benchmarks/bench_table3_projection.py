@@ -16,6 +16,7 @@ from repro.core.projections import random_orthogonal
 from repro.models import get_model
 from benchmarks.common import (emit, eval_tokens, swan_teacher_forced_nll,
                                trained_tiny_lm)
+from benchmarks.common import bench_record
 
 
 def _variants(cfg, pj, params):
@@ -34,7 +35,7 @@ def _variants(cfg, pj, params):
                            "p_vo": pj["p_vo"][:, perm_h]}, None
 
 
-def run() -> None:
+def _run() -> None:
     cfg, params, pj, _ = trained_tiny_lm()
     api = get_model(cfg)
     tokens = eval_tokens(cfg)
@@ -50,6 +51,11 @@ def run() -> None:
     ok = results["ours"] <= min(v for k, v in results.items() if k != "ours") + 1e-3
     emit("table3_projection_check", 0.0,
          f"ours_best={'yes' if ok else 'NO'}")
+
+
+def run() -> None:
+    with bench_record("table3_projection"):
+        _run()
 
 
 if __name__ == "__main__":

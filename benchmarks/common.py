@@ -9,13 +9,21 @@
   compressed hybrid cache), so compression errors propagate exactly as in
   deployment.
 * ``timeit_call`` — microbenchmark helper emitting us_per_call.
+* ``bench_record`` / ``BenchRecorder`` — machine-readable run artifacts:
+  every benchmark writes ``BENCH_<name>.json`` (CSV rows, gate results,
+  optional metrics snapshots, jax version) into ``$REPRO_BENCH_OUT``
+  (default ``bench_out/``); ``benchmarks/run.py`` aggregates them and CI
+  uploads them from both JAX pins.
 """
 from __future__ import annotations
 
 import functools
+import json
 import os
+import sys
 import time
-from typing import Dict, Optional, Tuple
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -120,5 +128,90 @@ def timeit_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
-    """CSV row in the required ``name,us_per_call,derived`` format."""
+    """CSV row in the required ``name,us_per_call,derived`` format.  Also
+    recorded into the active :class:`BenchRecorder`, if any."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    if _ACTIVE is not None:
+        _ACTIVE.rows.append({"name": name,
+                             "us_per_call": float(us_per_call),
+                             "derived": derived})
+
+
+# ---------------------------------------------------------------------------
+# Machine-readable benchmark artifacts
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional["BenchRecorder"] = None
+
+
+class BenchRecorder:
+    """Collects one benchmark's CSV rows, gate verdicts and metrics
+    snapshots for the ``BENCH_<name>.json`` artifact."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict[str, Any]] = []
+        self.gates: List[Dict[str, Any]] = []
+        self.extra: Dict[str, Any] = {}
+
+    def gate(self, name: str, passed: bool, detail: str = "") -> None:
+        """Record a pass/fail gate, THEN assert it — a failing gate still
+        lands in the JSON artifact (written in ``bench_record``'s finally
+        block), so CI uploads show which gate tripped."""
+        self.gates.append({"name": name, "passed": bool(passed),
+                           "detail": detail})
+        assert passed, f"gate {name}: {detail}"
+
+    def add_metrics(self, registry, tag: str = "engine") -> None:
+        """Attach a ``repro.obs`` MetricsRegistry snapshot under ``tag``."""
+        self.extra.setdefault("metrics", {})[tag] = registry.snapshot()
+
+    def payload(self, ok: bool) -> Dict[str, Any]:
+        import jax as _jax
+        return {"bench": self.name, "ok": ok, "jax_version": _jax.__version__,
+                "rows": self.rows, "gates": self.gates, "extra": self.extra}
+
+
+def bench_out_dir() -> str:
+    return os.environ.get("REPRO_BENCH_OUT", "bench_out")
+
+
+def gate(name: str, passed: bool, detail: str = "") -> None:
+    """Module-level gate: records into the active recorder when one is
+    open (so the artifact keeps the verdict), always asserts."""
+    if _ACTIVE is not None:
+        _ACTIVE.gate(name, passed, detail)
+    else:
+        assert passed, f"gate {name}: {detail}"
+
+
+def record_metrics(registry, tag: str = "engine") -> None:
+    """Attach a metrics snapshot to the active recorder (no-op outside
+    ``bench_record``)."""
+    if _ACTIVE is not None:
+        _ACTIVE.add_metrics(registry, tag)
+
+
+@contextmanager
+def bench_record(name: str):
+    """Scope one benchmark run: ``emit``/``gate`` calls inside are
+    captured, and ``BENCH_<name>.json`` is written on exit — also when a
+    gate fails, with ``ok: false`` and the failing verdict included."""
+    global _ACTIVE
+    rec = BenchRecorder(name)
+    prev, _ACTIVE = _ACTIVE, rec
+    ok = False
+    try:
+        yield rec
+        ok = True
+    finally:
+        _ACTIVE = prev
+        outdir = bench_out_dir()
+        try:
+            os.makedirs(outdir, exist_ok=True)
+            path = os.path.join(outdir, f"BENCH_{name}.json")
+            with open(path, "w") as fh:
+                json.dump(rec.payload(ok), fh, indent=2, sort_keys=True)
+        except OSError as e:                      # never mask the gate error
+            print(f"# bench_record({name}): artifact write failed: {e}",
+                  file=sys.stderr)

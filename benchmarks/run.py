@@ -3,9 +3,17 @@
 Prints ``name,us_per_call,derived`` CSV rows (spec format).  Quality
 benchmarks score a tiny LM trained in-process on the deterministic
 synthetic corpus (cached across modules and runs).
+
+Each module also writes a machine-readable ``BENCH_<name>.json`` artifact
+(rows + gate verdicts + metrics snapshots) into ``$REPRO_BENCH_OUT``
+(default ``bench_out/``); this harness aggregates whatever artifacts are
+present into ``BENCH_SUMMARY.json``.
 """
 from __future__ import annotations
 
+import glob
+import json
+import os
 import sys
 import time
 import traceback
@@ -16,6 +24,7 @@ from benchmarks import (bench_adaptive_k, bench_breakeven,
                         bench_memory_footprint, bench_paged_cache,
                         bench_serve_engine, bench_table1_retention,
                         bench_table2_kv_split, bench_table3_projection)
+from benchmarks.common import bench_out_dir
 
 MODULES = [
     ("fig2a_compression", bench_fig2a_compression),
@@ -33,6 +42,43 @@ MODULES = [
 ]
 
 
+def aggregate() -> dict:
+    """Fold every ``BENCH_*.json`` artifact in the output dir into one
+    ``BENCH_SUMMARY.json`` (per-bench ok/rows/gates, total gate tally)."""
+    outdir = bench_out_dir()
+    benches = {}
+    for path in sorted(glob.glob(os.path.join(outdir, "BENCH_*.json"))):
+        if os.path.basename(path) == "BENCH_SUMMARY.json":
+            continue
+        try:
+            with open(path) as fh:
+                art = json.load(fh)
+        except (OSError, ValueError) as e:
+            print(f"# skipping unreadable artifact {path}: {e}",
+                  file=sys.stderr)
+            continue
+        benches[art.get("bench", os.path.basename(path))] = {
+            "ok": art.get("ok", False),
+            "jax_version": art.get("jax_version"),
+            "n_rows": len(art.get("rows", [])),
+            "gates": {g["name"]: g["passed"] for g in art.get("gates", [])},
+        }
+    summary = {
+        "benches": benches,
+        "n_benches": len(benches),
+        "n_gates": sum(len(b["gates"]) for b in benches.values()),
+        "gates_failed": sorted(
+            f"{name}:{g}" for name, b in benches.items()
+            for g, passed in b["gates"].items() if not passed),
+        "all_ok": all(b["ok"] for b in benches.values()),
+    }
+    if benches:
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(outdir, "BENCH_SUMMARY.json"), "w") as fh:
+            json.dump(summary, fh, indent=2, sort_keys=True)
+    return summary
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
@@ -46,6 +92,11 @@ def main() -> None:
             failures += 1
             print(f"# [{name}] FAILED", file=sys.stderr)
             traceback.print_exc()
+    summary = aggregate()
+    print(f"# {summary['n_benches']} artifacts, {summary['n_gates']} gates "
+          f"({len(summary['gates_failed'])} failed) -> "
+          f"{os.path.join(bench_out_dir(), 'BENCH_SUMMARY.json')}",
+          file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -63,6 +63,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=48)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--stats-every", type=int, default=0,
+                    help="print a periodic stats line every N engine steps "
+                         "(queue depth, active lanes, tokens, live cache "
+                         "bytes, TTFT p50 — read off engine.metrics)")
     args = ap.parse_args()
     if ((args.prefill_slots > 1 or args.prefill_budget is not None)
             and not args.prefill_chunk):
@@ -89,9 +93,32 @@ def main():
                                k=k_cycle[i % len(k_cycle)]))
         return out
 
+    def stats_line(engine, tag):
+        m = engine.metrics
+        ttft = m.get("serve_ttft_steps")
+        p50 = (f"{ttft.quantile(0.5):.0f}" if ttft is not None and ttft.count
+               else "-")
+        print(f"[{tag:>6}] step {engine.step_count:4d} | "
+              f"queue {m.value('serve_queue_depth'):3.0f} "
+              f"lanes {m.value('serve_lanes_active'):2.0f} | "
+              f"tokens {m.value('serve_tokens_generated_total'):5.0f} | "
+              f"live cache {m.value('kv_cache_live_bytes') / 1e6:6.2f} MB | "
+              f"ttft p50 ~{p50} steps")
+
     def bench(engine, reqs, tag):
         t0 = time.perf_counter()
-        comps = engine.run(reqs)
+        if args.stats_every > 0:
+            # step manually so we can read the per-step gauges mid-flight
+            for r in reqs:
+                engine.submit(r)
+            comps0 = len(engine.completions)
+            while not engine.done:
+                engine.step()
+                if engine.step_count % args.stats_every == 0:
+                    stats_line(engine, tag)
+            comps = engine.completions[comps0:]
+        else:
+            comps = engine.run(reqs)
         dt = time.perf_counter() - t0
         n_tok = sum(len(c.tokens) for c in comps)
         rep = engine.cache_report()

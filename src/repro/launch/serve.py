@@ -25,6 +25,7 @@ from repro.configs import SwanConfig, get_config, get_smoke_config
 from repro.launch.io import make_batch
 from repro.launch.mesh import make_mesh, make_serve_mesh
 from repro.models import get_model, swan_applicable
+from repro.obs import EventTrace
 from repro.runtime.serve_engine import Request, ServeEngine
 from repro.runtime.serve_loop import ServeSession, calibrate_swan
 
@@ -89,6 +90,19 @@ def main():
                     help="engine: admission policy — fifo, or srf "
                          "(shortest-remaining-first: bounds TTFT when the "
                          "queue exceeds prefill capacity)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final metrics snapshot here — "
+                         "Prometheus text if the path ends in .prom/.txt, "
+                         "JSON otherwise (repro.obs.metrics)")
+    ap.add_argument("--trace-out", default=None,
+                    help="engine: stream a structured JSONL event trace "
+                         "(admissions, dispatches, first tokens, page "
+                         "map/free, ...) to this path (repro.obs.trace)")
+    ap.add_argument("--profile-steps", type=int, default=None,
+                    help="engine: capture one jax.profiler trace spanning "
+                         "this many engine steps into --profile-dir")
+    ap.add_argument("--profile-dir", default="profile",
+                    help="engine: jax.profiler trace output directory")
     args = ap.parse_args()
     if args.prefill_chunk and not args.engine:
         raise SystemExit("--prefill-chunk requires --engine")
@@ -102,6 +116,8 @@ def main():
         raise SystemExit("--data-parallel/--mesh-shape require --engine")
     if args.pool_grow and not args.paged:
         raise SystemExit("--pool-grow requires --paged")
+    if (args.trace_out or args.profile_steps) and not args.engine:
+        raise SystemExit("--trace-out/--profile-steps require --engine")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     api = get_model(cfg)
@@ -133,7 +149,8 @@ def main():
         return
 
     sess = ServeSession(cfg, params, swan=swan, projections=projections,
-                        max_seq=args.max_seq, batch=args.batch)
+                        max_seq=args.max_seq, batch=args.batch,
+                        metrics=bool(args.metrics_out))
     prompt = make_batch(cfg, args.batch, args.prompt_len, seed=11)
     out = sess.generate(prompt, args.tokens, temperature=args.temperature)
     for i in range(min(args.batch, 2)):
@@ -141,6 +158,21 @@ def main():
     rep = sess.cache_report()
     extra = f" ({rep['saving']:.0%} vs dense)" if "saving" in rep else ""
     print(f"cache [{rep['mode']}]: {rep['bytes'] / 1e6:.2f} MB{extra}")
+    _write_metrics(sess.metrics, args.metrics_out)
+
+
+def _write_metrics(registry, path):
+    """Dump a registry snapshot: Prometheus text for .prom/.txt paths,
+    JSON otherwise.  No-op when path is None."""
+    if not path:
+        return
+    if path.endswith((".prom", ".txt")):
+        body = registry.to_prometheus()
+    else:
+        body = registry.to_json(indent=2)
+    with open(path, "w") as fh:
+        fh.write(body)
+    print(f"metrics -> {path}")
 
 
 def _serve_mesh(args):
@@ -156,6 +188,7 @@ def _serve_mesh(args):
 
 def _run_engine(cfg, params, swan, projections, args):
     mesh = _serve_mesh(args)
+    trace = EventTrace(args.trace_out, keep=False) if args.trace_out else None
     eng = ServeEngine(cfg, params, swan=swan, projections=projections,
                       max_seq=args.max_seq, n_slots=args.batch,
                       paged=args.paged, page_size=args.page_size,
@@ -164,7 +197,9 @@ def _run_engine(cfg, params, swan, projections, args):
                       prefill_slots=args.prefill_slots,
                       prefill_budget=args.prefill_budget,
                       mesh=mesh, pool_grow=args.pool_grow,
-                      admission=args.admission)
+                      admission=args.admission, trace=trace)
+    if args.profile_steps:
+        eng.profile_steps(args.profile_steps, args.profile_dir)
     if mesh is not None:
         print(f"mesh: {dict(mesh.shape)} — {eng.dp} shards x "
               f"{eng.n_local} slots")
@@ -200,6 +235,14 @@ def _run_engine(cfg, params, swan, projections, args):
               f"live now {rep['live_pages']} pages / "
               f"{rep['live_bytes'] / 1e6:.2f} MB "
               f"(slab layout would hold {rep['slab_bytes'] / 1e6:.2f} MB)")
+    ttft = eng.metrics.get("serve_ttft_steps")
+    if ttft is not None and ttft.count:
+        print(f"ttft: p50 ~{ttft.quantile(0.5):.0f} steps, "
+              f"p99 ~{ttft.quantile(0.99):.0f} steps (bucket-resolution)")
+    _write_metrics(eng.metrics, args.metrics_out)
+    if trace is not None:
+        trace.close()
+        print(f"trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

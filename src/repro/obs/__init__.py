@@ -1,0 +1,31 @@
+"""repro.obs — dependency-free serving observability.
+
+Two host-side primitives threaded through the serving stack:
+
+* :mod:`repro.obs.metrics` — a :class:`MetricsRegistry` of counters,
+  gauges and fixed-bucket histograms with Prometheus-text and JSON
+  snapshot exporters.  Instrumentation lives entirely on the host side of
+  every dispatch boundary: no wall-clock reads or metric updates ever
+  happen inside jitted code, and device-side quantities are step-indexed
+  (engine scheduler steps), never timed.
+* :mod:`repro.obs.trace` — a structured JSONL event trace (admission,
+  chunk dispatch, first token, decode dispatch, retirement, page
+  map/free, pool grow/exhaustion, …) keyed by request uid and engine
+  step, plus a wall-clock ``span`` helper for host-timing blocks and a
+  :class:`StepProfiler` hook that brackets N engine steps with
+  ``jax.profiler`` start/stop.
+
+The contract the serve tests pin: metrics/tracing on vs off produces
+IDENTICAL tokens and IDENTICAL dispatch counts — the subsystem observes
+the engine, it never participates in it (tests/test_obs_engine.py).
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               NULL_REGISTRY, NullRegistry,
+                               parse_prometheus)
+from repro.obs.trace import EventTrace, StepProfiler, span
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullRegistry",
+    "NULL_REGISTRY", "parse_prometheus", "EventTrace", "StepProfiler",
+    "span",
+]

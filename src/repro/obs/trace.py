@@ -1,0 +1,142 @@
+"""Structured JSONL event trace for the serving stack, plus host-timing
+spans and a ``jax.profiler`` step hook.
+
+Every event is one JSON object per line::
+
+    {"event": "admit", "step": 12, "uid": "req3", "slot": 1, "shard": 0,
+     "prompt_len": 44, "k": 8, "mode": "chunked"}
+
+``step`` is the ENGINE step at emit time — the deterministic scheduler
+clock every serve metric is indexed by (wall-clock timestamps would make
+traces host-dependent and would tempt instrumentation into jitted code).
+Wall time enters only through the explicit :func:`span` helper, which
+emits a ``span`` event carrying ``wall_ms`` measured strictly on the host
+around a ``with`` block.
+
+The serve-engine event vocabulary (see docs/observability.md for the full
+field schema): ``submit``, ``admit``, ``admission_hold``,
+``chunk_dispatch``, ``prefill_complete``, ``first_token``, ``token``,
+``decode_dispatch``, ``retire``, ``page_map``, ``page_free``,
+``pool_grow``, ``pool_exhausted``, ``span``, ``profile_start``,
+``profile_stop``.
+"""
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+from typing import Any, Callable, Dict, List, Optional
+
+
+class EventTrace:
+    """JSONL event sink.  ``path`` appends one JSON line per event to a
+    file (line-buffered, so a crash loses at most the current line);
+    ``keep=True`` (the default when no path is given) also retains events
+    in-memory on ``.events`` for tests and in-process consumers."""
+
+    def __init__(self, path: Optional[str] = None,
+                 keep: Optional[bool] = None):
+        self.path = path
+        self._fh = open(path, "w", buffering=1) if path else None
+        self.keep = (path is None) if keep is None else keep
+        self.events: List[Dict[str, Any]] = []
+
+    def emit(self, event: str, step: int, **fields: Any) -> None:
+        rec = {"event": event, "step": int(step), **fields}
+        if self.keep:
+            self.events.append(rec)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec, sort_keys=True) + "\n")
+
+    def select(self, event: str, **match: Any) -> List[Dict[str, Any]]:
+        """In-memory events of one type whose fields match ``match``."""
+        return [e for e in self.events if e["event"] == event
+                and all(e.get(k) == v for k, v in match.items())]
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "EventTrace":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @staticmethod
+    def read(path: str) -> List[Dict[str, Any]]:
+        """Parse a JSONL trace file back into event dicts."""
+        with open(path) as fh:
+            return [json.loads(line) for line in fh if line.strip()]
+
+
+@contextmanager
+def span(trace: Optional[EventTrace], name: str, step: int = 0,
+         **fields: Any):
+    """Wall-clock host-timing span: emits a ``span`` event with
+    ``wall_ms`` on exit.  ``trace=None`` is a no-op (call sites stay
+    unconditional), and the clock is read strictly OUTSIDE jitted code —
+    a span around an async dispatch measures host enqueue time, not
+    device time; wrap ``jax.block_until_ready`` explicitly to time
+    compute."""
+    if trace is None:
+        yield
+        return
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        trace.emit("span", step=step, name=name,
+                   wall_ms=(time.perf_counter() - t0) * 1e3, **fields)
+
+
+class StepProfiler:
+    """Bracket N engine steps with ``jax.profiler`` start/stop.
+
+    The engine calls :meth:`step_start` / :meth:`step_end` around every
+    scheduler step; the first ``step_start`` opens the trace, and the
+    N-th ``step_end`` closes it — one profile per instance, covering
+    exactly ``n_steps`` engine steps (admission + chunk dispatch + decode
+    dispatch included).  View with TensorBoard or Perfetto against
+    ``logdir``.  ``start``/``stop`` are injectable for tests."""
+
+    def __init__(self, logdir: str, n_steps: int,
+                 trace: Optional[EventTrace] = None,
+                 start: Optional[Callable[[str], Any]] = None,
+                 stop: Optional[Callable[[], Any]] = None):
+        if n_steps < 1:
+            raise ValueError(f"n_steps={n_steps} must be >= 1")
+        self.logdir = logdir
+        self.n_steps = n_steps
+        self.remaining = n_steps
+        self.active = False
+        self.done = False
+        self._trace = trace
+        self._start = start
+        self._stop = stop
+
+    def step_start(self, step: int = 0) -> None:
+        if self.done or self.active:
+            return
+        if self._start is None:
+            import jax
+            self._start = jax.profiler.start_trace
+            self._stop = self._stop or jax.profiler.stop_trace
+        self._start(self.logdir)
+        self.active = True
+        if self._trace is not None:
+            self._trace.emit("profile_start", step=step,
+                             logdir=self.logdir, n_steps=self.n_steps)
+
+    def step_end(self, step: int = 0) -> None:
+        if not self.active:
+            return
+        self.remaining -= 1
+        if self.remaining > 0:
+            return
+        self._stop()
+        self.active = False
+        self.done = True
+        if self._trace is not None:
+            self._trace.emit("profile_stop", step=step, logdir=self.logdir)

@@ -45,11 +45,13 @@ Invariants (enforced, and property-tested in tests/test_page_pool.py):
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Callable, List, Optional
 
 import numpy as np
 
 from repro.core.paged_cache import TRASH_PAGE  # single source of truth
+from repro.obs.metrics import NULL_REGISTRY, MetricsRegistry
+from repro.obs.trace import EventTrace
 
 
 class PagePoolExhausted(RuntimeError):
@@ -102,6 +104,33 @@ class PagePool:
         # can cache device uploads of table prefixes and re-ship only when
         # the mapping actually changed (most decode steps map nothing)
         self.version = 0
+        # observability sink (bind_obs): page map/free/exhaustion events
+        # and counters are emitted host-side, never from jitted code
+        self._metrics: MetricsRegistry = NULL_REGISTRY
+        self._trace: Optional[EventTrace] = None
+        self._step: Callable[[], int] = lambda: 0
+
+    def bind_obs(self, metrics: Optional[MetricsRegistry] = None,
+                 trace: Optional[EventTrace] = None,
+                 step_fn: Optional[Callable[[], int]] = None) -> None:
+        """Attach an observability sink: ``metrics`` receives
+        ``page_pool_*`` counters, ``trace`` receives ``page_map`` /
+        ``page_free`` / ``pool_exhausted`` events stamped with the engine
+        step from ``step_fn``.  Purely additive — allocator behaviour is
+        identical bound or unbound."""
+        self._metrics = metrics if metrics is not None else NULL_REGISTRY
+        self._trace = trace
+        if step_fn is not None:
+            self._step = step_fn
+
+    def _exhausted(self, msg: str, slot: int) -> PagePoolExhausted:
+        self._metrics.counter(
+            "page_pool_exhausted_total",
+            "allocation attempts that found no eligible free page").inc()
+        if self._trace is not None:
+            self._trace.emit("pool_exhausted", step=self._step(), slot=slot,
+                             shard=self.shard_of(slot), detail=msg)
+        return PagePoolExhausted(msg)
 
     def shard_of(self, slot: int) -> int:
         return slot // self.slots_per_shard
@@ -130,10 +159,10 @@ class PagePool:
         have checked the slot's shard free pages first — reserving past
         them is a bug."""
         if n_pages > self.shard_free_pages(self.shard_of(slot)):
-            raise PagePoolExhausted(
+            raise self._exhausted(
                 f"cannot hold {n_pages} pages for slot {slot}: only "
                 f"{self.shard_free_pages(self.shard_of(slot))} unheld pages "
-                f"free on its shard")
+                f"free on its shard", slot)
         self._held[slot] += n_pages
 
     def _shard_held(self, shard: int) -> int:
@@ -145,21 +174,27 @@ class PagePool:
         if self._held[slot] > 0:
             self._held[slot] -= 1          # consume the slot's own hold
         elif len(self._free[sh]) - self._shard_held(sh) <= 0:
-            raise PagePoolExhausted(
+            raise self._exhausted(
                 f"page pool exhausted: {len(self._free[sh])} free pages on "
                 f"shard {sh} all held for in-flight prefills (slot {slot} "
-                "needs one more)")
+                "needs one more)", slot)
         if not self._free[sh]:
-            raise PagePoolExhausted(
+            raise self._exhausted(
                 f"page pool exhausted: {self.pages_per_shard - 1} usable "
                 f"pages on shard {sh}, all live (slot {slot} needs one "
-                "more)")
+                "more)", slot)
         p = self._free[sh].pop()
         assert self._owner[sh, p] == -1 and p != TRASH_PAGE
         self._owner[sh, p] = slot
-        self.table[slot, self.n_mapped[slot]] = p
+        logical = int(self.n_mapped[slot])
+        self.table[slot, logical] = p
         self.n_mapped[slot] += 1
         self.version += 1
+        self._metrics.counter("page_pool_pages_mapped_total",
+                              "physical pages mapped to slots").inc()
+        if self._trace is not None:
+            self._trace.emit("page_map", step=self._step(), slot=slot,
+                             shard=sh, logical=logical, physical=int(p))
         return p
 
     def free_slot(self, slot: int) -> int:
@@ -177,6 +212,11 @@ class PagePool:
         self._held[slot] = 0
         if n:
             self.version += 1
+            self._metrics.counter("page_pool_pages_freed_total",
+                                  "pages returned on retirement").inc(n)
+        if self._trace is not None:
+            self._trace.emit("page_free", step=self._step(), slot=slot,
+                             shard=sh, n_pages=n)
         return n
 
     def grow(self, new_pages_per_shard: int) -> None:

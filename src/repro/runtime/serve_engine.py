@@ -115,6 +115,38 @@ boundaries never depend on the schedule — so chunked == monolithic,
 batched-concurrent == serial, and sharded == single-device, token for
 token, at any compression level (tests/test_chunked_prefill.py,
 tests/test_concurrent_prefill.py, tests/test_sharded_engine.py).
+
+Observability (``repro.obs``): the engine carries a ``metrics`` registry
+(``metrics=False`` swaps in a no-op registry) and an optional ``trace``
+JSONL event sink.  ALL instrumentation lives on the host side of the
+dispatch boundaries — counters/gauges/histograms are plain Python updates
+between jitted calls, trace events are step-indexed (never wall-clocked),
+and nothing observable is threaded into a traced function — so metrics on
+vs off produces identical tokens, identical dispatch counts and identical
+compiled executables (pinned by tests/test_obs_engine.py).  Wall time
+appears only in explicit ``obs.span`` blocks and the ``profile_steps``
+hook that brackets N engine steps with ``jax.profiler`` start/stop.
+
+Byte accounting — ``cache_report()`` and the ``kv_cache_*`` gauges read
+the SAME ``_cache_bytes()`` source (slab, paged and sharded paths share
+it; per-shard entries always sum exactly to the totals).  The three
+numbers mean:
+
+  * ``reserved_bytes`` — bytes physically allocated on the device for
+    cache state right now: the full slab/dense layout for slab engines
+    (committed at init, so reserved == live there), or every pool page a
+    paged engine has allocated (free pages included — the pool grows but
+    never shrinks) plus the per-slot ring/dense buffers and the shipped
+    table prefix.
+  * ``live_bytes`` — bytes addressable by LIVE tokens right now: pages
+    actually mapped to admitted sequences (paged), or the whole slab
+    (slab engines address every row by construction).  This is the
+    number that tracks generated tokens and drops on retirement.
+  * ``page_table_shipped_bytes`` — bytes of the page-table PREFIX the
+    next decode dispatch ships to the device ([n_slots, bucket] int32,
+    bucketed over DECODING slots' mapped pages).  The host-resident full
+    table is scheduler state, not device memory; only this prefix rides
+    along on dispatches.
 """
 from __future__ import annotations
 
@@ -131,6 +163,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import hybrid_cache as hc
 from repro.core import paged_cache as pc
 from repro.models import get_model, swan_applicable
+from repro.obs.metrics import MetricsRegistry, NULL_REGISTRY
+from repro.obs.trace import EventTrace, StepProfiler
 from repro.runtime.page_pool import PagePool, PagePoolExhausted
 from repro.runtime.sampling import sample_token
 from repro.runtime.serve_loop import serve_cache_report
@@ -139,6 +173,13 @@ from repro.sharding.serve_specs import sanitize_tree, serve_state_pspecs
 from repro.sharding.specs import dp_axes, params_pspecs
 
 Params = Dict[str, Any]
+
+# fixed histogram buckets, in ENGINE STEPS (deterministic scheduler time —
+# wall-clock never enters the registry); powers of two to match the
+# engine's bucketing story
+TTFT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+GAP_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+REQ_STEP_BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 
 
 @dataclass
@@ -186,6 +227,9 @@ class _Slot:
     state: str = "decoding"
     n_prefilled: int = 0
     first_token_step: int = -1
+    # engine step of the most recent sampled token — inter-token step-gap
+    # accounting only (never consulted by the scheduler)
+    last_token_step: int = -1
 
 
 class ServeEngine:
@@ -200,8 +244,18 @@ class ServeEngine:
                  prefill_slots: int = 1,
                  prefill_budget: Optional[int] = None,
                  mesh=None, shard_params: bool = False,
-                 pool_grow: bool = False, admission: str = "fifo"):
+                 pool_grow: bool = False, admission: str = "fifo",
+                 metrics=True, trace: Optional[EventTrace] = None):
         self.cfg = cfg
+        # observability sink: a shared registry may be passed in; False
+        # swaps in the no-op registry (the call sites stay unconditional,
+        # which is what lets tests prove on == off token-for-token)
+        if isinstance(metrics, MetricsRegistry):
+            self.metrics = metrics
+        else:
+            self.metrics = MetricsRegistry() if metrics else NULL_REGISTRY
+        self.trace = trace
+        self._profiler: Optional[StepProfiler] = None
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "encoder-decoder serving needs per-request encoder frames; "
@@ -313,6 +367,8 @@ class ServeEngine:
                                  f"mesh's data-parallel degree {self.dp}")
             self.pool: Optional[PagePool] = PagePool(
                 n_pages, max_pages, n_slots, page_size, n_shards=self.dp)
+            self.pool.bind_obs(self.metrics, trace,
+                               step_fn=lambda: self.step_count)
             self.state = self.api.init_paged_state(
                 cfg, self.swan, n_slots, max_seq, n_pages, page_size)
         else:
@@ -491,6 +547,13 @@ class ServeEngine:
                 raise ValueError(f"request {req.uid}: k={req.k} > allocated "
                                  f"k_max={self.swan.k_max}")
         self.queue.append(req)
+        self.metrics.counter("serve_requests_submitted_total",
+                             "requests accepted into the queue").inc()
+        if self.trace is not None:
+            self.trace.emit("submit", step=self.step_count, uid=req.uid,
+                            prompt_len=len(req.tokens),
+                            max_new_tokens=req.max_new_tokens, k=req.k,
+                            arrival_step=req.arrival_step)
 
     @property
     def n_active(self) -> int:
@@ -585,8 +648,39 @@ class ServeEngine:
             b <<= 1
         return b
 
+    def _record_first_token(self, slot: int, tok: int) -> None:
+        """Latency accounting for a slot's FIRST sampled token (prefill
+        completion) — host-side only, after the slot already recorded
+        ``first_token_step``.  TTFT is step-indexed against the request's
+        arrival, matching what the concurrent-prefill benchmark gates."""
+        s = self.slots[slot]
+        ttft = self.step_count - s.req.arrival_step
+        self.metrics.histogram(
+            "serve_ttft_steps", TTFT_BUCKETS,
+            "engine steps from request arrival to first token").observe(ttft)
+        self.metrics.counter("serve_tokens_generated_total",
+                             "sampled tokens (first tokens included)").inc()
+        s.last_token_step = self.step_count
+        if self.trace is not None:
+            self.trace.emit("prefill_complete", step=self.step_count,
+                            uid=s.req.uid, slot=slot,
+                            prompt_len=len(s.req.tokens))
+            self.trace.emit("first_token", step=self.step_count,
+                            uid=s.req.uid, slot=slot, token=tok,
+                            ttft_steps=ttft)
+            self.trace.emit("token", step=self.step_count, uid=s.req.uid,
+                            slot=slot, index=0, token=tok)
+
     def _admit(self, req: Request, slot: int) -> None:
         k_req = self.swan.k_max if (self.swan and req.k is None) else (req.k or 0)
+        mode = "chunked" if self.prefill_chunk is not None else "monolithic"
+        self.metrics.counter("serve_admissions_total",
+                             "requests admitted into a slot",
+                             mode=mode).inc()
+        if self.trace is not None:
+            self.trace.emit("admit", step=self.step_count, uid=req.uid,
+                            slot=slot, shard=self.shard_of(slot),
+                            prompt_len=len(req.tokens), k=req.k, mode=mode)
         if self.prefill_chunk is not None:
             # chunked admission: just claim the slot — chunks land as the
             # round-robin budget reaches this lane (see _advance_prefills),
@@ -623,6 +717,11 @@ class ServeEngine:
                                        state1, np.int32(k_req),
                                        np.int32(plen))
         self.dispatches["prefill"] += 1
+        self.metrics.counter("serve_dispatches_total",
+                             "jitted dispatches by kind",
+                             kind="prefill").inc()
+        self.metrics.counter("serve_prefill_tokens_total",
+                             "prompt tokens prefilled").inc(plen)
         if self.paged:
             self._ensure_pages(slot, self._sparse_tokens(plen - 1))
             self.state = self._insert_paged(
@@ -638,6 +737,7 @@ class ServeEngine:
         self.slot_pos[slot] = plen
         self.slot_k[slot] = k_req
         self.next_tok[slot] = first
+        self._record_first_token(slot, first)
         self._maybe_retire(slot)
 
     def _maybe_retire(self, slot: int) -> None:
@@ -647,6 +747,23 @@ class ServeEngine:
                 or self.slot_pos[slot] >= self.max_seq)
         if not done:
             return
+        reason = ("eos" if s.req.eos is not None
+                  and s.generated[-1] == s.req.eos
+                  else "max_tokens" if len(s.generated) >= s.req.max_new_tokens
+                  else "max_seq")
+        self.metrics.counter("serve_completions_total",
+                             "retired requests by reason",
+                             reason=reason).inc()
+        self.metrics.histogram(
+            "serve_request_steps", REQ_STEP_BUCKETS,
+            "engine steps from admission to retirement").observe(
+                self.step_count - s.admitted_step)
+        if self.trace is not None:
+            self.trace.emit("retire", step=self.step_count, uid=s.req.uid,
+                            slot=slot, shard=self.shard_of(slot),
+                            n_tokens=len(s.generated), reason=reason,
+                            admitted_step=s.admitted_step,
+                            first_token_step=s.first_token_step)
         self.completions.append(Completion(
             uid=s.req.uid, tokens=list(s.generated),
             prompt_len=len(s.req.tokens), k=s.req.k,
@@ -705,6 +822,14 @@ class ServeEngine:
                     fits = [i for i in free if need <=
                             self.pool.shard_free_pages(self.shard_of(i))]
                 if not fits:
+                    # held admission: counted per engine step spent waiting
+                    self.metrics.counter(
+                        "serve_admission_holds_total",
+                        "steps an arrived request waited on pool pages").inc()
+                    if self.trace is not None:
+                        self.trace.emit("admission_hold",
+                                        step=self.step_count, uid=nxt.uid,
+                                        need_pages=need)
                     return
                 slot = fits[0]
             else:
@@ -762,7 +887,14 @@ class ServeEngine:
         state = dict(self.state)
         state["pool"] = fn(self.state["pool"])
         self.state = state
+        old_per = self.pool.pages_per_shard
         self.pool.grow(new_per)
+        self.metrics.counter("page_pool_grows_total",
+                             "device pool growth events").inc()
+        if self.trace is not None:
+            self.trace.emit("pool_grow", step=self.step_count,
+                            pages_per_shard_old=old_per,
+                            pages_per_shard_new=new_per)
 
     # ------------------------------------------------------------------
     # Engine step
@@ -881,6 +1013,15 @@ class ServeEngine:
             self.params, toks, self.state, slot_v, start_v, k_v, tlen_v,
             page_tab, prefix=prefix)
         self.dispatches["chunk"] += 1
+        self.metrics.counter("serve_dispatches_total",
+                             "jitted dispatches by kind", kind="chunk").inc()
+        self.metrics.counter("serve_prefill_tokens_total",
+                             "prompt tokens prefilled").inc(
+                                 sum(lens[i] for _, i in picks))
+        if self.trace is not None:
+            self.trace.emit("chunk_dispatch", step=self.step_count,
+                            lanes=len(picks), slots=sel_all,
+                            tokens=sum(lens[i] for _, i in picks))
         fins = []
         for lane, i in picks:
             s = self.slots[i]
@@ -898,6 +1039,7 @@ class ServeEngine:
             s.first_token_step = self.step_count
             self.slot_pos[i] = len(s.req.tokens)
             self.next_tok[i] = first
+            self._record_first_token(i, first)
             self._maybe_retire(i)
 
     def _chunk_call(self, *args, prefix: Optional[int]):
@@ -919,6 +1061,8 @@ class ServeEngine:
         """One scheduler iteration: admit → one batched multi-slot prefill
         chunk dispatch → one batched decode dispatch → retire.  Returns the
         number of sequences that finished this step."""
+        if self._profiler is not None:
+            self._profiler.step_start(self.step_count)
         n_done0 = len(self.completions)
         self._admit_pending()
         if self.prefill_chunk is not None:
@@ -945,17 +1089,46 @@ class ServeEngine:
                 self.params, self.next_tok, self.slot_pos, self.slot_k,
                 page_tab, self.state)
             self.dispatches["decode"] += 1
+            self.metrics.counter("serve_dispatches_total",
+                                 "jitted dispatches by kind",
+                                 kind="decode").inc()
+            if self.trace is not None:
+                self.trace.emit("decode_dispatch", step=self.step_count,
+                                lanes=len(active))
             toks = self._lane_tokens(
                 logits, greedy,
                 [(i, self.slots[i].req, len(self.slots[i].generated))
                  for i in active])
+            gap_hist = self.metrics.histogram(
+                "serve_inter_token_steps", GAP_BUCKETS,
+                "engine steps between consecutive tokens of one request")
+            tok_ctr = self.metrics.counter(
+                "serve_tokens_generated_total",
+                "sampled tokens (first tokens included)")
             for i, tok in zip(active, toks):
+                s = self.slots[i]
                 self.slot_pos[i] += 1
-                self.slots[i].generated.append(tok)
+                s.generated.append(tok)
                 self.next_tok[i] = tok
+                gap_hist.observe(self.step_count - s.last_token_step)
+                s.last_token_step = self.step_count
+                tok_ctr.inc()
+                if self.trace is not None:
+                    self.trace.emit("token", step=self.step_count,
+                                    uid=s.req.uid, slot=i,
+                                    index=len(s.generated) - 1, token=tok)
                 self._maybe_retire(i)
         self.step_count += 1
+        self._sample_gauges()
+        if self._profiler is not None:
+            self._profiler.step_end(self.step_count)
         return len(self.completions) - n_done0
+
+    def profile_steps(self, n_steps: int, logdir: str) -> None:
+        """Capture one ``jax.profiler`` trace spanning the next
+        ``n_steps`` engine steps (admission, chunk dispatch and decode
+        dispatch included) into ``logdir``."""
+        self._profiler = StepProfiler(logdir, n_steps, trace=self.trace)
 
     def run(self, requests: Optional[Sequence[Request]] = None,
             max_steps: Optional[int] = None) -> List[Completion]:
@@ -974,32 +1147,28 @@ class ServeEngine:
     # Accounting
     # ------------------------------------------------------------------
 
-    def cache_report(self) -> Dict[str, Any]:
-        """Cache accounting across all slots, on ONE byte basis: the
-        config's actual dtypes (the lockstep ``ServeSession`` keeps the
-        paper's fp16 Eq. 1 view; the engine reports deployable bytes).
+    def _n_attn(self) -> int:
+        return sum(1 for i in range(self.cfg.n_layers)
+                   if self.cfg.layer_kind(i) == "attn")
 
-        Always reports BOTH ``reserved_bytes`` (physically allocated) and
-        ``live_bytes`` (addressable by live tokens right now).  The slab
-        engine commits the worst case up front, so the two coincide there
-        (checked against the actually-resident state arrays); the paged
-        engine is the one whose live bytes track generated tokens.
+    def _cache_bytes(self) -> Dict[str, Any]:
+        """Single source of truth for cache byte accounting.  Both
+        :meth:`cache_report` and the per-step ``kv_cache_*`` /
+        ``shard_kv_cache_*`` gauges read THIS, so the two surfaces can
+        never drift apart (asserted in tests/test_obs_engine.py).
 
-        ``shards`` breaks both down per mesh shard (one entry on a single
-        device); the per-shard entries always sum exactly to the totals —
-        asserted in tests/test_paged_engine.py.
+        Returns ``reserved_bytes`` / ``live_bytes`` totals plus a
+        ``shards`` breakdown whose entries sum exactly to them
+        (``shards`` is ``None`` for recurrent-state families, which have
+        no row-granular layout to split); paged mode adds
+        ``page_table_shipped_bytes``, the shipped table-prefix operand.
         """
-        rep = serve_cache_report(self.cfg, self.swan, self.n_slots,
-                                 self.max_seq)
-        n_attn = sum(1 for i in range(self.cfg.n_layers)
-                     if self.cfg.layer_kind(i) == "attn")
         if self.api.init_paged_state is None:
-            # recurrent-state families: no row-granular layout to page or
-            # audit — keep the analytic Eq. 1 report (no shard breakdown)
-            rep["reserved_bytes"] = rep["live_bytes"] = rep["bytes"]
-            return rep
-        dense_phys = n_attn * hc.dense_cache_bytes(self.cfg, self.n_slots,
-                                                   self.max_seq)
+            # recurrent-state families: analytic Eq. 1 bytes only
+            b = serve_cache_report(self.cfg, self.swan, self.n_slots,
+                                   self.max_seq)["bytes"]
+            return {"reserved_bytes": b, "live_bytes": b, "shards": None}
+        n_attn = self._n_attn()
         if not self.paged:
             # live = bytes resident in the state arrays; reserved = the
             # analytic worst-case layout.  The slab engine commits the
@@ -1008,7 +1177,8 @@ class ServeEngine:
             live = sum(x.nbytes for x in
                        jax.tree_util.tree_leaves(self.state))
             if self.swan is None:
-                reserved = dense_phys
+                reserved = n_attn * hc.dense_cache_bytes(
+                    self.cfg, self.n_slots, self.max_seq)
                 shard_res = n_attn * hc.dense_cache_bytes(
                     self.cfg, self.n_local, self.max_seq)
             else:
@@ -1022,46 +1192,140 @@ class ServeEngine:
                     + self.n_local * self.swan.buffer * 4)
             assert reserved == live, \
                 f"slab reserved {reserved} != resident {live}"
-            rep["reserved_bytes"] = rep["live_bytes"] = reserved
-            rep["bytes"] = reserved
             # the slab layout is linear in the batch axis, so each shard
             # carries exactly its slots' share
-            rep["shards"] = [{"reserved_bytes": shard_res,
-                              "live_bytes": shard_res}
-                             for _ in range(self.dp)]
-            if self.swan is not None:
-                rep["dense_bytes"] = dense_phys
-                rep["saving"] = 1.0 - reserved / dense_phys
-            return rep
+            return {"reserved_bytes": reserved, "live_bytes": reserved,
+                    "shards": [{"reserved_bytes": shard_res,
+                                "live_bytes": shard_res}
+                               for _ in range(self.dp)]}
         page_b = pc.page_bytes(self.cfg, self.swan, self.pool.page_size)
         # device overhead counts the SHIPPED page-table prefix (the actual
         # per-step device operand), not the host-resident numpy table
         bucket = self._decode_bucket()
         overhead = (pc.ring_bytes(self.cfg, self.swan, self.n_slots)
                     + self.n_slots * bucket * 4)
-        rep["mode"] += "+paged"
-        rep["slab_bytes"] = n_attn * hc.cache_bytes(
-            self.cfg, self.swan, self.n_slots, self.max_seq)
-        rep["reserved_bytes"] = self.pool.reserved_bytes(page_b) + overhead
-        rep["live_bytes"] = self.pool.live_bytes(page_b) + overhead
-        rep["bytes"] = rep["live_bytes"]
-        rep["dense_bytes"] = dense_phys
-        rep["saving"] = 1.0 - rep["live_bytes"] / dense_phys
-        rep.update(page_size=self.pool.page_size, n_pages=self.pool.n_pages,
-                   live_pages=self.pool.live_pages)
         # per-shard: each shard owns its block of the pool, its slots'
         # rings, and its rows of the shipped table prefix (ring_bytes and
         # the table are linear in the batch axis, page blocks are equal by
-        # construction — so the entries sum exactly to the totals above)
+        # construction — so the entries sum exactly to the totals)
         sh_over = (pc.ring_bytes(self.cfg, self.swan, self.n_local)
                    + self.n_local * bucket * 4)
-        rep["shards"] = [
-            {"reserved_bytes": self.pool.shard_reserved_bytes(s, page_b)
-             + sh_over,
-             "live_bytes": self.pool.shard_live_bytes(s, page_b) + sh_over,
-             "page_table_shipped_bytes": self.n_local * bucket * 4,
-             "live_pages": self.pool.shard_live_pages(s)}
-            for s in range(self.dp)]
+        return {
+            "reserved_bytes": self.pool.reserved_bytes(page_b) + overhead,
+            "live_bytes": self.pool.live_bytes(page_b) + overhead,
+            "page_table_shipped_bytes": self.n_slots * bucket * 4,
+            "shards": [
+                {"reserved_bytes":
+                 self.pool.shard_reserved_bytes(s, page_b) + sh_over,
+                 "live_bytes":
+                 self.pool.shard_live_bytes(s, page_b) + sh_over,
+                 "page_table_shipped_bytes": self.n_local * bucket * 4,
+                 "live_pages": self.pool.shard_live_pages(s)}
+                for s in range(self.dp)]}
+
+    def _sample_gauges(self) -> None:
+        """End-of-step gauge sampling (host-side).  Skipped entirely
+        under the null registry — gauges are the only instrumentation
+        with per-step cost, so ``metrics=False`` pays zero."""
+        m = self.metrics
+        if not m.enabled:
+            return
+        m.gauge("serve_engine_steps",
+                "scheduler steps taken").set(self.step_count)
+        m.gauge("serve_queue_depth",
+                "arrived requests waiting for a slot").set(self.pending)
+        m.gauge("serve_lanes_active",
+                "slots holding a live request").set(self.n_active)
+        acct = self._cache_bytes()
+        m.gauge("kv_cache_reserved_bytes",
+                "cache bytes physically allocated").set(
+                    acct["reserved_bytes"])
+        m.gauge("kv_cache_live_bytes",
+                "cache bytes addressable by live tokens").set(
+                    acct["live_bytes"])
+        if "page_table_shipped_bytes" in acct:
+            m.gauge("page_table_shipped_bytes",
+                    "bytes of the shipped [n_slots, bucket] int32 "
+                    "page-table prefix").set(
+                        acct["page_table_shipped_bytes"])
+        if self.paged:
+            m.gauge("page_pool_live_pages",
+                    "pages mapped to live sequences").set(
+                        self.pool.live_pages)
+            m.gauge("page_pool_free_pages",
+                    "pages on the free lists").set(self.pool.free_pages)
+        for sh in range(self.dp):
+            lo = sh * self.n_local
+            lanes = self.slots[lo:lo + self.n_local]
+            m.gauge("shard_lanes_active",
+                    "decoding lanes on this shard", shard=sh).set(
+                        sum(1 for s in lanes
+                            if s is not None and s.state == "decoding"))
+            m.gauge("shard_lanes_prefilling",
+                    "prefilling lanes on this shard", shard=sh).set(
+                        sum(1 for s in lanes
+                            if s is not None and s.state == "prefilling"))
+            if acct["shards"] is not None:
+                e = acct["shards"][sh]
+                m.gauge("shard_kv_cache_reserved_bytes",
+                        "cache bytes physically allocated on this shard",
+                        shard=sh).set(e["reserved_bytes"])
+                m.gauge("shard_kv_cache_live_bytes",
+                        "live cache bytes on this shard", shard=sh).set(
+                            e["live_bytes"])
+            if self.paged:
+                m.gauge("shard_page_pool_live_pages",
+                        "live pages on this shard", shard=sh).set(
+                            self.pool.shard_live_pages(sh))
+                m.gauge("shard_page_pool_free_pages",
+                        "free pages on this shard", shard=sh).set(
+                            self.pool.shard_free_pages(sh))
+
+    def cache_report(self) -> Dict[str, Any]:
+        """Cache accounting across all slots, on ONE byte basis: the
+        config's actual dtypes (the lockstep ``ServeSession`` keeps the
+        paper's fp16 Eq. 1 view; the engine reports deployable bytes).
+
+        Always reports BOTH ``reserved_bytes`` (physically allocated) and
+        ``live_bytes`` (addressable by live tokens right now).  The slab
+        engine commits the worst case up front, so the two coincide there
+        (checked against the actually-resident state arrays); the paged
+        engine is the one whose live bytes track generated tokens.
+
+        ``shards`` breaks both down per mesh shard (one entry on a single
+        device); the per-shard entries always sum exactly to the totals —
+        asserted in tests/test_paged_engine.py.  All byte figures come
+        from :meth:`_cache_bytes`, the same source the per-step
+        ``kv_cache_*`` gauges sample.
+        """
+        rep = serve_cache_report(self.cfg, self.swan, self.n_slots,
+                                 self.max_seq)
+        if self.api.init_paged_state is None:
+            # recurrent-state families: no row-granular layout to page or
+            # audit — keep the analytic Eq. 1 report (no shard breakdown)
+            rep["reserved_bytes"] = rep["live_bytes"] = rep["bytes"]
+            return rep
+        acct = self._cache_bytes()
+        rep["reserved_bytes"] = acct["reserved_bytes"]
+        rep["live_bytes"] = acct["live_bytes"]
+        rep["shards"] = acct["shards"]
+        dense_phys = self._n_attn() * hc.dense_cache_bytes(
+            self.cfg, self.n_slots, self.max_seq)
+        if not self.paged:
+            rep["bytes"] = acct["reserved_bytes"]
+            if self.swan is not None:
+                rep["dense_bytes"] = dense_phys
+                rep["saving"] = 1.0 - rep["bytes"] / dense_phys
+            return rep
+        rep["mode"] += "+paged"
+        rep["slab_bytes"] = self._n_attn() * hc.cache_bytes(
+            self.cfg, self.swan, self.n_slots, self.max_seq)
+        rep["bytes"] = acct["live_bytes"]
+        rep["dense_bytes"] = dense_phys
+        rep["saving"] = 1.0 - acct["live_bytes"] / dense_phys
+        rep.update(page_size=self.pool.page_size, n_pages=self.pool.n_pages,
+                   live_pages=self.pool.live_pages)
+        rep["page_table_shipped_bytes"] = acct["page_table_shipped_bytes"]
         return rep
 
 

@@ -17,7 +17,16 @@ import jax.numpy as jnp
 from repro.core import projections as proj_mod
 from repro.core.analytical import model_cache_footprint
 from repro.models import get_model, swan_applicable
+from repro.obs.metrics import MetricsRegistry, NULL_REGISTRY
 from repro.runtime.sampling import sample_token
+
+# wall-clock step-call buckets (ms).  These time the HOST call around the
+# jitted step — async dispatch cost for a warm executable, full trace +
+# compile time on a cache miss — so re-jits show up as outliers in the top
+# buckets.  Device-inclusive timing needs an explicit block_until_ready
+# (see repro.obs.trace.span).
+STEP_MS_BUCKETS = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0,
+                   128.0, 256.0, 512.0, 1024.0)
 
 Params = Dict[str, Any]
 
@@ -48,7 +57,14 @@ class ServeSession:
     """Batched autoregressive generation with optional SWAN cache."""
 
     def __init__(self, cfg, params, swan=None, projections=None,
-                 max_seq: int = 4096, batch: int = 1, jit: bool = True):
+                 max_seq: int = 4096, batch: int = 1, jit: bool = True,
+                 metrics=False):
+        # metrics: True -> fresh MetricsRegistry, an existing registry to
+        # share one across sessions, False (default) -> no-op instruments.
+        if isinstance(metrics, MetricsRegistry):
+            self.metrics = metrics
+        else:
+            self.metrics = MetricsRegistry() if metrics else NULL_REGISTRY
         self.cfg = cfg
         self.api = get_model(cfg)
         self.swan = swan if (swan and swan.enabled and swan_applicable(cfg)) else None
@@ -78,14 +94,28 @@ class ServeSession:
         self.pos = 0
 
     def prefill(self, batch_in: Params) -> jnp.ndarray:
+        t0 = time.perf_counter()
         logits, self.state = self._prefill(self.params, batch_in, self.state)
+        self.metrics.counter("session_prefill_total",
+                             "prefill calls").inc()
+        self.metrics.histogram(
+            "session_prefill_call_ms", STEP_MS_BUCKETS,
+            "host wall-clock of the prefill call (compiles show as "
+            "outliers)").observe((time.perf_counter() - t0) * 1e3)
         self.pos = batch_in["tokens"].shape[1]
         return logits[:, -1]
 
     def decode(self, token: jnp.ndarray) -> jnp.ndarray:
+        t0 = time.perf_counter()
         logits, self.state = self._decode(self.params, token,
                                           jnp.asarray(self.pos, jnp.int32),
                                           self.state)
+        self.metrics.counter("session_decode_total",
+                             "decode step calls").inc()
+        self.metrics.histogram(
+            "session_decode_call_ms", STEP_MS_BUCKETS,
+            "host wall-clock of the decode call (compiles show as "
+            "outliers)").observe((time.perf_counter() - t0) * 1e3)
         self.pos += 1
         return logits
 
@@ -104,8 +134,11 @@ class ServeSession:
         outs = []
         key, sub = jax.random.split(key)
         tok = sample_token(logits, temperature, sub)
+        tok_ctr = self.metrics.counter("session_tokens_generated_total",
+                                       "tokens sampled by generate()")
         for i in range(n_tokens):
             outs.append(tok)
+            tok_ctr.inc(self.batch)
             if i == n_tokens - 1:
                 break
             logits = self.decode(tok)

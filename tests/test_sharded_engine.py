@@ -31,6 +31,7 @@ from repro.configs import SwanConfig, get_smoke_config
 from repro.launch.io import make_batch
 from repro.launch.mesh import make_serve_mesh
 from repro.models import get_model
+from repro.obs import EventTrace
 from repro.runtime.serve_engine import Request, ServeEngine
 from repro.runtime.serve_loop import calibrate_swan
 
@@ -121,10 +122,11 @@ out["monolithic_identical"] = got == want
 
 # pool growth under the mesh: a deliberately tiny per-shard pool grows
 # (2x pages, copy, extend free lists) instead of holding admissions
+tr = EventTrace()
 eng = ServeEngine(cfg, absorbed, mesh=mesh, paged=True, page_size=8,
                   n_pages=16, pool_grow=True, max_seq=64, n_slots=8,
                   swan=swan, projections=pj, prefill_chunk=8,
-                  prefill_slots=2)
+                  prefill_slots=2, trace=tr)
 got, _ = drain(eng)
 want, _ = drain(ServeEngine(cfg, absorbed, max_seq=64, n_slots=8,
                             swan=swan, projections=pj, prefill_chunk=8,
@@ -132,6 +134,18 @@ want, _ = drain(ServeEngine(cfg, absorbed, max_seq=64, n_slots=8,
 eng.pool.check_consistent()
 out["grow_sharded"] = {"identical": got == want,
                        "grew": eng.pool.pages_per_shard > 2}
+# latency accounting survives sharded concurrent prefill: exactly one
+# first_token event per request, agreeing with the Completion fields
+ft = {c.uid: [e for e in tr.select("first_token", uid=c.uid)]
+      for c in eng.completions}
+out["obs_sharded"] = {
+    "first_token_once": all(len(v) == 1 for v in ft.values()),
+    "first_token_steps_match": all(
+        ft[c.uid][0]["step"] == c.first_token_step
+        for c in eng.completions if ft[c.uid]),
+    "ttft_count": eng.metrics.get("serve_ttft_steps").count,
+    "n_completions": len(eng.completions),
+}
 print(json.dumps(out))
 """
 
@@ -179,6 +193,16 @@ def test_sharded_cache_report_shards_sum(shard_run):
 def test_sharded_pool_growth(shard_run):
     rec = shard_run["grow_sharded"]
     assert rec["identical"] and rec["grew"]
+
+
+def test_sharded_first_token_recorded_exactly_once(shard_run):
+    """Completion.first_token_step accounting holds under sharded
+    concurrent chunked prefill: one first_token trace event per request,
+    at the step the completion records, and one TTFT observation each."""
+    rec = shard_run["obs_sharded"]
+    assert rec["first_token_once"]
+    assert rec["first_token_steps_match"]
+    assert rec["ttft_count"] == rec["n_completions"] == 8
 
 
 # ---------------------------------------------------------------------------
