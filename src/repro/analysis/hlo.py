@@ -13,10 +13,18 @@ HLO text, builds the computation call graph (entry → while bodies / fusions
                        approximation of HBM traffic),
   * collective_bytes — received-bytes per device: result sizes of
                        all-reduce / all-gather / reduce-scatter / all-to-all
-                       / collective-permute (incl. async start forms),
-                       broken out per op kind.
+                       / collective-permute, broken out per op kind.  Async
+                       ``-start``/``-done`` pairs count exactly once: the
+                       ``-done`` half is skipped and the ``-start`` half is
+                       charged only its RESULT tuple component (the full
+                       start tuple carries the operand alias too, which
+                       would double the bytes).
 
-All numbers are per-device (post-SPMD-partitioning shapes).
+``transfer_stats`` is the companion host-boundary census: infeed/outfeed,
+host send/recv, device↔host copies (memory space ``S(5)``), and
+``MoveToHost``/``MoveToDevice`` annotation custom-calls — the signal the
+swanlint compiled-dispatch auditor uses to prove a serve executable never
+blocks on the host.  All numbers are per-device (post-SPMD shapes).
 """
 from __future__ import annotations
 
@@ -24,11 +32,19 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
-    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+# Bit widths (not bytes): sub-byte types (s4/u4/f4e2m1fn) pack two
+# elements per byte post-0.4.x, so byte totals must round AFTER the
+# element product — a [4096,128] s4 tensor is 256 KiB, not 512 KiB.
+_DTYPE_BITS = {
+    "pred": 8, "s8": 8, "u8": 8, "s16": 16, "u16": 16, "s32": 32,
+    "u32": 32, "s64": 64, "u64": 64, "f16": 16, "bf16": 16, "f32": 32,
+    "f64": 64, "c64": 64, "c128": 128,
+    "f8e4m3fn": 8, "f8e5m2": 8, "f8e4m3": 8, "f8e3m4": 8,
+    "f8e4m3fnuz": 8, "f8e5m2fnuz": 8, "f8e4m3b11fnuz": 8, "f8e8m0fnu": 8,
+    "s4": 4, "u4": 4, "f4e2m1fn": 4,
 }
+# byte-granular view kept for callers; sub-byte entries round up to 1
+_DTYPE_BYTES = {k: max(1, v // 8) for k, v in _DTYPE_BITS.items()}
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
@@ -44,17 +60,19 @@ _EWISE_1FLOP = {
 
 
 def _shape_info(type_str: str) -> Tuple[int, int]:
-    """-> (total bytes, total elements) for a possibly-tuple HLO type."""
+    """-> (total bytes, total elements) for a possibly-tuple HLO type.
+    Bit-accurate for sub-byte dtypes: the byte count rounds up once per
+    shape component, after the element product."""
     total_b = total_e = 0
     for m in _SHAPE_RE.finditer(type_str):
         dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
+        if dt not in _DTYPE_BITS:
             continue
         n = 1
         if dims:
             for d in dims.split(","):
                 n *= int(d)
-        total_b += n * _DTYPE_BYTES[dt]
+        total_b += (n * _DTYPE_BITS[dt] + 7) // 8
         total_e += n
     return total_b, total_e
 
@@ -222,14 +240,51 @@ class HloCosts:
     collective_bytes: float = 0.0
     per_collective: Dict[str, float] = field(default_factory=dict)
     collective_count: int = 0
+    host_transfers: int = 0
 
     def add(self, other: "HloCosts", mult: float) -> None:
         self.flops += other.flops * mult
         self.hbm_bytes += other.hbm_bytes * mult
         self.collective_bytes += other.collective_bytes * mult
         self.collective_count += int(other.collective_count * mult)
+        self.host_transfers += int(other.host_transfers * mult)
         for k, v in other.per_collective.items():
             self.per_collective[k] = self.per_collective.get(k, 0.0) + v * mult
+
+
+_CC_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+_MOVE_TARGETS = ("MoveToHost", "MoveToDevice")
+
+
+def _is_host_transfer(ins: Instr) -> bool:
+    """True for the initiating half of any device↔host boundary crossing.
+    ``-done`` halves are never passed here (callers skip them), so each
+    transfer counts exactly once."""
+    op = ins.opcode
+    base = op[:-6] if op.endswith("-start") else op
+    if base in ("infeed", "outfeed"):
+        return True
+    if base in ("send", "recv"):
+        return "is_host_transfer=true" in ins.attrs
+    if base == "copy" and "S(5)" in ins.type_str:
+        return True                     # S(5) = host memory space
+    if op == "custom-call":
+        m = _CC_TARGET_RE.search(ins.attrs)
+        return bool(m) and m.group(1) in _MOVE_TARGETS
+    return False
+
+
+def _collective_start_bytes(ins: Instr) -> int:
+    """Received bytes for an async ``*-start``: the start op's type is a
+    tuple ``(operand..., result, [u32 contexts...])`` whose element 0
+    aliases the input — charging the whole tuple double-counts.  Use the
+    second component (the result) when the tuple structure is visible."""
+    if ins.type_str.startswith("("):
+        parts = _split_top(ins.type_str[1:-1].strip())
+        if len(parts) >= 2:
+            b, _ = _shape_info(parts[1])
+            return b
+    return ins.bytes
 
 
 def _comp_costs(comp: Computation, comps: Dict[str, Computation],
@@ -243,11 +298,15 @@ def _comp_costs(comp: Computation, comps: Dict[str, Computation],
         if op.endswith("-done"):
             continue
         base = op.replace("-start", "")
+        if _is_host_transfer(ins):
+            c.host_transfers += 1
         if base in _COLLECTIVES:
-            c.collective_bytes += ins.bytes
+            nbytes = (_collective_start_bytes(ins) if op.endswith("-start")
+                      else ins.bytes)
+            c.collective_bytes += nbytes
             c.collective_count += 1
-            c.per_collective[base] = c.per_collective.get(base, 0.0) + ins.bytes
-            c.hbm_bytes += ins.bytes
+            c.per_collective[base] = c.per_collective.get(base, 0.0) + nbytes
+            c.hbm_bytes += nbytes
             continue
         if op == "while":
             trip = 1
@@ -323,3 +382,79 @@ def analyze_hlo(text: str) -> HloCosts:
     total = HloCosts()
     total.add(_comp_costs(comps[entry], comps, {}), 1.0)
     return total
+
+
+@dataclass
+class TransferStats:
+    """Host-boundary and async-collective census over a whole HLO module
+    (every computation, unweighted by trip counts — a single occurrence
+    anywhere is already a contract violation for the serve auditor)."""
+    infeed: int = 0
+    outfeed: int = 0
+    host_send: int = 0            # send with is_host_transfer=true
+    host_recv: int = 0            # recv with is_host_transfer=true
+    host_copy: int = 0            # copy / copy-start into S(5) host space
+    move_custom_calls: int = 0    # MoveToHost / MoveToDevice annotations
+    collective_starts: int = 0
+    collective_dones: int = 0
+    unmatched_async: int = 0      # -start with no -done in its computation
+
+    @property
+    def host_total(self) -> int:
+        return (self.infeed + self.outfeed + self.host_send +
+                self.host_recv + self.host_copy + self.move_custom_calls)
+
+    def to_json(self) -> Dict[str, int]:
+        return {
+            "infeed": self.infeed, "outfeed": self.outfeed,
+            "host_send": self.host_send, "host_recv": self.host_recv,
+            "host_copy": self.host_copy,
+            "move_custom_calls": self.move_custom_calls,
+            "collective_starts": self.collective_starts,
+            "collective_dones": self.collective_dones,
+            "unmatched_async": self.unmatched_async,
+            "host_total": self.host_total,
+        }
+
+
+def transfer_stats(text: str) -> TransferStats:
+    """Count host transfers and async collective pairs in an HLO module.
+
+    Pairing discipline: the ``-done`` half of any async op is skipped for
+    transfer counting (the ``-start`` half is the single countable event),
+    and collective ``-start``/``-done`` instructions are matched by name
+    within their computation so a dangling start surfaces as
+    ``unmatched_async`` instead of silently inflating the start count."""
+    comps, _ = parse_module(text)
+    ts = TransferStats()
+    for comp in comps.values():
+        open_starts: set = set()
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op.endswith("-start") and op[:-6] in _COLLECTIVES:
+                ts.collective_starts += 1
+                open_starts.add(ins.name)
+                continue
+            if op.endswith("-done"):
+                if op[:-5] in _COLLECTIVES:
+                    ts.collective_dones += 1
+                    if ins.operands:
+                        open_starts.discard(ins.operands[0])
+                continue              # never recount the -done half
+            if not _is_host_transfer(ins):
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if base == "infeed":
+                ts.infeed += 1
+            elif base == "outfeed":
+                ts.outfeed += 1
+            elif base == "send":
+                ts.host_send += 1
+            elif base == "recv":
+                ts.host_recv += 1
+            elif base == "copy":
+                ts.host_copy += 1
+            else:                     # custom-call MoveToHost/MoveToDevice
+                ts.move_custom_calls += 1
+        ts.unmatched_async += len(open_starts)
+    return ts

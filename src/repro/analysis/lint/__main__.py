@@ -1,0 +1,98 @@
+"""swanlint CLI.
+
+    python -m repro.analysis.lint                    # report findings
+    python -m repro.analysis.lint --check            # CI gate: fail on NEW
+    python -m repro.analysis.lint --check --audit-smoke
+    python -m repro.analysis.lint --write-baseline   # accept current state
+
+``--check`` compares active findings against the committed baseline
+(``bench_out/LINT_BASELINE.json``) by line-number-free fingerprint and
+exits non-zero only on findings NOT in the baseline (or on Layer 2 audit
+failures) — so the gate flags exactly what a diff introduced.  Layer 1 is
+dependency-free; ``--audit-smoke`` additionally builds the smoke-config
+engine matrix and audits the compiled dispatches (needs jax).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.lint import (DEFAULT_BASELINE, load_baseline,
+                                 make_report, new_findings, run_lint)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="swanlint: SWAN repo-invariant static analysis")
+    ap.add_argument("--root", default=".", help="repo root to scan")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on findings not in the baseline / on "
+                         "audit failures")
+    ap.add_argument("--audit-smoke", action="store_true",
+                    help="run the Layer 2 compiled-dispatch audit on the "
+                         "smoke-config engine matrix (imports jax)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline JSON (default <root>/{DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings as the new baseline")
+    ap.add_argument("--report", default=None,
+                    help="write the full JSON report to this path")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root)
+    base_path = args.baseline or os.path.join(root, DEFAULT_BASELINE)
+    findings = run_lint(root)
+
+    audit_checks = None
+    if args.audit_smoke:
+        from repro.analysis.lint.audit import run_audit
+        audit_checks = run_audit(smoke=True)
+
+    baseline = load_baseline(base_path)
+    report = make_report(findings, audit_checks, baseline)
+    counts = report["counts"]
+
+    if args.write_baseline:
+        os.makedirs(os.path.dirname(base_path), exist_ok=True)
+        with open(base_path, "w", encoding="utf-8") as fh:
+            json.dump({"tool": "swanlint", "version": report["version"],
+                       "findings": report["findings"]}, fh, indent=1,
+                      sort_keys=True)
+            fh.write("\n")
+        print(f"baseline written: {base_path} "
+              f"({counts['total']} finding(s))")
+
+    if args.report:
+        os.makedirs(os.path.dirname(os.path.abspath(args.report)),
+                    exist_ok=True)
+        with open(args.report, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+
+    for f in findings:
+        mark = "suppressed" if f.suppressed else "ACTIVE"
+        print(f"{f.path}:{f.line}: {f.rule} [{mark}] {f.message}")
+    if audit_checks is not None:
+        for c in audit_checks:
+            print(f"audit {c.check}: {c.status.upper()} {c.detail}")
+    new = new_findings(findings, baseline)
+    n_audit_fail = counts.get("audit_failures", 0)
+    print(f"swanlint: {counts['total']} finding(s), "
+          f"{counts['suppressed']} suppressed, {counts['active']} active, "
+          f"{len(new)} new vs baseline"
+          + (f", {n_audit_fail} audit failure(s)"
+             if audit_checks is not None else ""))
+
+    if args.check and (new or n_audit_fail):
+        for f in new:
+            print(f"NEW: {f.path}:{f.line}: {f.rule} {f.message}",
+                  file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

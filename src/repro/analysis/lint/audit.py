@@ -1,0 +1,256 @@
+"""swanlint Layer 2: compiled-dispatch auditor for the serve hot path.
+
+Layer 1 reads source; this layer reads what XLA actually built.  It
+AOT-lowers the ServeEngine's chunk/decode executables over a
+(bucket × paged × mesh) matrix via ``ServeEngine.lower_decode`` /
+``lower_chunk``, parses the post-optimization HLO through
+``repro.analysis.hlo``, and asserts the ROADMAP perf contract:
+
+  (i)   executable-count bounds — power-of-two bucketing keeps the
+        compile universe at O(log max_seq): ONE decode executable per
+        page bucket (exactly one for slab), one chunk executable per
+        (lane, chunk, prefix) bucket, and an identical workload re-run
+        compiles NOTHING new;
+  (ii)  zero host transfers inside dispatch bodies — no infeed/outfeed,
+        no host sends/recvs, no S(5) copies, no MoveToHost annotations
+        (the designed host fetch points live OUTSIDE the executables);
+  (iii) collective inventory matches the sharding contract — the serve
+        path is lane-local by design (shard_map bodies never
+        communicate), so the per-collective census must be EMPTY;
+  (iv)  Pallas kernel prechecks — grid divisibility and VMEM footprint
+        vs the per-core budget for ``swan_decode`` and ``flash_prefill``
+        at the engine's shapes.
+
+Each assertion is an ``AuditCheck`` with status pass/fail/skip; the CLI
+folds them into the JSON report next to the Layer 1 findings.  The check
+helpers (``transfer_check``/``collective_check``/``count_check``) are
+pure text/number functions so tests can drive them with synthetic HLO
+and synthetic counts — the engine-building matrix is only needed for the
+integration smoke.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.analysis.hlo import analyze_hlo, transfer_stats
+
+__all__ = ["AuditCheck", "transfer_check", "collective_check",
+           "count_check", "kernel_precheck_checks", "audit_lowered",
+           "run_audit"]
+
+
+@dataclass
+class AuditCheck:
+    check: str                  # e.g. "host-transfers/slab/decode"
+    status: str                 # "pass" | "fail" | "skip"
+    detail: str = ""
+
+    def to_json(self) -> Dict[str, str]:
+        return {"check": self.check, "status": self.status,
+                "detail": self.detail}
+
+
+# ---------------------------------------------------------------------------
+# Pure check helpers (unit-testable without building an engine)
+# ---------------------------------------------------------------------------
+
+def transfer_check(hlo_text: str, label: str) -> AuditCheck:
+    """(ii): the executable must not cross the host boundary, and every
+    async start must pair with a done."""
+    ts = transfer_stats(hlo_text)
+    problems = []
+    if ts.host_total:
+        problems.append(f"{ts.host_total} host transfer(s): "
+                        f"{ts.to_json()}")
+    if ts.unmatched_async:
+        problems.append(f"{ts.unmatched_async} unmatched async "
+                        "collective start(s)")
+    if problems:
+        return AuditCheck(f"host-transfers/{label}", "fail",
+                          "; ".join(problems))
+    return AuditCheck(f"host-transfers/{label}", "pass",
+                      "no host boundary crossings")
+
+
+def collective_check(hlo_text: str, label: str,
+                     allowed: tuple = ()) -> AuditCheck:
+    """(iii): collective inventory vs the declared sharding contract
+    (empty for the lane-local serve path)."""
+    costs = analyze_hlo(hlo_text)
+    extra = {k: v for k, v in costs.per_collective.items()
+             if k not in allowed}
+    if extra:
+        return AuditCheck(
+            f"collectives/{label}", "fail",
+            f"undeclared collectives on the serve path: {extra}")
+    return AuditCheck(f"collectives/{label}", "pass",
+                      f"inventory matches contract (allowed={list(allowed)})")
+
+
+def count_check(label: str, observed: int, bound: int,
+                what: str = "executables") -> AuditCheck:
+    """(i): observed compiled-executable count within its O(log) bound."""
+    if observed < 0:
+        return AuditCheck(f"exec-count/{label}", "skip",
+                          "cache size not exposed by this jax version")
+    if observed > bound:
+        return AuditCheck(f"exec-count/{label}", "fail",
+                          f"{observed} {what} > bound {bound}")
+    return AuditCheck(f"exec-count/{label}", "pass",
+                      f"{observed} {what} <= bound {bound}")
+
+
+def _log2_buckets(n: int) -> int:
+    """Number of power-of-two buckets in [1, n]."""
+    return max(1, int(math.log2(max(1, n))) + 1)
+
+
+def kernel_precheck_checks(cfg, swan, max_seq: int) -> List[AuditCheck]:
+    """(iv): static Pallas grid/VMEM validation at the engine's shapes."""
+    from repro.kernels.flash_prefill import flash_prefill as fp
+    from repro.kernels.swan_decode import swan_decode as sd
+    out: List[AuditCheck] = []
+    if swan is not None:
+        r = sd.precheck(B=1, Kv=cfg.n_kv_heads, G=cfg.n_heads // cfg.n_kv_heads,
+                        dh=cfg.d_head, S=max(max_seq, 1), k_max=swan.k_max,
+                        b=swan.buffer, quantized=getattr(swan, "quantize",
+                                                         False))
+        status = "fail" if r["errors"] else "pass"
+        detail = "; ".join(r["errors"] + r["warnings"]) or \
+            f"vmem {r['vmem_bytes']} B"
+        out.append(AuditCheck("pallas-precheck/swan_decode", status, detail))
+    else:
+        out.append(AuditCheck("pallas-precheck/swan_decode", "skip",
+                              "no SWAN config on this engine"))
+    r = fp.precheck(B=1, H=cfg.n_heads, Kv=cfg.n_kv_heads, Sq=max_seq,
+                    Sk=max_seq, dh=cfg.d_head)
+    status = "fail" if r["errors"] else "pass"
+    detail = "; ".join(r["errors"] + r["warnings"]) or \
+        f"vmem {r['vmem_bytes']} B"
+    out.append(AuditCheck("pallas-precheck/flash_prefill", status, detail))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Engine-driven audit
+# ---------------------------------------------------------------------------
+
+def audit_lowered(eng, label: str,
+                  page_buckets: tuple = (None,)) -> List[AuditCheck]:
+    """Checks (ii)+(iii) over the engine's AOT-lowered decode and chunk
+    executables, one decode per requested page bucket."""
+    out: List[AuditCheck] = []
+    for pb in page_buckets:
+        tag = f"{label}/decode" + (f"@pg{pb}" if pb is not None else "")
+        try:
+            txt = eng.lower_decode(page_bucket=pb).compile().as_text()
+        except Exception as e:                         # pragma: no cover
+            out.append(AuditCheck(f"lower/{tag}", "fail", repr(e)))
+            continue
+        out.append(transfer_check(txt, tag))
+        out.append(collective_check(txt, tag))
+    tag = f"{label}/chunk"
+    try:
+        txt = eng.lower_chunk().compile().as_text()
+    except Exception as e:                             # pragma: no cover
+        out.append(AuditCheck(f"lower/{tag}", "fail", repr(e)))
+        return out
+    out.append(transfer_check(txt, tag))
+    out.append(collective_check(txt, tag))
+    return out
+
+
+def _drive(eng, prompts, max_new: int = 3) -> None:
+    from repro.runtime.serve_engine import Request
+    for u, p in enumerate(prompts):
+        eng.submit(Request(uid=f"a{u}", tokens=p, max_new_tokens=max_new))
+    while not eng.done:
+        eng.step()
+
+
+def _exec_count_checks(make_engine, label: str, prompts,
+                       paged: bool) -> List[AuditCheck]:
+    """(i): drive a mixed-length workload, bound the compile universe,
+    then re-run the identical workload and require zero new compiles."""
+    out: List[AuditCheck] = []
+    eng = make_engine()
+    _drive(eng, prompts)
+    dec, pre = eng.decode_cache_size, eng.prefill_cache_size
+    if paged:
+        dec_bound = _log2_buckets(eng.pool.pages_per_seq)
+    else:
+        dec_bound = 1
+    # chunk executables: one per (lane-width, chunk-len, prefix/table
+    # bucket) triple, each axis O(log) by power-of-two bucketing
+    chunk_bound = (_log2_buckets(eng.n_slots)
+                   * _log2_buckets(eng.prefill_chunk or 1)
+                   * _log2_buckets(eng.pool.pages_per_seq if paged
+                                   else eng.max_seq))
+    out.append(count_check(f"{label}/decode", dec, dec_bound,
+                           "decode executables"))
+    out.append(count_check(f"{label}/prefill+chunk", pre, 1 + chunk_bound,
+                           "prefill executables"))
+    _drive(eng, prompts)                       # identical workload again
+    dec2, pre2 = eng.decode_cache_size, eng.prefill_cache_size
+    if (dec2, pre2) != (dec, pre):
+        out.append(AuditCheck(
+            f"exec-count/{label}/steady-state", "fail",
+            f"identical workload recompiled: decode {dec}->{dec2}, "
+            f"prefill {pre}->{pre2}"))
+    else:
+        out.append(AuditCheck(f"exec-count/{label}/steady-state", "pass",
+                              "no new executables on identical re-run"))
+    return out
+
+
+def run_audit(smoke: bool = True) -> List[AuditCheck]:
+    """Build the (bucket × paged × mesh) engine matrix on the smoke config
+    and run every check.  Matrix: slab dp=1, paged dp=1, and paged dp=2
+    when >= 2 devices are visible (CI forces 2 host devices)."""
+    import jax
+    import numpy as np
+    from repro.configs import SwanConfig, get_smoke_config
+    from repro.launch.io import make_batch
+    from repro.models import get_model
+    from repro.runtime.serve_engine import ServeEngine
+    from repro.runtime.serve_loop import calibrate_swan
+
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32",
+                                                param_dtype="float32")
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    pj = calibrate_swan(api, cfg, params, make_batch(cfg, 2, 24, seed=3))
+    swan = SwanConfig(k_max=cfg.d_head, buffer=4, mode="topk")
+    max_seq = 64
+
+    def prompts():
+        rng = np.random.RandomState(0)
+        return [rng.randint(0, cfg.vocab_size, size=n).tolist()
+                for n in (5, 11, 19)]
+
+    checks: List[AuditCheck] = kernel_precheck_checks(cfg, swan, max_seq)
+
+    variants = [("slab", dict(paged=False)), ("paged", dict(paged=True,
+                                                            page_size=16))]
+    for label, kw in variants:
+        def make_engine(kw=kw):
+            return ServeEngine(cfg, params, swan=swan, projections=pj,
+                               n_slots=2, max_seq=max_seq, prefill_chunk=8,
+                               prefill_slots=2, **kw)
+        checks += _exec_count_checks(make_engine, label, prompts(),
+                                     paged=kw.get("paged", False))
+        checks += audit_lowered(make_engine(), label)
+
+    if jax.device_count() >= 2:
+        mesh = jax.make_mesh((2,), ("data",))
+        eng = ServeEngine(cfg, params, swan=swan, projections=pj,
+                          n_slots=2, max_seq=max_seq, prefill_chunk=8,
+                          prefill_slots=2, paged=True, page_size=16,
+                          mesh=mesh)
+        checks += audit_lowered(eng, "paged-dp2")
+    else:
+        checks.append(AuditCheck("lower/paged-dp2", "skip",
+                                 f"{jax.device_count()} device(s) visible"))
+    return checks

@@ -24,6 +24,47 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+LANE_WIDTH = 128
+SUBLANE_F32 = 8
+
+
+def vmem_footprint(*, bq: int, bk: int, dh: int) -> int:
+    """Per-grid-step VMEM working set in bytes (double-buffered q/k/v
+    tiles + online-softmax scratch + output tile), matching the BlockSpecs
+    in ``flash_attention_pallas``."""
+    inputs = 2 * (bq * dh + 2 * bk * dh) * 4          # q + k/v, double-buf
+    scratch = 2 * bq * 4 + bq * dh * 4                # m, l, acc
+    out = bq * dh * 4
+    return inputs + scratch + out
+
+
+def precheck(*, B: int, H: int, Kv: int, Sq: int, Sk: int, dh: int,
+             block_q: int = 256, block_k: int = 256,
+             vmem_budget: int = VMEM_BYTES_PER_CORE) -> dict:
+    """Static grid/VMEM validation for ``flash_attention_pallas`` —
+    same contract as ``repro.kernels.swan_decode.precheck``."""
+    errors, warnings = [], []
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    if bq <= 0 or Sq % bq:
+        errors.append(f"Sq={Sq} not divisible by query block bq={bq}")
+    if bk <= 0 or Sk % bk:
+        errors.append(f"Sk={Sk} not divisible by key block bk={bk}")
+    if Kv <= 0 or H % Kv:
+        errors.append(f"H={H} not divisible by Kv={Kv}: GQA head-group "
+                      "index h // G would misalign KV tiles")
+    vmem = vmem_footprint(bq=bq, bk=bk, dh=dh)
+    if vmem > vmem_budget:
+        errors.append(f"VMEM working set {vmem} B exceeds budget "
+                      f"{vmem_budget} B (bq={bq}, bk={bk}, dh={dh})")
+    if dh % LANE_WIDTH:
+        warnings.append(f"dh={dh} not a multiple of lane width "
+                        f"{LANE_WIDTH}: tiles pad to 128 lanes")
+    if bq % SUBLANE_F32 or bk % SUBLANE_F32:
+        warnings.append(f"bq={bq}/bk={bk} not multiples of f32 sublane "
+                        f"{SUBLANE_F32}: tiles pad sublanes")
+    return {"errors": errors, "warnings": warnings, "vmem_bytes": vmem}
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
                   *, bq: int, bk: int, dh: int, n_kblocks: int, causal: bool):

@@ -33,6 +33,61 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# ~16 MB/core on v4/v5e; the precheck budgets against this by default
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+LANE_WIDTH = 128        # last-dim tiling unit
+SUBLANE_F32 = 8         # second-to-last-dim tiling unit for f32
+
+
+def vmem_footprint(*, bs: int, dh: int, k_max: int, G: int, b: int,
+                   quantized: bool = False) -> int:
+    """Per-grid-step VMEM working set in bytes, double-buffered inputs.
+
+    Mirrors the BlockSpecs in ``swan_decode_pallas`` plus the in-register
+    expansion buffers and scratch accumulators — the static half of the
+    docstring's budget paragraph, so the swanlint auditor (and tests) can
+    reject a (block_s, k, dh, buffer) configuration before lowering."""
+    vals_b = 4 if not quantized else 1          # f32 vals vs int8+scale
+    tile = 2 * (bs * k_max * vals_b + bs * k_max)     # k/v packed vals+idx
+    tile += 2 * bs * 4                                # k/v scales
+    tile += G * dh * 4                                # q tile
+    tile += 2 * b * dh * 4 + b * 4                    # ring buffer k/v + pos
+    inputs = 2 * tile                                 # double buffering
+    expand = 2 * bs * dh * 4                          # k_dense + v_dense
+    scratch = 2 * G * 4 + G * dh * 4                  # m, l, acc
+    out = G * dh * 4
+    return inputs + expand + scratch + out
+
+
+def precheck(*, B: int, Kv: int, G: int, dh: int, S: int, k_max: int,
+             b: int, block_s: int = 256, quantized: bool = False,
+             vmem_budget: int = VMEM_BYTES_PER_CORE) -> dict:
+    """Static grid/VMEM validation for ``swan_decode_pallas``.
+
+    Returns ``{"errors": [...], "warnings": [...], "vmem_bytes": int}``;
+    errors are conditions under which the kernel asserts or cannot fit,
+    warnings are perf hazards (sub-lane-width dims pad and waste MXU/VPU
+    lanes — fine for smoke configs, wrong for production shapes)."""
+    errors, warnings = [], []
+    bs = min(block_s, S)
+    if bs <= 0 or S % bs:
+        errors.append(f"sparse length S={S} not divisible by block bs={bs}")
+    if k_max > dh:
+        errors.append(f"k_max={k_max} exceeds dh={dh}: one-hot expansion "
+                      "would scatter out of range")
+    vmem = vmem_footprint(bs=bs, dh=dh, k_max=k_max, G=G, b=b,
+                          quantized=quantized)
+    if vmem > vmem_budget:
+        errors.append(f"VMEM working set {vmem} B exceeds budget "
+                      f"{vmem_budget} B (bs={bs}, k={k_max}, dh={dh}, b={b})")
+    if dh % LANE_WIDTH:
+        warnings.append(f"dh={dh} not a multiple of lane width "
+                        f"{LANE_WIDTH}: tiles pad to 128 lanes")
+    if bs % SUBLANE_F32:
+        warnings.append(f"bs={bs} not a multiple of f32 sublane "
+                        f"{SUBLANE_F32}: tiles pad sublanes")
+    return {"errors": errors, "warnings": warnings, "vmem_bytes": vmem}
+
 
 def _expand_packed(vals, idx, bs: int, dh: int, k_max: int):
     """One-hot in-register expansion: [BS,k] (+idx) -> dense [BS,dh] f32."""

@@ -28,6 +28,13 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 _LabelKey = Tuple[Tuple[str, str], ...]
 
+# The ONLY sanctioned ways to mint an instrument.  swanlint's obs rule
+# (SWAN105, repro.analysis.lint) statically rejects ad-hoc module-level
+# metric containers outside repro.obs — new counters/gauges/histograms
+# must go through these idempotent getters so they land in the
+# Prometheus/JSON exposition and the schema-drift guard.
+REGISTRY_GETTERS = ("counter", "gauge", "histogram")
+
 
 def _label_key(labels: Dict[str, Any]) -> _LabelKey:
     return tuple(sorted((k, str(v)) for k, v in labels.items()))

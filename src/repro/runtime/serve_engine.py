@@ -1042,11 +1042,13 @@ class ServeEngine:
             self._record_first_token(i, first)
             self._maybe_retire(i)
 
-    def _chunk_call(self, *args, prefix: Optional[int]):
-        """Dispatch the batched chunk executable for a STATIC slab/dense
-        read-prefix bucket (one jit per bucket — the moral equivalent of
-        static_argnums, kept explicit so the mesh path can close the
-        prefix into its shard_map body)."""
+    def _chunk_jit(self, prefix: Optional[int]):
+        """The (possibly jitted) batched chunk executable family for a
+        STATIC slab/dense read-prefix bucket (one jit per bucket — the
+        moral equivalent of static_argnums, kept explicit so the mesh path
+        can close the prefix into its shard_map body).  Exposed separately
+        from ``_chunk_call`` so ``lower_chunk`` can AOT-lower the same
+        cached callable the scheduler dispatches through."""
         fn = self._chunk_fns.get(prefix)
         if fn is None:
             fn = self._make_chunk_fn(prefix)
@@ -1055,7 +1057,61 @@ class ServeEngine:
             if self._jit:
                 fn = jax.jit(fn, donate_argnums=(2,))
             self._chunk_fns[prefix] = fn
-        return fn(*args)
+        return fn
+
+    def _chunk_call(self, *args, prefix: Optional[int]):
+        return self._chunk_jit(prefix)(*args)
+
+    # ------------------------------------------------------------------
+    # AOT lowering (compiled-dispatch audit + warmup)
+    # ------------------------------------------------------------------
+
+    def lower_decode(self, page_bucket: Optional[int] = None):
+        """AOT-lower the decode dispatch for the shapes ``step()`` would
+        use right now, WITHOUT executing it: returns ``jax.stages.Lowered``
+        whose ``.compile().as_text()`` is the post-optimization HLO the
+        swanlint auditor scans for host transfers and stray collectives.
+        ``page_bucket`` overrides the shipped page-table width (paged
+        engines; ignored for slab).  Lowers the SAME jitted callable the
+        scheduler dispatches through, so the audited artifact is the
+        production executable, not a re-derivation."""
+        if not self._jit:
+            raise RuntimeError("lower_decode requires jit=True")
+        i32v = jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)
+        if self.paged:
+            width = page_bucket if page_bucket is not None \
+                else self._decode_bucket()
+            tab = jax.ShapeDtypeStruct((self.n_slots, width), jnp.int32)
+        else:
+            tab = jax.ShapeDtypeStruct((), jnp.int32)
+        return self._decode.lower(self.params, i32v, i32v, i32v, tab,
+                                  self.state)
+
+    def lower_chunk(self, n_lanes: Optional[int] = None,
+                    chunk: Optional[int] = None,
+                    page_bucket: Optional[int] = None,
+                    prefix: Optional[int] = None):
+        """AOT-lower one chunked-prefill dispatch shape (defaults: one
+        lane per shard, a full ``prefill_chunk`` of tokens, the smallest
+        covering slab prefix / page bucket) — same contract as
+        ``lower_decode``."""
+        if not self._jit:
+            raise RuntimeError("lower_chunk requires jit=True")
+        C = chunk if chunk is not None else (self.prefill_chunk or 8)
+        lanes = n_lanes if n_lanes is not None else self.dp
+        i32v = jax.ShapeDtypeStruct((lanes,), jnp.int32)
+        toks = jax.ShapeDtypeStruct((lanes, C), jnp.int32)
+        if self.paged:
+            width = page_bucket if page_bucket is not None else 1
+            tab = jax.ShapeDtypeStruct((self.n_slots, width), jnp.int32)
+            prefix = None               # the page_tab prefix bounds reads
+        else:
+            tab = jax.ShapeDtypeStruct((), jnp.int32)
+            if prefix is None:
+                prefix = self._bucket_len(C)
+        fn = self._chunk_jit(prefix)
+        return fn.lower(self.params, toks, self.state, i32v, i32v, i32v,
+                        i32v, tab)
 
     def step(self) -> int:
         """One scheduler iteration: admit → one batched multi-slot prefill

@@ -121,10 +121,16 @@ class Trainer:
             batch = jax.tree_util.tree_map(jnp.asarray, batch_np)
             t0 = time.monotonic()
             params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            # swanlint: disable=SWAN102 -- train loop, not the serve path:
+            # the watchdog needs device-inclusive step time, so this sync
+            # IS the measurement (serve engines must never do this per step)
             jax.block_until_ready(metrics["loss"])
             self.watchdog.record(step, time.monotonic() - t0)
             if step % self.cfg.log_every == 0 or step == total - 1:
                 self.metrics_log.append(
+                    # swanlint: disable=SWAN102 -- log-cadence host reads of
+                    # already-synced scalars (block_until_ready above), every
+                    # log_every steps rather than per step
                     {"step": step, "loss": float(metrics["loss"]),
                      "grad_norm": float(metrics["grad_norm"]),
                      "lr": float(metrics["lr"])})

@@ -24,6 +24,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.sharding.specs import dp_axes
 
+# Every serve-state leaf name that has an explicit PartitionSpec rule in
+# ``_leaf_spec_raw`` below.  Declarative on purpose: swanlint's
+# spec-completeness rule (SWAN104, ``repro.analysis.lint``) reads this
+# tuple STATICALLY and cross-checks it against the leaf keys constructed
+# by the cache/state initialisers (``core.hybrid_cache``,
+# ``core.paged_cache``, ``models.attention`` …), so a new serve-state
+# leaf cannot land without a sharding decision here — the static twin of
+# the ``unspecced_serve_leaves`` runtime check.
+KNOWN_LEAF_NAMES = ("vals", "idx", "scale", "k", "v", "buf_k", "buf_v",
+                    "buf_pos", "h", "conv", "S", "x_tm", "x_cm")
+
 
 def _sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
     """Drop sharding on axes the mesh doesn't carry or that don't divide
@@ -55,6 +66,8 @@ def _leaf_spec_raw(name: str, ndim: int) -> Optional[P]:
     ``unspecced_serve_leaves``)."""
     dp = ("pod", "data")
     leaf = name.split("/")[-1]
+    if leaf not in KNOWN_LEAF_NAMES:     # keep the declarative tuple honest
+        return None
     # stacked caches have a leading layer/group axis (never sharded)
     if "pool/" in name:
         # paged sparse pool [L,n_pages,Kv,ps,k]: the page axis plays the

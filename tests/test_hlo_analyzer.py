@@ -1,10 +1,12 @@
 """Loop-aware HLO analyzer: trip-count multiplication, collective parsing,
-dot-flop counting from shapes."""
+dot-flop counting from shapes, host-transfer census, async collective
+pairing, sub-byte dtype sizing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis.hlo import analyze_hlo, parse_instr_line, parse_module
+from repro.analysis.hlo import (_shape_info, analyze_hlo, parse_instr_line,
+                                parse_module, transfer_stats)
 
 
 def test_dot_flops_from_shapes():
@@ -53,3 +55,121 @@ def test_parse_module_roundtrip():
     comps, entry = parse_module(jax.jit(f).lower(x).compile().as_text())
     assert entry is not None
     assert comps[entry].instrs
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte / f8 dtype sizing
+# ---------------------------------------------------------------------------
+
+def test_sub_byte_dtypes_sized_in_bits():
+    # s4 packs two elements per byte: round AFTER the element product
+    assert _shape_info("s4[4096,128]") == (4096 * 128 // 2, 4096 * 128)
+    assert _shape_info("u4[3]") == (2, 3)            # 12 bits -> 2 bytes
+    assert _shape_info("f8e4m3fn[16]") == (16, 16)
+    assert _shape_info("f8e5m2fnuz[8,8]") == (64, 64)
+
+
+def test_sub_byte_shapes_through_instr_parser():
+    ins = parse_instr_line(
+        "  %q = s4[64,128]{1,0} convert(%p0)")
+    assert ins is not None and ins.bytes == 64 * 128 // 2
+
+
+def test_sub_byte_end_to_end_via_jit():
+    def f(x):
+        return (x.astype(jnp.int4).astype(jnp.int8)).sum()
+    x = jax.ShapeDtypeStruct((128, 128), jnp.int8)
+    txt = jax.jit(f).lower(x).compile().as_text()
+    c = analyze_hlo(txt)
+    assert c.flops >= 0 and c.hbm_bytes > 0          # parses end-to-end
+
+
+# ---------------------------------------------------------------------------
+# Async collectives: -start/-done pairs count exactly once
+# ---------------------------------------------------------------------------
+
+_ASYNC_HLO = """\
+HloModule async
+
+ENTRY %main (p0: f32[8,128]) -> f32[8,128] {
+  %p0 = f32[8,128] parameter(0)
+  %ar-start = (f32[8,128], f32[8,128]) all-reduce-start(%p0), replica_groups={}
+  %ar-done = f32[8,128] all-reduce-done(%ar-start)
+  ROOT %out = f32[8,128] add(%ar-done, %p0)
+}
+"""
+
+
+def test_async_collective_counted_once_with_result_bytes():
+    c = analyze_hlo(_ASYNC_HLO)
+    assert c.collective_count == 1
+    # result tuple component only — NOT the (operand, result) pair
+    assert c.collective_bytes == 8 * 128 * 4
+    assert c.per_collective == {"all-reduce": 8 * 128 * 4}
+
+
+def test_transfer_stats_pairs_and_unmatched():
+    ts = transfer_stats(_ASYNC_HLO)
+    assert ts.collective_starts == 1 and ts.collective_dones == 1
+    assert ts.unmatched_async == 0 and ts.host_total == 0
+    dangling = _ASYNC_HLO.replace(
+        "  %ar-done = f32[8,128] all-reduce-done(%ar-start)\n", "").replace(
+        "add(%ar-done, %p0)", "add(%p0, %p0)")
+    ts2 = transfer_stats(dangling)
+    assert ts2.collective_starts == 1 and ts2.collective_dones == 0
+    assert ts2.unmatched_async == 1
+
+
+# ---------------------------------------------------------------------------
+# Host-transfer census
+# ---------------------------------------------------------------------------
+
+def test_transfer_stats_counts_each_boundary_kind_once():
+    hlo = """\
+HloModule transfers
+
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %p0 = f32[4] parameter(0)
+  %tok = token[] after-all()
+  %inf = ((f32[4]), token[]) infeed(%tok)
+  %outf = token[] outfeed(%p0, %tok)
+  %snd = (f32[4], u32[], token[]) send(%p0, %tok), channel_id=1, is_host_transfer=true
+  %snd-done = token[] send-done(%snd), channel_id=1, is_host_transfer=true
+  %rcv = (f32[4], u32[], token[]) recv(%tok), channel_id=2, is_host_transfer=true
+  %rcv-done = (f32[4], token[]) recv-done(%rcv), channel_id=2, is_host_transfer=true
+  %hcp = f32[4]{0:S(5)} copy(%p0)
+  %mth = f32[4] custom-call(%p0), custom_call_target="MoveToHost"
+  ROOT %out = f32[4] add(%p0, %p0)
+}
+"""
+    ts = transfer_stats(hlo)
+    assert ts.infeed == 1 and ts.outfeed == 1
+    assert ts.host_send == 1 and ts.host_recv == 1     # -done not recounted
+    assert ts.host_copy == 1 and ts.move_custom_calls == 1
+    assert ts.host_total == 6
+    c = analyze_hlo(hlo)
+    assert c.host_transfers == 6
+
+
+def test_transfer_stats_ignores_device_traffic():
+    hlo = """\
+HloModule clean
+
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %p0 = f32[4] parameter(0)
+  %cp = f32[4]{0} copy(%p0)
+  %tok = token[] after-all()
+  %snd = (f32[4], u32[], token[]) send(%cp, %tok), channel_id=3
+  ROOT %out = f32[4] add(%cp, %p0)
+}
+"""
+    ts = transfer_stats(hlo)
+    assert ts.host_total == 0          # device copy + device send don't count
+
+
+def test_jitted_fn_has_no_host_transfers():
+    def f(x):
+        return jnp.tanh(x) @ x
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ts = transfer_stats(jax.jit(f).lower(x).compile().as_text())
+    assert ts.host_total == 0 and ts.unmatched_async == 0

@@ -260,3 +260,42 @@ def test_cache_report(setup):
     rep = eng.cache_report()
     assert rep["bytes"] < rep["dense_bytes"]
     assert rep["saving"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering hooks (swanlint compiled-dispatch audit)
+# ---------------------------------------------------------------------------
+
+def test_lower_decode_and_chunk_audit_clean(setup):
+    """The production decode/chunk executables, AOT-lowered via the same
+    jitted callables step() dispatches through, must contain zero host
+    transfers and zero collectives (the serve path is lane-local)."""
+    from repro.analysis.hlo import analyze_hlo, transfer_stats
+    cfg, api, params, absorbed, pj = setup
+    eng = ServeEngine(cfg, params, swan=_swan(cfg), projections=pj,
+                      max_seq=64, n_slots=2, prefill_chunk=8,
+                      prefill_slots=2)
+    for low in (eng.lower_decode(), eng.lower_chunk()):
+        txt = low.compile().as_text()
+        ts = transfer_stats(txt)
+        assert ts.host_total == 0 and ts.unmatched_async == 0
+        assert analyze_hlo(txt).per_collective == {}
+
+
+def test_lower_decode_paged_bucket_shapes(setup):
+    cfg, api, params, absorbed, pj = setup
+    eng = ServeEngine(cfg, params, swan=_swan(cfg), projections=pj,
+                      max_seq=64, n_slots=2, paged=True, page_size=16,
+                      prefill_chunk=8)
+    from repro.analysis.hlo import transfer_stats
+    for pb in (1, 2):
+        txt = eng.lower_decode(page_bucket=pb).compile().as_text()
+        assert transfer_stats(txt).host_total == 0
+
+
+def test_lower_requires_jit(setup):
+    cfg, api, params, absorbed, pj = setup
+    eng = ServeEngine(cfg, params, swan=_swan(cfg), projections=pj,
+                      max_seq=64, n_slots=1, jit=False)
+    with pytest.raises(RuntimeError, match="jit"):
+        eng.lower_decode()
