@@ -55,6 +55,11 @@ def main():
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N to simulate a mesh on CPU; --slots must "
                          "divide)")
+    ap.add_argument("--use-pallas", action="store_true", default=None,
+                    help="force the Pallas kernel-backed decode/chunk "
+                         "attention read on the SWAN engines (default: "
+                         "auto — compiled kernels on TPU, pure-JAX "
+                         "elsewhere; forcing on CPU uses the interpreter)")
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--buffer", type=int, default=16)
     ap.add_argument("--quantize", action="store_true")
@@ -144,7 +149,8 @@ def main():
                           max_seq=args.max_seq, n_slots=args.slots,
                           prefill_chunk=args.prefill_chunk,
                           prefill_slots=args.prefill_slots,
-                          prefill_budget=args.prefill_budget, mesh=mesh)
+                          prefill_budget=args.prefill_budget, mesh=mesh,
+                          use_pallas=args.use_pallas)
         # per-request runtime-tunable compression: mix full and half k
         bench(eng, requests([k_max, max(k_max // 2, 1)]), "swan")
         print(f"        decode executables for the mixed-k batch: "
@@ -156,7 +162,8 @@ def main():
                              page_size=args.page_size,
                              prefill_chunk=args.prefill_chunk,
                              prefill_slots=args.prefill_slots,
-                             prefill_budget=args.prefill_budget, mesh=mesh)
+                             prefill_budget=args.prefill_budget, mesh=mesh,
+                             use_pallas=args.use_pallas)
             bench(pg, requests([k_max, max(k_max // 2, 1)]), "paged")
             rep = pg.cache_report()
             print(f"        paged: slab layout would reserve "

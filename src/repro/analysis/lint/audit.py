@@ -31,14 +31,15 @@ integration smoke.
 from __future__ import annotations
 
 import math
+import re
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.analysis.hlo import analyze_hlo, transfer_stats
 
 __all__ = ["AuditCheck", "transfer_check", "collective_check",
-           "count_check", "kernel_precheck_checks", "audit_lowered",
-           "run_audit"]
+           "count_check", "logical_view_check", "kernel_precheck_checks",
+           "audit_lowered", "run_audit"]
 
 
 @dataclass
@@ -107,20 +108,91 @@ def _log2_buckets(n: int) -> int:
     return max(1, int(math.log2(max(1, n))) + 1)
 
 
-def kernel_precheck_checks(cfg, swan, max_seq: int) -> List[AuditCheck]:
-    """(iv): static Pallas grid/VMEM validation at the engine's shapes."""
+_GATHER_RE = re.compile(
+    r"=\s*[a-z0-9]+\[([0-9,]*)\][^=]*\bgather\(")
+
+
+def logical_view_check(hlo_text: str, label: str, view_elems: int,
+                       expect_materialized: bool = False) -> AuditCheck:
+    """Paged decode HLO inspection: the Pallas paged kernel gathers pool
+    pages INSIDE the kernel (page-table scalar prefetch -> VMEM tiles), so
+    its executable must contain no gather materialising the
+    ``paged_logical_view`` — i.e. no gather whose result holds at least
+    ``view_elems`` elements (= B x Kv x bucket*page_size x k_max, the
+    view's vals leaf).  ``expect_materialized=True`` inverts the check for
+    the pure-JAX reference executable, proving the detector actually sees
+    the logical-view gather it is meant to rule out."""
+    big = []
+    for m in _GATHER_RE.finditer(hlo_text):
+        dims = m.group(1)
+        elems = 1
+        for d in dims.split(","):
+            if d:
+                elems *= int(d)
+        if elems >= view_elems:
+            big.append((dims, elems))
+    name = f"logical-view/{label}"
+    if expect_materialized:
+        if big:
+            return AuditCheck(name, "pass",
+                              f"reference path materialises the view as "
+                              f"expected: gather result [{big[0][0]}]")
+        return AuditCheck(name, "fail",
+                          f"detector found no gather >= {view_elems} "
+                          "elements in the reference executable — "
+                          "threshold or HLO idiom drifted")
+    if big:
+        return AuditCheck(name, "fail",
+                          f"{len(big)} materialised logical-view gather(s) "
+                          f">= {view_elems} elements: "
+                          f"{[d for d, _ in big[:3]]}")
+    return AuditCheck(name, "pass",
+                      f"no gather >= {view_elems} elements — pool pages "
+                      "stream through the kernel's VMEM tiles")
+
+
+def kernel_precheck_checks(cfg, swan, max_seq: int,
+                           page_size: Optional[int] = None,
+                           chunk_q: Optional[int] = None) -> List[AuditCheck]:
+    """(iv): static Pallas grid/VMEM validation at the engine's shapes.
+    ``page_size`` adds the paged-tile grid (sequence blocks = page-sized
+    pool tiles gathered via scalar prefetch); ``chunk_q`` adds the
+    bulk-chunk prefill stats kernel at that query-row count."""
     from repro.kernels.flash_prefill import flash_prefill as fp
+    from repro.kernels.flash_prefill import swan_chunk as sc
     from repro.kernels.swan_decode import swan_decode as sd
-    out: List[AuditCheck] = []
-    if swan is not None:
-        r = sd.precheck(B=1, Kv=cfg.n_kv_heads, G=cfg.n_heads // cfg.n_kv_heads,
-                        dh=cfg.d_head, S=max(max_seq, 1), k_max=swan.k_max,
-                        b=swan.buffer, quantized=getattr(swan, "quantize",
-                                                         False))
+
+    def fold(name: str, r: dict) -> AuditCheck:
         status = "fail" if r["errors"] else "pass"
         detail = "; ".join(r["errors"] + r["warnings"]) or \
             f"vmem {r['vmem_bytes']} B"
-        out.append(AuditCheck("pallas-precheck/swan_decode", status, detail))
+        return AuditCheck(f"pallas-precheck/{name}", status, detail)
+
+    out: List[AuditCheck] = []
+    if swan is not None:
+        quant = getattr(swan, "quantize", False)
+        G = cfg.n_heads // cfg.n_kv_heads
+        out.append(fold("swan_decode", sd.precheck(
+            B=1, Kv=cfg.n_kv_heads, G=G, dh=cfg.d_head, S=max(max_seq, 1),
+            k_max=swan.k_max, b=swan.buffer, quantized=quant)))
+        if page_size is not None:
+            # paged-tile grid: sequence blocks are pool pages, so the
+            # block is the page and S spans the per-seq page reservation
+            n_pg = max(max_seq // page_size, 1)
+            out.append(fold("swan_decode@paged", sd.precheck(
+                B=1, Kv=cfg.n_kv_heads, G=G, dh=cfg.d_head,
+                S=n_pg * page_size, k_max=swan.k_max, b=swan.buffer,
+                block_s=page_size, quantized=quant)))
+        if chunk_q is not None:
+            out.append(fold("swan_chunk_stats", sc.precheck(
+                B=1, Kv=cfg.n_kv_heads, Q=chunk_q, dh=cfg.d_head,
+                S=max(max_seq, 1), k_max=swan.k_max, quantized=quant)))
+            if page_size is not None:
+                n_pg = max(max_seq // page_size, 1)
+                out.append(fold("swan_chunk_stats@paged", sc.precheck(
+                    B=1, Kv=cfg.n_kv_heads, Q=chunk_q, dh=cfg.d_head,
+                    S=n_pg * page_size, k_max=swan.k_max,
+                    block_s=page_size, quantized=quant)))
     else:
         out.append(AuditCheck("pallas-precheck/swan_decode", "skip",
                               "no SWAN config on this engine"))
@@ -230,18 +302,41 @@ def run_audit(smoke: bool = True) -> List[AuditCheck]:
         return [rng.randint(0, cfg.vocab_size, size=n).tolist()
                 for n in (5, 11, 19)]
 
-    checks: List[AuditCheck] = kernel_precheck_checks(cfg, swan, max_seq)
+    page_size = 16
+    checks: List[AuditCheck] = kernel_precheck_checks(
+        cfg, swan, max_seq, page_size=page_size,
+        chunk_q=8 * (cfg.n_heads // cfg.n_kv_heads))
 
-    variants = [("slab", dict(paged=False)), ("paged", dict(paged=True,
-                                                            page_size=16))]
+    # xla = pure-JAX reference read path; pallas = kernel-backed decode
+    # and chunk attention reads (interpret mode on CPU — the HLO contract
+    # checks cover the same executables production would dispatch)
+    variants = [("slab", dict(paged=False)),
+                ("paged", dict(paged=True, page_size=page_size)),
+                ("slab-pallas", dict(paged=False, use_pallas=True)),
+                ("paged-pallas", dict(paged=True, page_size=page_size,
+                                      use_pallas=True))]
     for label, kw in variants:
         def make_engine(kw=kw):
             return ServeEngine(cfg, params, swan=swan, projections=pj,
                                n_slots=2, max_seq=max_seq, prefill_chunk=8,
                                prefill_slots=2, **kw)
-        checks += _exec_count_checks(make_engine, label, prompts(),
-                                     paged=kw.get("paged", False))
-        checks += audit_lowered(make_engine(), label)
+        if not kw.get("use_pallas"):
+            # executable-count bounds are trace-shape properties, identical
+            # across read-path implementations — drive them once per layout
+            checks += _exec_count_checks(make_engine, label, prompts(),
+                                         paged=kw.get("paged", False))
+        eng = make_engine()
+        checks += audit_lowered(eng, label)
+        if kw.get("paged"):
+            # the materialised-logical-view detector: the kernel path must
+            # gather pool pages in VMEM only; the reference path must trip
+            # the detector (proving the threshold still matches the HLO)
+            pb = 2
+            view = eng.n_slots * cfg.n_kv_heads * pb * page_size * swan.k_max
+            txt = eng.lower_decode(page_bucket=pb).compile().as_text()
+            checks.append(logical_view_check(
+                txt, f"{label}/decode@pg{pb}", view,
+                expect_materialized=not kw.get("use_pallas")))
 
     if jax.device_count() >= 2:
         mesh = jax.make_mesh((2,), ("data",))

@@ -63,6 +63,80 @@ def kernel_model_bytes(cfg, shape, swan) -> int:
     return (sparse + buf + params) // n_dev
 
 
+def _sparse_side_bytes(Kv: int, S: int, k_max: int, quantized: bool) -> int:
+    """HBM bytes ONE sequence's packed sparse side (k + v) streams through
+    the fused kernels: values (f32, or int8 + f32 per-vector scale when
+    quantized) and int8 winnow indices, each touched exactly once — the
+    BlockSpec grid covers every [block_s, k_max] tile once per (b, kv)."""
+    val = k_max * (1 if quantized else 4)
+    idx = k_max
+    scale = 4 if quantized else 0
+    return 2 * Kv * S * (val + idx + scale)
+
+
+def swan_decode_kernel_bytes(*, B: int, Kv: int, G: int, dh: int, S: int,
+                             k_max: int, buffer: int,
+                             quantized: bool) -> int:
+    """Ideal per-call HBM traffic of the fused SWAN decode kernel (slab or
+    paged — the paged gather streams the same pool tiles, just via the
+    prefetched page table): packed sparse prefix + dense ring buffer read
+    once, q in, o out.  The pure-JAX path upper-bounds this (it
+    additionally materialises expanded [S, dh] rows in HBM)."""
+    sparse = B * _sparse_side_bytes(Kv, S, k_max, quantized)
+    ring = 2 * B * Kv * buffer * dh * 4 + B * buffer * 4      # +buf_pos
+    q = B * Kv * G * dh * 4
+    o = B * Kv * G * dh * 4
+    return sparse + ring + q + o
+
+
+def swan_chunk_kernel_bytes(*, B: int, Kv: int, Q: int, dh: int, S: int,
+                            k_max: int, quantized: bool) -> int:
+    """Ideal per-call HBM traffic of the bulk-chunk prefill stats kernel:
+    the packed sparse prefix once, Q query rows in, (m, l, o_unnorm)
+    stats out."""
+    sparse = B * _sparse_side_bytes(Kv, S, k_max, quantized)
+    q = B * Kv * Q * dh * 4
+    stats = B * Kv * Q * (2 + dh) * 4
+    return sparse + q + stats
+
+
+def flash_kernel_bytes(*, B: int, H: int, Sq: int, Sk: int, dh: int,
+                       dtype_bytes: int = 4) -> int:
+    """Ideal per-call HBM traffic of causal flash prefill: q/k/v in, o out,
+    each once (GQA re-reads of kv tiles stay in VMEM in the ideal model)."""
+    Kv_bytes = 2 * B * Sk * dh * dtype_bytes            # per kv head pair
+    return B * H * Sq * dh * dtype_bytes * 2 + Kv_bytes
+
+
+def flash_kernel_flops(*, B: int, H: int, Sq: int, Sk: int, dh: int,
+                       causal: bool = True) -> float:
+    """MXU flops of flash attention: 2 matmuls of [Sq, dh] x [dh, Sk],
+    halved by the causal mask."""
+    f = 4.0 * B * H * Sq * Sk * dh
+    return f / 2 if causal else f
+
+
+def roofline_row(name: str, us_per_call: float, hbm_bytes: int,
+                 flops: float = 0.0, **tags) -> Dict[str, Any]:
+    """One per-kernel roofline table row: the memory-bound (or
+    compute-bound) floor time from the ideal byte/flop model vs the
+    measured call time.  ``achieved_fraction`` is fraction-of-peak on TPU;
+    in interpret mode on CPU it is a tiny consistency number (the gate in
+    benchmarks/bench_kernels.py keys its threshold off the backend)."""
+    mem_s = hbm_bytes / HBM_BW
+    comp_s = flops / PEAK_FLOPS
+    bound = "compute" if comp_s > mem_s else "memory"
+    floor_s = max(mem_s, comp_s)
+    meas_s = us_per_call * 1e-6
+    row = {"name": name, "us_per_call": float(us_per_call),
+           "hbm_bytes": int(hbm_bytes), "flops": float(flops),
+           "bound": bound, "floor_us": floor_s * 1e6,
+           "achieved_bw_gbs": (hbm_bytes / meas_s / 1e9) if meas_s else 0.0,
+           "achieved_fraction": (floor_s / meas_s) if meas_s else 0.0}
+    row.update(tags)
+    return row
+
+
 def roofline_report(record: Dict[str, Any], cfg, shape,
                     swan=None) -> Dict[str, Any]:
     hlo = record["hlo_cost"]

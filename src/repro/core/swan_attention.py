@@ -259,7 +259,8 @@ def _sparse_stats_bulk(qf: jnp.ndarray, k_side: Params, v_side: Params,
 
 def swan_chunk_prefill_attention(q_hat: jnp.ndarray, k_hat: jnp.ndarray,
                                  v_new: jnp.ndarray, cache: Params, swan,
-                                 cfg, start, true_len) -> jnp.ndarray:
+                                 cfg, start, true_len,
+                                 sparse_stats=None) -> jnp.ndarray:
     """Attention for a prefill CHUNK resuming from a populated hybrid cache.
 
     ``q_hat [B, S, Kv, G, dh]`` / ``k_hat [B, S, Kv, dh]`` / ``v_new
@@ -281,16 +282,26 @@ def swan_chunk_prefill_attention(q_hat: jnp.ndarray, k_hat: jnp.ndarray,
     keys sit at positions >= start + true_len > every real query position,
     so the causal mask hides them; padded queries (and whole dead lanes)
     produce garbage rows the caller discards.
+
+    ``sparse_stats``: optional precomputed (m_safe, l, o_unnorm) partial
+    stats over the sparse prefix, each in the bulk [B, Kv, S·G(, dh)]
+    query-flattened layout — the Pallas bulk-chunk kernel
+    (``repro.kernels.flash_prefill.swan_chunk``) supplies these and
+    ``cache["k"]/["v"]`` are then never touched (the paged caller skips
+    materialising the logical view entirely).
     """
     B, S, Kv, G, dh = q_hat.shape
     scale = 1.0 / math.sqrt(dh)
     start = per_seq_pos(start, B)                            # [B]
     qf = q_hat.astype(jnp.float32).transpose(0, 2, 1, 3, 4)  # [B,Kv,S,G,dh]
 
-    sp_len = jnp.maximum(start - swan.buffer, 0)             # [B]
-    m_sp, l_sp, o_sp = _sparse_stats_bulk(qf.reshape(B, Kv, S * G, dh),
-                                          cache["k"], cache["v"], swan,
-                                          sp_len, dh)
+    if sparse_stats is not None:
+        m_sp, l_sp, o_sp = sparse_stats
+    else:
+        sp_len = jnp.maximum(start - swan.buffer, 0)         # [B]
+        m_sp, l_sp, o_sp = _sparse_stats_bulk(qf.reshape(B, Kv, S * G, dh),
+                                              cache["k"], cache["v"], swan,
+                                              sp_len, dh)
     m_sp = m_sp.reshape(B, Kv, S, G)
     l_sp = l_sp.reshape(B, Kv, S, G)
     o_sp = o_sp.reshape(B, Kv, S, G, dh)

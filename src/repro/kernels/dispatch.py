@@ -1,0 +1,49 @@
+"""Kernel dispatch policy shared by every Pallas wrapper and the serve
+engine (documented in docs/kernels.md).
+
+Two independent knobs:
+
+  * ``use_pallas`` — WHICH implementation runs (fused Pallas kernel vs
+    pure-JAX/XLA).  The engine default is backend-driven: on TPU the
+    kernels are the fast path; elsewhere the pure-JAX path is usually
+    faster, but the kernels still RUN anywhere via interpret mode (that is
+    how CPU CI validates them).
+  * ``interpret`` — HOW a Pallas call executes.  ``None`` resolves from
+    ``jax.default_backend()``: compiled on TPU, interpreter everywhere
+    else.  Callers only pass an explicit bool in tests.
+
+``pallas_decode_supported`` is the static eligibility gate: the fused
+kernels cover the paper-faithful ``topk`` mode with a non-empty dense ring
+(``truncate`` is a dense low-rank matmul XLA already schedules optimally,
+and the bt=0 ablation has no ring tile to block-spec).  Sequence-dim
+sharding (split-S flash-decoding) keeps the pure-JAX shard_map path — the
+kernel is lane-local and composes with BATCH sharding only.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["resolve_interpret", "resolve_use_pallas",
+           "pallas_decode_supported"]
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Pallas execution mode: compiled on TPU, interpreter elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def resolve_use_pallas(use_pallas: Optional[bool] = None) -> bool:
+    """Engine default for the kernel-vs-XLA dispatch: auto on TPU."""
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return bool(use_pallas)
+
+
+def pallas_decode_supported(swan) -> bool:
+    """Static (config-level) eligibility of the fused SWAN kernels."""
+    return (swan is not None and getattr(swan, "enabled", False)
+            and swan.mode == "topk" and swan.buffer > 0)

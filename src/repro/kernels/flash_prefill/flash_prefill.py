@@ -112,8 +112,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            block_q: int = 256, block_k: int = 256,
-                           interpret: bool = True):
-    """q [B,Sq,H,dh]; k/v [B,Sk,Kv,dh] -> o [B,Sq,H,dh] (GQA-aware)."""
+                           interpret=None):
+    """q [B,Sq,H,dh]; k/v [B,Sk,Kv,dh] -> o [B,Sq,H,dh] (GQA-aware).
+    ``interpret=None`` resolves from the backend (repro.kernels.dispatch)."""
+    from repro.kernels.dispatch import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, Sq, H, dh = q.shape
     Sk, Kv = k.shape[1], k.shape[2]
     G = H // Kv

@@ -1,15 +1,34 @@
-"""Jitted wrapper for the flash_prefill kernel."""
+"""Jitted wrappers for the flash_prefill kernels.
+
+``interpret=None`` resolves from the backend (``repro.kernels.dispatch``):
+compiled on TPU, interpreter elsewhere.
+"""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 
+from repro.kernels.dispatch import resolve_interpret
 from repro.kernels.flash_prefill.flash_prefill import flash_attention_pallas
+from repro.kernels.flash_prefill.swan_chunk import (
+    swan_chunk_stats_paged_pallas, swan_chunk_stats_pallas)
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
-                    block_k: int = 256, interpret: bool = True):
+                    block_k: int = 256, interpret: Optional[bool] = None):
     return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
-                                  block_k=block_k, interpret=interpret)
+                                  block_k=block_k,
+                                  interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret"))
+def swan_chunk_stats(q, k_vals, k_idx, v_vals, v_idx, sp_len,
+                     k_scale=None, v_scale=None, block_s: int = 256,
+                     interpret: Optional[bool] = None):
+    return swan_chunk_stats_pallas(q, k_vals, k_idx, v_vals, v_idx, sp_len,
+                                   k_scale=k_scale, v_scale=v_scale,
+                                   block_s=block_s,
+                                   interpret=resolve_interpret(interpret))

@@ -1,0 +1,289 @@
+"""Pallas TPU kernel: bulk chunk-prefill reads of the packed SWAN cache.
+
+The chunked-prefill attention (`swan_chunk_prefill_attention`) splits per
+query into [winnowed sparse prefix ‖ ring ‖ chunk]; the sparse-prefix part
+is the bandwidth-bound bulk read this kernel fuses.  Each grid step DMAs
+one packed tile (vals [BS,k] + idx int8, optionally int8 vals + f32
+scales), expands it ONCE in VMEM via the same one-hot fori-loop as the
+decode kernel, and runs all Q = S_chunk·G chunk queries against it through
+two MXU matmuls with online-softmax scratch carried across tiles — the
+multi-query analogue of ``swan_decode``.  The pure-JAX fallback
+(`_sparse_stats_bulk`) expands into an HBM transient instead.
+
+Outputs are MERGEABLE partial stats (m_safe [B,Kv,Q], l [B,Kv,Q],
+o_unnorm [B,Kv,Q,dh], all f32): the dense [ring ‖ chunk] side and the
+exact merge stay outside (they touch fresh chunk tensors, not the cache).
+``m_safe`` follows the `_sparse_stats_bulk` convention — 0.0 where a lane
+saw no valid sparse position (empty prefix / dead lane), so the outer
+merge is bit-compatible with the pure-JAX stats.
+
+Grid: (B, Kv, S/BS) slab, (B, Kv, Pg) paged — the sequence axis innermost
+so scratch carries.  The paged variant takes each lane's page-table row as
+a scalar-prefetch operand and gathers pool pages directly into VMEM tiles
+(no materialised logical view), exactly like ``swan_decode_paged_pallas``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+LANE_WIDTH = 128
+SUBLANE_F32 = 8
+
+
+def vmem_footprint(*, bs: int, dh: int, k_max: int, Q: int,
+                   quantized: bool = False) -> int:
+    """Per-grid-step VMEM working set in bytes (double-buffered inputs),
+    mirroring the BlockSpecs in ``swan_chunk_stats_pallas``."""
+    vals_b = 4 if not quantized else 1
+    tile = 2 * (bs * k_max * vals_b + bs * k_max)     # k/v packed vals+idx
+    if quantized:
+        tile += 2 * bs * 4                            # k/v scales
+    tile += Q * dh * 4                                # q block (resident)
+    inputs = 2 * tile                                 # double buffering
+    expand = 2 * bs * dh * 4                          # k_dense + v_dense
+    scratch = 2 * Q * 4 + Q * dh * 4                  # m, l, acc
+    out = 2 * Q * 4 + Q * dh * 4                      # m, l, o
+    return inputs + expand + scratch + out
+
+
+def precheck(*, B: int, Kv: int, Q: int, dh: int, S: int, k_max: int,
+             block_s: int = 256, quantized: bool = False,
+             vmem_budget: int = VMEM_BYTES_PER_CORE) -> dict:
+    """Static grid/VMEM validation for the bulk-chunk stats kernel — same
+    contract as ``repro.kernels.swan_decode.precheck``.  For the paged
+    variant pass ``S = Pg * page_size`` and ``block_s = page_size``."""
+    errors, warnings = [], []
+    bs = min(block_s, S) if S else 0
+    if S <= 0:
+        errors.append(f"empty sparse extent S={S}: caller must short-"
+                      "circuit to zero stats")
+    elif bs <= 0 or S % bs:
+        errors.append(f"sparse length S={S} not divisible by block bs={bs}")
+    if k_max > dh:
+        errors.append(f"k_max={k_max} exceeds dh={dh}: one-hot expansion "
+                      "would scatter out of range")
+    vmem = vmem_footprint(bs=max(bs, 1), dh=dh, k_max=k_max, Q=Q,
+                          quantized=quantized)
+    if vmem > vmem_budget:
+        errors.append(f"VMEM working set {vmem} B exceeds budget "
+                      f"{vmem_budget} B (bs={bs}, k={k_max}, dh={dh}, Q={Q})")
+    if dh % LANE_WIDTH:
+        warnings.append(f"dh={dh} not a multiple of lane width "
+                        f"{LANE_WIDTH}: tiles pad to 128 lanes")
+    if Q % SUBLANE_F32 or (bs and bs % SUBLANE_F32):
+        warnings.append(f"Q={Q}/bs={bs} not multiples of f32 sublane "
+                        f"{SUBLANE_F32}: tiles pad sublanes")
+    return {"errors": errors, "warnings": warnings, "vmem_bytes": vmem}
+
+
+def _expand_packed(vals, idx, bs: int, dh: int, k_max: int):
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bs, dh), 1)
+
+    def body(j, acc):
+        v = jax.lax.dynamic_slice(vals, (0, j), (bs, 1))
+        i = jax.lax.dynamic_slice(idx, (0, j), (bs, 1))
+        return acc + v * (iota == i).astype(jnp.float32)
+
+    return jax.lax.fori_loop(0, k_max, body,
+                             jnp.zeros((bs, dh), jnp.float32))
+
+
+def _chunk_stats_body(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
+                      ks_ref, vs_ref, mo_ref, lo_ref, oo_ref,
+                      m_sc, l_sc, acc_sc, *, bs: int, dh: int, k_max: int,
+                      n_sblocks: int, quantized: bool):
+    sb = pl.program_id(2)
+    Q = q_ref.shape[2]
+    scale = 1.0 / math.sqrt(dh)
+    sp_len = meta_ref[0, 0]       # this lane's valid sparse-prefix length
+
+    @pl.when(sb == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)                        # [Q, dh]
+    kv = kv_ref[0, 0].astype(jnp.float32)                      # [BS, k]
+    vv = vv_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        kv = kv * ks_ref[0, 0][:, None]
+        vv = vv * vs_ref[0, 0][:, None]
+    ki = ki_ref[0, 0].astype(jnp.int32)
+    vi = vi_ref[0, 0].astype(jnp.int32)
+    k_dense = _expand_packed(kv, ki, bs, dh, k_max)            # [BS, dh]
+    v_dense = _expand_packed(vv, vi, bs, dh, k_max)
+
+    s = jax.lax.dot_general(q, k_dense, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    t_pos = sb * bs + jax.lax.broadcasted_iota(jnp.int32, (Q, bs), 1)
+    s = jnp.where(t_pos < sp_len, s, NEG_INF)
+
+    m_prev, l_prev = m_sc[...], l_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(t_pos < sp_len, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+    acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+        p, v_dense, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(sb == n_sblocks - 1)
+    def _write():
+        m = m_sc[...]
+        # empty-prefix convention of _sparse_stats_bulk: m_safe = 0.0 when
+        # no position was valid (all scores stayed at the NEG_INF floor)
+        m_safe = jnp.where(m > NEG_INF * 0.5, m, 0.0)
+        mo_ref[0, 0] = m_safe[:, 0]
+        lo_ref[0, 0] = l_sc[...][:, 0]
+        oo_ref[0, 0] = acc_sc[...]
+
+
+def _chunk_kernel(*refs, quantized: bool, **static):
+    """Positional-ref adapter for the optional scale operands."""
+    meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref = refs[:6]
+    i = 6
+    if quantized:
+        ks_ref, vs_ref = refs[i:i + 2]
+        i += 2
+    else:
+        ks_ref = vs_ref = None
+    mo_ref, lo_ref, oo_ref, m_sc, l_sc, acc_sc = refs[i:i + 6]
+    _chunk_stats_body(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
+                      ks_ref, vs_ref, mo_ref, lo_ref, oo_ref,
+                      m_sc, l_sc, acc_sc, quantized=quantized, **static)
+
+
+def _paged_chunk_kernel(tab_ref, *refs, quantized: bool, **static):
+    """Scalar-prefetch adapter: the page-table row feeds index maps only."""
+    _chunk_kernel(*refs, quantized=quantized, **static)
+
+
+def _stats_out(B: int, Kv: int, Q: int, dh: int, paged: bool):
+    """(out_specs, out_shape) for the three stats outputs."""
+    if paged:
+        m_map = lambda b_, j, s, tab: (b_, j, 0)          # noqa: E731
+        o_map = lambda b_, j, s, tab: (b_, j, 0, 0)       # noqa: E731
+    else:
+        m_map = lambda b_, j, s: (b_, j, 0)               # noqa: E731
+        o_map = lambda b_, j, s: (b_, j, 0, 0)            # noqa: E731
+    specs = [pl.BlockSpec((1, 1, Q), m_map),
+             pl.BlockSpec((1, 1, Q), m_map),
+             pl.BlockSpec((1, 1, Q, dh), o_map)]
+    shapes = (jax.ShapeDtypeStruct((B, Kv, Q), jnp.float32),
+              jax.ShapeDtypeStruct((B, Kv, Q), jnp.float32),
+              jax.ShapeDtypeStruct((B, Kv, Q, dh), jnp.float32))
+    return specs, shapes
+
+
+_SCRATCH = lambda Q, dh: [pltpu.VMEM((Q, 1), jnp.float32),    # noqa: E731
+                          pltpu.VMEM((Q, 1), jnp.float32),
+                          pltpu.VMEM((Q, dh), jnp.float32)]
+
+
+def swan_chunk_stats_pallas(q, k_vals, k_idx, v_vals, v_idx, sp_len,
+                            k_scale=None, v_scale=None, *,
+                            block_s: int = 256,
+                            interpret: Optional[bool] = None):
+    """q [B,Kv,Q,dh] (Q = S_chunk·G flattened queries); packed sparse
+    [B,Kv,S,k]; per-lane ``sp_len [B]``.  Returns (m_safe [B,Kv,Q],
+    l [B,Kv,Q], o_unnorm [B,Kv,Q,dh]) — drop-in for
+    ``swan_attention._sparse_stats_bulk``."""
+    from repro.kernels.dispatch import resolve_interpret
+    B, Kv, Q, dh = q.shape
+    S, k_max = k_vals.shape[2], k_vals.shape[3]
+    bs = min(block_s, S)
+    assert S > 0 and S % bs == 0, (S, bs)
+    n_sblocks = S // bs
+    quantized = k_scale is not None
+    meta = jnp.broadcast_to(jnp.asarray(sp_len, jnp.int32),
+                            (B,)).reshape(B, 1)
+
+    kernel = functools.partial(_chunk_kernel, bs=bs, dh=dh, k_max=k_max,
+                               n_sblocks=n_sblocks, quantized=quantized)
+    specs = [
+        pl.BlockSpec((1, 1), lambda b_, j, s: (b_, 0)),                # meta
+        pl.BlockSpec((1, 1, Q, dh), lambda b_, j, s: (b_, j, 0, 0)),   # q
+        pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),
+        pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),
+        pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),
+        pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),
+    ]
+    operands = [meta, q, k_vals, k_idx, v_vals, v_idx]
+    if quantized:
+        specs += [pl.BlockSpec((1, 1, bs), lambda b_, j, s: (b_, j, s)),
+                  pl.BlockSpec((1, 1, bs), lambda b_, j, s: (b_, j, s))]
+        operands += [k_scale, v_scale]
+    out_specs, out_shape = _stats_out(B, Kv, Q, dh, paged=False)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Kv, n_sblocks),
+        in_specs=specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=_SCRATCH(Q, dh),
+        interpret=resolve_interpret(interpret),
+    )(*operands)
+
+
+def swan_chunk_stats_paged_pallas(q, pool_k_vals, pool_k_idx, pool_v_vals,
+                                  pool_v_idx, sp_len, page_rows,
+                                  pool_k_scale=None, pool_v_scale=None, *,
+                                  interpret: Optional[bool] = None):
+    """Paged bulk-chunk stats: pool sides [n_pages,Kv,ps,k] + per-lane
+    ``page_rows [B,Pg]`` gathered into VMEM tiles inside the kernel —
+    the chunk path's replacement for ``paged_logical_view`` +
+    ``_sparse_stats_bulk``."""
+    from repro.kernels.dispatch import resolve_interpret
+    B, Kv, Q, dh = q.shape
+    _, _, ps, k_max = pool_k_vals.shape
+    Pg = page_rows.shape[1]
+    assert page_rows.shape == (B, Pg), page_rows.shape
+    assert Pg >= 1, "empty page-table prefix: caller must short-circuit"
+    quantized = pool_k_scale is not None
+    meta = jnp.broadcast_to(jnp.asarray(sp_len, jnp.int32),
+                            (B,)).reshape(B, 1)
+
+    kernel = functools.partial(_paged_chunk_kernel, bs=ps, dh=dh,
+                               k_max=k_max, n_sblocks=Pg,
+                               quantized=quantized)
+    tile = lambda b_, j, s, tab: (tab[b_, s], j, 0, 0)     # noqa: E731
+    specs = [
+        pl.BlockSpec((1, 1), lambda b_, j, s, tab: (b_, 0)),           # meta
+        pl.BlockSpec((1, 1, Q, dh), lambda b_, j, s, tab: (b_, j, 0, 0)),
+        pl.BlockSpec((1, 1, ps, k_max), tile),
+        pl.BlockSpec((1, 1, ps, k_max), tile),
+        pl.BlockSpec((1, 1, ps, k_max), tile),
+        pl.BlockSpec((1, 1, ps, k_max), tile),
+    ]
+    operands = [meta, q, pool_k_vals, pool_k_idx, pool_v_vals, pool_v_idx]
+    if quantized:
+        sc = lambda b_, j, s, tab: (tab[b_, s], j, 0)      # noqa: E731
+        specs += [pl.BlockSpec((1, 1, ps), sc), pl.BlockSpec((1, 1, ps), sc)]
+        operands += [pool_k_scale, pool_v_scale]
+    out_specs, out_shape = _stats_out(B, Kv, Q, dh, paged=True)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Kv, Pg),
+        in_specs=specs,
+        out_specs=out_specs,
+        scratch_shapes=_SCRATCH(Q, dh),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=resolve_interpret(interpret),
+    )(page_rows, *operands)

@@ -1,35 +1,79 @@
-"""Jitted public wrapper for the swan_decode Pallas kernel.
+"""Jitted public wrappers for the swan_decode Pallas kernels.
 
 ``swan_decode_attention_kernel(q_hat, cache, swan, cfg, pos)`` mirrors
 ``repro.core.swan_attention.swan_decode_attention`` but runs the fused
-Pallas kernel (interpret on CPU, compiled on TPU).
+Pallas kernel; ``swan_decode_attention_kernel_paged`` mirrors
+``swan_decode_attention_paged`` with the page-table gather executed
+inside the kernel (no materialised logical view).
+
+``interpret=None`` resolves from the backend (``repro.kernels.dispatch``):
+compiled on TPU, interpreter elsewhere — the old hard-coded
+``interpret=True`` silently pinned TPU callers to CPU emulation.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.hybrid_cache import per_seq_pos, sparse_len
-from repro.kernels.swan_decode.swan_decode import swan_decode_pallas
+from repro.kernels.dispatch import resolve_interpret
+from repro.kernels.swan_decode.swan_decode import (swan_decode_paged_pallas,
+                                                  swan_decode_pallas)
 
 
-@partial(jax.jit, static_argnames=("swan", "cfg", "block_s", "interpret"))
-def swan_decode_attention_kernel(q_hat, cache, swan, cfg, pos,
-                                 block_s: int = 256, interpret: bool = True):
+def _require_topk(swan):
     if swan.mode != "topk":
         raise NotImplementedError("kernel path covers the paper-faithful "
                                   "'topk' mode; truncate mode is a dense "
                                   "low-rank matmul (plain XLA is optimal)")
+
+
+def swan_decode_from_cache(q_hat, cache, swan, pos, block_s: int = 256,
+                           interpret: Optional[bool] = None):
+    """Un-jitted slab dispatch (for callers already inside jit — the serve
+    decode step): unpack the hybrid-cache dict into kernel operands."""
+    _require_topk(swan)
     pos = per_seq_pos(pos, q_hat.shape[0])
     sp = sparse_len(swan, pos)
-    ks = cache["k"].get("scale")
-    vs = cache["v"].get("scale")
     return swan_decode_pallas(
         q_hat, cache["k"]["vals"], cache["k"]["idx"],
         cache["v"]["vals"], cache["v"]["idx"],
         cache["buf_k"], cache["buf_v"], cache["buf_pos"],
         pos, jnp.asarray(sp, jnp.int32),
-        k_scale=ks, v_scale=vs,
-        block_s=block_s, interpret=interpret)
+        k_scale=cache["k"].get("scale"), v_scale=cache["v"].get("scale"),
+        block_s=block_s, interpret=resolve_interpret(interpret))
+
+
+def swan_decode_paged_from_cache(q_hat, cache, swan, pos, page_tab,
+                                 interpret: Optional[bool] = None):
+    """Un-jitted paged dispatch: pool sides + page-table prefix straight
+    into the scalar-prefetch kernel — ``paged_logical_view`` never runs."""
+    _require_topk(swan)
+    pos = per_seq_pos(pos, q_hat.shape[0])
+    sp = sparse_len(swan, pos)
+    pk, pv = cache["pool"]["k"], cache["pool"]["v"]
+    return swan_decode_paged_pallas(
+        q_hat, pk["vals"], pk["idx"], pv["vals"], pv["idx"],
+        cache["buf_k"], cache["buf_v"], cache["buf_pos"],
+        pos, jnp.asarray(sp, jnp.int32), page_tab,
+        pool_k_scale=pk.get("scale"), pool_v_scale=pv.get("scale"),
+        interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("swan", "cfg", "block_s", "interpret"))
+def swan_decode_attention_kernel(q_hat, cache, swan, cfg, pos,
+                                 block_s: int = 256,
+                                 interpret: Optional[bool] = None):
+    return swan_decode_from_cache(q_hat, cache, swan, pos, block_s=block_s,
+                                  interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("swan", "cfg", "interpret"))
+def swan_decode_attention_kernel_paged(q_hat, cache, swan, cfg, pos,
+                                       page_tab,
+                                       interpret: Optional[bool] = None):
+    return swan_decode_paged_from_cache(q_hat, cache, swan, pos, page_tab,
+                                        interpret=resolve_interpret(interpret))

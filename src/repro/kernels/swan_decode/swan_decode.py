@@ -102,10 +102,10 @@ def _expand_packed(vals, idx, bs: int, dh: int, k_max: int):
                              jnp.zeros((bs, dh), jnp.float32))
 
 
-def _swan_decode_kernel(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
-                        ks_ref, vs_ref, bk_ref, bv_ref, bp_ref, o_ref,
-                        m_sc, l_sc, acc_sc, *, bs: int, dh: int, k_max: int,
-                        n_sblocks: int, quantized: bool):
+def _swan_decode_body(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
+                      ks_ref, vs_ref, bk_ref, bv_ref, bp_ref, o_ref,
+                      m_sc, l_sc, acc_sc, *, bs: int, dh: int, k_max: int,
+                      n_sblocks: int, quantized: bool):
     sb = pl.program_id(2)
     G = q_ref.shape[2]
     scale = 1.0 / math.sqrt(dh)
@@ -168,16 +168,43 @@ def _swan_decode_kernel(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
         o_ref[0, 0] = (acc / jnp.maximum(l_fin, 1e-30)).astype(o_ref.dtype)
 
 
+def _decode_kernel(*refs, quantized: bool, **static):
+    """Positional-ref adapter: the scale refs exist only for quantized
+    caches (dummy f32 scale streams would double the packed-tile HBM
+    traffic for nothing), so the pallas_call operand list — and hence the
+    kernel signature — is built conditionally."""
+    meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref = refs[:6]
+    i = 6
+    if quantized:
+        ks_ref, vs_ref = refs[i:i + 2]
+        i += 2
+    else:
+        ks_ref = vs_ref = None
+    bk_ref, bv_ref, bp_ref, o_ref, m_sc, l_sc, acc_sc = refs[i:i + 7]
+    _swan_decode_body(meta_ref, q_ref, kv_ref, ki_ref, vv_ref, vi_ref,
+                      ks_ref, vs_ref, bk_ref, bv_ref, bp_ref, o_ref,
+                      m_sc, l_sc, acc_sc, quantized=quantized, **static)
+
+
+def _decode_meta(pos, sp_len, B: int):
+    return jnp.stack([
+        jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
+        jnp.broadcast_to(jnp.asarray(sp_len, jnp.int32), (B,)),
+    ], axis=1)                                                 # [B, 2]
+
+
 def swan_decode_pallas(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
                        buf_pos, pos, sp_len, k_scale=None, v_scale=None,
-                       *, block_s: int = 256, interpret: bool = True):
+                       *, block_s: int = 256,
+                       interpret: Optional[bool] = None):
     """q [B,Kv,G,dh]; packed sparse [B,Kv,S,k]; buffer [B,Kv,b,dh];
     buf_pos [B,b].  ``pos``/``sp_len`` are scalars or per-sequence [B]
     (continuous batching: each sequence masks its own ring + sparse prefix).
 
-    Returns o [B,Kv,G,dh].  ``interpret=True`` validates on CPU; on TPU set
-    False for the compiled kernel.
+    Returns o [B,Kv,G,dh].  ``interpret=None`` resolves from the backend
+    (compiled on TPU, interpreter elsewhere — repro.kernels.dispatch).
     """
+    from repro.kernels.dispatch import resolve_interpret
     B, Kv, G, dh = q.shape
     S, k_max = k_vals.shape[2], k_vals.shape[3]
     b = buf_k.shape[2]
@@ -186,16 +213,10 @@ def swan_decode_pallas(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
     assert buf_pos.shape == (B, b), buf_pos.shape
     n_sblocks = S // bs
     quantized = k_scale is not None
-    if not quantized:   # dummy scale operands keep one kernel signature
-        k_scale = jnp.ones((B, Kv, S), jnp.float32)
-        v_scale = jnp.ones((B, Kv, S), jnp.float32)
-    meta = jnp.stack([
-        jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
-        jnp.broadcast_to(jnp.asarray(sp_len, jnp.int32), (B,)),
-    ], axis=1)                                                 # [B, 2]
+    meta = _decode_meta(pos, sp_len, B)
 
     kernel = functools.partial(
-        _swan_decode_kernel, bs=bs, dh=dh, k_max=k_max,
+        _decode_kernel, bs=bs, dh=dh, k_max=k_max,
         n_sblocks=n_sblocks, quantized=quantized)
     grid = (B, Kv, n_sblocks)
     specs = [
@@ -205,12 +226,20 @@ def swan_decode_pallas(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
         pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),  # k_idx
         pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),  # v_vals
         pl.BlockSpec((1, 1, bs, k_max), lambda b_, j, s: (b_, j, s, 0)),  # v_idx
-        pl.BlockSpec((1, 1, bs), lambda b_, j, s: (b_, j, s)),         # k_scale
-        pl.BlockSpec((1, 1, bs), lambda b_, j, s: (b_, j, s)),         # v_scale
+    ]
+    operands = [meta, q, k_vals, k_idx, v_vals, v_idx]
+    if quantized:
+        specs += [
+            pl.BlockSpec((1, 1, bs), lambda b_, j, s: (b_, j, s)),     # k_scale
+            pl.BlockSpec((1, 1, bs), lambda b_, j, s: (b_, j, s)),     # v_scale
+        ]
+        operands += [k_scale, v_scale]
+    specs += [
         pl.BlockSpec((1, 1, b, dh), lambda b_, j, s: (b_, j, 0, 0)),   # buf_k
         pl.BlockSpec((1, 1, b, dh), lambda b_, j, s: (b_, j, 0, 0)),   # buf_v
         pl.BlockSpec((1, b), lambda b_, j, s: (b_, 0)),                # buf_pos
     ]
+    operands += [buf_k, buf_v, buf_pos]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -222,6 +251,96 @@ def swan_decode_pallas(q, k_vals, k_idx, v_vals, v_idx, buf_k, buf_v,
             pltpu.VMEM((G, 1), jnp.float32),   # l
             pltpu.VMEM((G, dh), jnp.float32),  # acc
         ],
-        interpret=interpret,
-    )(meta, q, k_vals, k_idx, v_vals, v_idx, k_scale, v_scale,
-      buf_k, buf_v, buf_pos)
+        interpret=resolve_interpret(interpret),
+    )(*operands)
+
+
+def _paged_decode_kernel(tab_ref, *refs, quantized: bool, **static):
+    """Scalar-prefetch adapter: ``tab_ref`` (the page-table prefix) is
+    consumed by the BlockSpec index maps only — the body sees exactly the
+    slab tile layout (VMEM tiles don't care which HBM page they came
+    from)."""
+    _decode_kernel(*refs, quantized=quantized, **static)
+
+
+def swan_decode_paged_pallas(q, pool_k_vals, pool_k_idx, pool_v_vals,
+                             pool_v_idx, buf_k, buf_v, buf_pos, pos, sp_len,
+                             page_tab, pool_k_scale=None, pool_v_scale=None,
+                             *, interpret: Optional[bool] = None):
+    """Paged-pool decode: the packed sparse sides live in a shared page
+    pool ``[n_pages, Kv, ps, k]`` and each sequence's logical prefix is
+    named by ``page_tab [B, Pg]`` (a power-of-two table prefix, unmapped
+    entries -> trash page 0).
+
+    The gather happens INSIDE the kernel: ``page_tab`` rides as a
+    scalar-prefetch operand (SMEM, shipped before the grid runs) and the
+    pool BlockSpec index maps read it — grid step (b, j, s) DMAs physical
+    page ``page_tab[b, s]`` straight into the VMEM tile.  No
+    ``[B, Pg*ps, k]`` logical view is ever materialised in HBM (that XLA
+    gather is exactly the re-inflation `paged_logical_view` pays on the
+    pure-JAX path).  Trash-page tiles DMA garbage that the per-sequence
+    ``sp_len`` mask zeroes: logical positions >= sp_len are masked no
+    matter what physical page backs them.
+
+    Returns o [B,Kv,G,dh] — same contract as ``swan_decode_pallas`` over
+    ``paged_logical_view``.
+    """
+    from repro.kernels.dispatch import resolve_interpret
+    B, Kv, G, dh = q.shape
+    n_pages, _, ps, k_max = pool_k_vals.shape
+    b = buf_k.shape[2]
+    Pg = page_tab.shape[1]
+    assert page_tab.shape == (B, Pg), page_tab.shape
+    assert Pg >= 1, "empty page-table prefix: caller must ship >= 1 page"
+    assert buf_pos.shape == (B, b), buf_pos.shape
+    quantized = pool_k_scale is not None
+    meta = _decode_meta(pos, sp_len, B)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, bs=ps, dh=dh, k_max=k_max,
+        n_sblocks=Pg, quantized=quantized)
+    # NOTE index-map signatures: (grid indices..., scalar-prefetch refs...)
+    specs = [
+        pl.BlockSpec((1, 2), lambda b_, j, s, tab: (b_, 0)),            # meta
+        pl.BlockSpec((1, 1, G, dh), lambda b_, j, s, tab: (b_, j, 0, 0)),  # q
+        # pool tiles: the paged VMEM gather — physical page from the table
+        pl.BlockSpec((1, 1, ps, k_max),
+                     lambda b_, j, s, tab: (tab[b_, s], j, 0, 0)),      # k_vals
+        pl.BlockSpec((1, 1, ps, k_max),
+                     lambda b_, j, s, tab: (tab[b_, s], j, 0, 0)),      # k_idx
+        pl.BlockSpec((1, 1, ps, k_max),
+                     lambda b_, j, s, tab: (tab[b_, s], j, 0, 0)),      # v_vals
+        pl.BlockSpec((1, 1, ps, k_max),
+                     lambda b_, j, s, tab: (tab[b_, s], j, 0, 0)),      # v_idx
+    ]
+    operands = [meta, q, pool_k_vals, pool_k_idx, pool_v_vals, pool_v_idx]
+    if quantized:
+        specs += [
+            pl.BlockSpec((1, 1, ps), lambda b_, j, s, tab: (tab[b_, s], j, 0)),
+            pl.BlockSpec((1, 1, ps), lambda b_, j, s, tab: (tab[b_, s], j, 0)),
+        ]
+        operands += [pool_k_scale, pool_v_scale]
+    specs += [
+        pl.BlockSpec((1, 1, b, dh), lambda b_, j, s, tab: (b_, j, 0, 0)),  # buf_k
+        pl.BlockSpec((1, 1, b, dh), lambda b_, j, s, tab: (b_, j, 0, 0)),  # buf_v
+        pl.BlockSpec((1, b), lambda b_, j, s, tab: (b_, 0)),            # buf_pos
+    ]
+    operands += [buf_k, buf_v, buf_pos]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Kv, Pg),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((1, 1, G, dh),
+                               lambda b_, j, s, tab: (b_, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # m
+            pltpu.VMEM((G, 1), jnp.float32),   # l
+            pltpu.VMEM((G, dh), jnp.float32),  # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, dh), q.dtype),
+        interpret=resolve_interpret(interpret),
+    )(page_tab, *operands)

@@ -86,6 +86,11 @@ def main():
                     help="paged: grow the device pool (2x pages, copy, "
                          "extend free lists) when it runs dry instead of "
                          "holding admissions")
+    ap.add_argument("--use-pallas", action="store_true", default=None,
+                    help="engine: force the Pallas kernel-backed decode/"
+                         "chunk attention read (default: auto — compiled "
+                         "kernels on TPU, pure-JAX elsewhere; forcing on "
+                         "CPU runs the kernels under the interpreter)")
     ap.add_argument("--admission", default="fifo", choices=["fifo", "srf"],
                     help="engine: admission policy — fifo, or srf "
                          "(shortest-remaining-first: bounds TTFT when the "
@@ -118,6 +123,9 @@ def main():
         raise SystemExit("--pool-grow requires --paged")
     if (args.trace_out or args.profile_steps) and not args.engine:
         raise SystemExit("--trace-out/--profile-steps require --engine")
+    if args.use_pallas and not (args.engine and args.swan):
+        raise SystemExit("--use-pallas requires --engine and --swan "
+                         "(the kernels back the SWAN serve read path)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     api = get_model(cfg)
@@ -197,7 +205,8 @@ def _run_engine(cfg, params, swan, projections, args):
                       prefill_slots=args.prefill_slots,
                       prefill_budget=args.prefill_budget,
                       mesh=mesh, pool_grow=args.pool_grow,
-                      admission=args.admission, trace=trace)
+                      admission=args.admission, trace=trace,
+                      use_pallas=args.use_pallas)
     if args.profile_steps:
         eng.profile_steps(args.profile_steps, args.profile_dir)
     if mesh is not None:

@@ -78,11 +78,14 @@ def _tfm_prefill(p, cfg, batch, state, swan=None, proj=None, k_active=None,
 
 def _tfm_prefill_chunk(p, cfg, batch, state, slot, start, swan=None,
                        proj=None, k_active=None, true_len=None,
-                       page_tab=None, prefix_len=None):
+                       page_tab=None, prefix_len=None, use_pallas=False,
+                       pallas_interpret=None):
     return tfm.lm_prefill_chunk_batched(p, cfg, batch["tokens"], state, slot,
                                         start, swan, proj, k_active=k_active,
                                         true_len=true_len, page_tab=page_tab,
-                                        prefix_len=prefix_len)
+                                        prefix_len=prefix_len,
+                                        use_pallas=use_pallas,
+                                        pallas_interpret=pallas_interpret)
 
 
 def _jamba_forward(p, cfg, batch):

@@ -22,6 +22,7 @@ from repro.core import hybrid_cache as hc
 from repro.core import paged_cache as pc
 from repro.core import swan_attention as swa
 from repro.core.winnow import rotate_k, rotate_q
+from repro.kernels.dispatch import pallas_decode_supported
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models import moe as moe_mod
@@ -254,7 +255,18 @@ def _swan_seq_ctx():
 
 def _swan_layer_decode(lp: Params, p_qk_l: jnp.ndarray, cache_l: Params,
                        cfg, swan, x: jnp.ndarray, pos,
-                       k_act=None, page_tab=None) -> Tuple[jnp.ndarray, Params]:
+                       k_act=None, page_tab=None, use_pallas: bool = False,
+                       pallas_interpret: Optional[bool] = None
+                       ) -> Tuple[jnp.ndarray, Params]:
+    """``use_pallas`` (STATIC bool) dispatches the attention read to the
+    fused Pallas kernels (repro.kernels.swan_decode) instead of the
+    pure-JAX gather/scatter path; cache INSERTION stays pure JAX either
+    way (a tiny lane-local scatter XLA handles fine — only the bulk read
+    is bandwidth-bound).  The kernel is lane-local, so it composes with
+    the engine's batch-sharded shard_map; split-S sequence sharding keeps
+    the pure-JAX flash-decoding path (the kernel has no cross-shard stat
+    merge), as do the truncate mode and bt=0 ablations
+    (``pallas_decode_supported``)."""
     B = x.shape[0]
     Kv, G, dh = cfg.n_kv_heads, cfg.q_group, cfg.d_head
     pos = hc.per_seq_pos(pos, B)                                 # [B]
@@ -263,17 +275,29 @@ def _swan_layer_decode(lp: Params, p_qk_l: jnp.ndarray, cache_l: Params,
     q_hat = rotate_q(q, p_qk_l, Kv)[:, 0]                        # [B,Kv,G,dh]
     k_hat = rotate_k(k, p_qk_l)                                  # [B,1→S dim,Kv,dh]
     mesh, seq_axis = _swan_seq_ctx()
+    kern = use_pallas and mesh is None and pallas_decode_supported(swan)
     if page_tab is None:
         cache_l = hc.swan_cache_insert_decode(cache_l, swan, cfg, k_hat, v,
                                               pos, k_act=k_act)
-        o = swa.swan_decode_attention(q_hat, cache_l, swan, cfg, pos,
-                                      mesh=mesh, seq_axis=seq_axis)
+        if kern and cache_l["k"]["vals"].shape[2] > 0:
+            from repro.kernels.swan_decode import ops as sdk
+            o = sdk.swan_decode_from_cache(q_hat, cache_l, swan, pos,
+                                           interpret=pallas_interpret)
+        else:
+            o = swa.swan_decode_attention(q_hat, cache_l, swan, cfg, pos,
+                                          mesh=mesh, seq_axis=seq_axis)
     else:
         cache_l = pc.paged_insert_decode(cache_l, swan, cfg, k_hat, v, pos,
                                          page_tab, k_act=k_act)
-        o = swa.swan_decode_attention_paged(q_hat, cache_l, swan, cfg, pos,
-                                            page_tab, mesh=mesh,
-                                            seq_axis=seq_axis)
+        if kern and page_tab.shape[1] > 0:
+            from repro.kernels.swan_decode import ops as sdk
+            o = sdk.swan_decode_paged_from_cache(q_hat, cache_l, swan, pos,
+                                                 page_tab,
+                                                 interpret=pallas_interpret)
+        else:
+            o = swa.swan_decode_attention_paged(q_hat, cache_l, swan, cfg,
+                                                pos, page_tab, mesh=mesh,
+                                                seq_axis=seq_axis)
     o = o.reshape(B, 1, Kv * G, dh)
     return attn.output_proj(lp["attn"], o), cache_l
 
@@ -375,7 +399,9 @@ def lm_prefill(p: Params, cfg, tokens: jnp.ndarray, caches: Params,
 def _swan_layer_prefill_chunk(lp: Params, p_qk_l, cache_l: Params, cfg, swan,
                               x: jnp.ndarray, slot, start, true_len,
                               positions, k_act=None, page_tab=None,
-                              prefix_len: Optional[int] = None
+                              prefix_len: Optional[int] = None,
+                              use_pallas: bool = False,
+                              pallas_interpret: Optional[bool] = None
                               ) -> Tuple[jnp.ndarray, Params]:
     """One layer of BATCHED chunked prefill against the batched serve
     state: gather the P selected slots' lanes (traced ``slot [P]``), attend
@@ -394,6 +420,16 @@ def _swan_layer_prefill_chunk(lp: Params, p_qk_l, cache_l: Params, cfg, swan,
     lane_ix = jnp.minimum(slot, n_slots - 1)             # clamped gather
     ring = {n: cache_l[n][lane_ix] for n in ("buf_k", "buf_v", "buf_pos")}
     out_l = dict(cache_l)
+    kern = (use_pallas and pallas_decode_supported(swan)
+            and _swan_seq_ctx()[0] is None)
+
+    def bulk_q():
+        # the bulk-stats kernel consumes the query-flattened layout that
+        # swan_chunk_prefill_attention uses internally: [P, Kv, S·G, dh]
+        P_, S_, Kv_, G_, dh_ = q_hat.shape
+        qf = q_hat.astype(jnp.float32).transpose(0, 2, 1, 3, 4)
+        return qf.reshape(P_, Kv_, S_ * G_, dh_)
+
     if page_tab is None:                                 # slab layout
         view = dict(ring)
         for n in ("k", "v"):
@@ -406,8 +442,19 @@ def _swan_layer_prefill_chunk(lp: Params, p_qk_l, cache_l: Params, cfg, swan,
             view[n] = jax.tree_util.tree_map(
                 lambda a: jax.lax.slice_in_dim(a, 0, pl, axis=2)[lane_ix],
                 cache_l[n])
+        stats = None
+        if kern and view["k"]["vals"].shape[2] > 0:
+            from repro.kernels.flash_prefill import swan_chunk as sck
+            sp_len = jnp.maximum(start - swan.buffer, 0)
+            stats = sck.swan_chunk_stats_pallas(
+                bulk_q(), view["k"]["vals"], view["k"]["idx"],
+                view["v"]["vals"], view["v"]["idx"], sp_len,
+                k_scale=view["k"].get("scale"),
+                v_scale=view["v"].get("scale"),
+                interpret=pallas_interpret)
         o = swa.swan_chunk_prefill_attention(q_hat, k_hat, v, view, swan,
-                                             cfg, start, true_len)
+                                             cfg, start, true_len,
+                                             sparse_stats=stats)
         dest, packed_k, packed_v, upd = hc.chunk_evict_winnow(
             ring, swan, k_hat, v, start, true_len, k_act=k_act)
         ring_new = {**ring, **upd}
@@ -417,9 +464,24 @@ def _swan_layer_prefill_chunk(lp: Params, p_qk_l, cache_l: Params, cfg, swan,
         page_rows = page_tab[lane_ix]                    # [P, Pg]
         lane = dict(ring)
         lane["pool"] = cache_l["pool"]
-        view = swa.paged_logical_view(lane, page_rows)
-        o = swa.swan_chunk_prefill_attention(q_hat, k_hat, v, view, swan,
-                                             cfg, start, true_len)
+        if kern and page_rows.shape[1] > 0:
+            # pool pages feed the kernel's VMEM tiles directly: no
+            # paged_logical_view materialisation on the chunk path either
+            from repro.kernels.flash_prefill import swan_chunk as sck
+            pk, pv = cache_l["pool"]["k"], cache_l["pool"]["v"]
+            sp_len = jnp.maximum(start - swan.buffer, 0)
+            stats = sck.swan_chunk_stats_paged_pallas(
+                bulk_q(), pk["vals"], pk["idx"], pv["vals"], pv["idx"],
+                sp_len, page_rows,
+                pool_k_scale=pk.get("scale"), pool_v_scale=pv.get("scale"),
+                interpret=pallas_interpret)
+            o = swa.swan_chunk_prefill_attention(q_hat, k_hat, v, ring,
+                                                 swan, cfg, start, true_len,
+                                                 sparse_stats=stats)
+        else:
+            view = swa.paged_logical_view(lane, page_rows)
+            o = swa.swan_chunk_prefill_attention(q_hat, k_hat, v, view,
+                                                 swan, cfg, start, true_len)
         lane = pc.paged_insert_prefill_chunk(lane, swan, cfg, k_hat, v,
                                              start, true_len, page_rows,
                                              k_act=k_act,
@@ -463,7 +525,9 @@ def lm_prefill_chunk_batched(p: Params, cfg, tokens: jnp.ndarray,
                              caches: Params, slot, start, swan=None,
                              projections: Optional[Params] = None,
                              k_active=None, true_len=None, page_tab=None,
-                             prefix_len: Optional[int] = None
+                             prefix_len: Optional[int] = None,
+                             use_pallas: bool = False,
+                             pallas_interpret: Optional[bool] = None
                              ) -> Tuple[jnp.ndarray, Params]:
     """Advance up to P slots' prefills by one chunk EACH against the
     engine's BATCHED serve state — ONE executable per step no matter how
@@ -495,6 +559,12 @@ def lm_prefill_chunk_batched(p: Params, cfg, tokens: jnp.ndarray,
     lane's first slab/dense rows, so the bulk-read transient follows the
     prompts so far instead of max_seq (the paged layout is already bounded
     by its shipped ``page_tab`` prefix).
+
+    ``use_pallas`` / ``pallas_interpret`` (STATIC): run the sparse-prefix
+    bulk read through the Pallas bulk-chunk kernel
+    (repro.kernels.flash_prefill.swan_chunk) — packed vectors expand once
+    in VMEM, and the paged variant gathers pool pages in-kernel instead of
+    materialising ``paged_logical_view``.
 
     VLM prefix embeddings are not supported on the chunked path (the
     engine's monolithic admission handles those prompts).
@@ -538,7 +608,8 @@ def lm_prefill_chunk_batched(p: Params, cfg, tokens: jnp.ndarray,
             h, cache_l = _swan_layer_prefill_chunk(
                 lp, p_qk_l, cache_l, cfg, swan, h, slot, start, true_len,
                 positions, k_act=k_eff, page_tab=page_tab,
-                prefix_len=prefix_len)
+                prefix_len=prefix_len, use_pallas=use_pallas,
+                pallas_interpret=pallas_interpret)
         else:
             h, cache_l = _dense_layer_prefill_chunk(lp, cache_l, cfg, h,
                                                     slot, start, positions,
@@ -558,7 +629,9 @@ def lm_prefill_chunk_batched(p: Params, cfg, tokens: jnp.ndarray,
 
 def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
                    swan=None, projections: Optional[Params] = None,
-                   k_active=None, page_tab=None) -> Tuple[jnp.ndarray, Params]:
+                   k_active=None, page_tab=None, use_pallas: bool = False,
+                   pallas_interpret: Optional[bool] = None
+                   ) -> Tuple[jnp.ndarray, Params]:
     """token [B] -> (logits [B, V], updated caches).
 
     ``pos``: scalar int32 (lockstep batch) or per-sequence [B] (continuous
@@ -569,6 +642,11 @@ def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
     ``page_tab``: optional int32 [B, max_pages] page table — ``caches`` is
     then the paged layout from ``init_paged_caches`` and sparse reads/writes
     go through the shared page pool (repro.core.paged_cache).
+
+    ``use_pallas`` / ``pallas_interpret`` (STATIC): dispatch the per-layer
+    attention read to the fused Pallas kernels — slab tiles or, paged, the
+    in-kernel page-table gather (see docs/kernels.md for the policy; the
+    pure-JAX path remains the reference and the fallback).
 
     Batch-shardability (audited for the mesh-sharded serve engine): the
     decode step is lane-local end to end — per-sequence ``pos``/``k_active``
@@ -600,7 +678,9 @@ def lm_decode_step(p: Params, cfg, token: jnp.ndarray, pos, caches: Params,
             k_eff = k_l if k_req is None else jnp.minimum(k_l, k_req)
             h, cache_l = _swan_layer_decode(lp, p_qk_l, cache_l, cfg, swan,
                                             h, pos, k_act=k_eff,
-                                            page_tab=page_tab)
+                                            page_tab=page_tab,
+                                            use_pallas=use_pallas,
+                                            pallas_interpret=pallas_interpret)
         else:
             h, cache_l = attn.attn_decode_dense(lp["attn"], cfg, h, pos, cache_l)
         x = x + h

@@ -151,6 +151,7 @@ numbers mean:
 from __future__ import annotations
 
 import inspect
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
@@ -162,6 +163,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import hybrid_cache as hc
 from repro.core import paged_cache as pc
+from repro.kernels.dispatch import (pallas_decode_supported,
+                                    resolve_interpret, resolve_use_pallas)
 from repro.models import get_model, swan_applicable
 from repro.obs.metrics import MetricsRegistry, NULL_REGISTRY
 from repro.obs.trace import EventTrace, StepProfiler
@@ -180,6 +183,13 @@ Params = Dict[str, Any]
 TTFT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
 GAP_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
 REQ_STEP_BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+# host-side dispatch submit latency in ms, measured WITHOUT a device sync
+# (async dispatch returns immediately once the executable is enqueued, so
+# this captures launch/retrace overhead, not device compute — wall-clock
+# step time lives in serve_loop's serve_step_ms); the kernel label says
+# which implementation backed the hot-path read
+DISPATCH_MS_BUCKETS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0,
+                       50.0, 100.0, 250.0, 1000.0, 4000.0)
 
 
 @dataclass
@@ -245,7 +255,8 @@ class ServeEngine:
                  prefill_budget: Optional[int] = None,
                  mesh=None, shard_params: bool = False,
                  pool_grow: bool = False, admission: str = "fifo",
-                 metrics=True, trace: Optional[EventTrace] = None):
+                 metrics=True, trace: Optional[EventTrace] = None,
+                 use_pallas: Optional[bool] = None):
         self.cfg = cfg
         # observability sink: a shared registry may be passed in; False
         # swaps in the no-op registry (the call sites stay unconditional,
@@ -306,6 +317,21 @@ class ServeEngine:
         # prompt bucketing needs true_len-aware prefill (transformer
         # families; recurrent state would absorb the padding junk)
         self._bucketing = bucket_prompts and "true_len" in prefill_sig
+        # Pallas fast path: the kernel-backed decode/chunk read replaces
+        # the pure-JAX gather when the family threads the flag AND the
+        # cache shape is kernel-eligible (topk + ring buffer). use_pallas
+        # None = auto: compiled kernels on TPU, off elsewhere (interpret
+        # mode stays available for tests by forcing use_pallas=True on
+        # CPU, where the kernels run under the Pallas interpreter).
+        pallas_ok = ("use_pallas" in decode_sig
+                     and pallas_decode_supported(self.swan))
+        self.use_pallas = resolve_use_pallas(use_pallas) and pallas_ok
+        if use_pallas and not pallas_ok:
+            raise ValueError(
+                "use_pallas=True but the model family or SWAN config has "
+                "no kernel path (needs transformer-family decode with "
+                "mode='topk' and buffer > 0)")
+        self._pallas_interpret = resolve_interpret(None)
         k_fill = 0 if self.swan is None else self.swan.k_max
 
         self.prefill_chunk = prefill_chunk
@@ -424,6 +450,9 @@ class ServeEngine:
                 kw["k_active"] = k_act
             if self.paged:
                 kw["page_tab"] = page_tab
+            if self.use_pallas:
+                kw["use_pallas"] = True
+                kw["pallas_interpret"] = self._pallas_interpret
             logits, state = self.api.decode_step(p, cfg, token, pos, state,
                                                  sw, pj, **kw)
             # device-side greedy sampling: ship back [B] token ids, not
@@ -463,6 +492,9 @@ class ServeEngine:
                     kw["k_active"] = k_act
                 if self.paged:
                     kw["page_tab"] = page_tab
+                if self.use_pallas:
+                    kw["use_pallas"] = True
+                    kw["pallas_interpret"] = self._pallas_interpret
                 logits, state = self.api.prefill_chunk(
                     p, cfg, {"tokens": tokens}, state, slot, start, sw, pj,
                     true_len=true_len, prefix_len=prefix_len, **kw)
@@ -527,6 +559,21 @@ class ServeEngine:
         # benchmark gates that per-step dispatch count is independent of
         # shard count (one chunk + one decode dispatch per step)
         self.dispatches = {"prefill": 0, "chunk": 0, "decode": 0}
+
+    def _obs_dispatch(self, kind: str, dt: float) -> None:
+        """Record one hot-path dispatch: which kernel implementation backed
+        it (pallas vs xla) and the host-side submit latency.  No device
+        sync happens here — ``dt`` brackets only the async dispatch call."""
+        kernel = "pallas" if self.use_pallas else "xla"
+        if self.use_pallas:
+            self.metrics.counter(
+                "serve_pallas_dispatch_total",
+                "hot-path dispatches backed by the Pallas kernels",
+                kind=kind).inc()
+        self.metrics.histogram(
+            "serve_dispatch_ms", DISPATCH_MS_BUCKETS,
+            "host-side dispatch submit latency (no device sync)",
+            kind=kind, kernel=kernel).observe(dt * 1e3)
 
     # ------------------------------------------------------------------
     # Scheduling
@@ -1009,9 +1056,11 @@ class ServeEngine:
         else:
             page_tab = np.zeros((), np.int32)           # unused operand
             prefix = min(self._pow2(int(start_v.max()) + C), self.max_seq)
+        t0 = time.perf_counter()
         logits, greedy, self.state = self._chunk_call(
             self.params, toks, self.state, slot_v, start_v, k_v, tlen_v,
             page_tab, prefix=prefix)
+        self._obs_dispatch("chunk", time.perf_counter() - t0)
         self.dispatches["chunk"] += 1
         self.metrics.counter("serve_dispatches_total",
                              "jitted dispatches by kind", kind="chunk").inc()
@@ -1141,9 +1190,11 @@ class ServeEngine:
                 page_tab = self._device_table(self._page_bucket(active))
             else:
                 page_tab = np.zeros((), np.int32)       # unused operand
+            t0 = time.perf_counter()
             logits, greedy, self.state = self._decode(
                 self.params, self.next_tok, self.slot_pos, self.slot_k,
                 page_tab, self.state)
+            self._obs_dispatch("decode", time.perf_counter() - t0)
             self.dispatches["decode"] += 1
             self.metrics.counter("serve_dispatches_total",
                                  "jitted dispatches by kind",
