@@ -1,0 +1,199 @@
+"""Executable-family warmup: cold vs warm TTFT, zero steady-state compiles.
+
+Exercises ``repro.runtime.warmup`` end-to-end on the serve engine:
+
+* **cold vs warm TTFT** — the first request on a cold engine pays JIT
+  compilation for the prefill chain plus the decode step; after
+  ``ServeEngine.warmup()`` the whole executable family is already
+  compiled, so the warm first-request TTFT must come in at <= 0.5x the
+  cold one (on CPU the gap is typically orders of magnitude).
+* **zero steady-state compiles** — after warmup, a randomized mixed
+  workload (mixed prompt lengths, per-request k, greedy and temperature
+  lanes) must trigger ZERO new XLA compiles, checked with the process
+  -global ``repro.obs.compile_events`` listener (which also sees eager
+  one-off ops the jit caches cannot) and a stable ``executable_census()``.
+  Gated on both the slab and the paged engine.
+* **warmup idempotency** — a second ``warmup()`` call compiles nothing.
+* **async fetch identity** — ``async_fetch=True`` (decode token transfer
+  overlapped with host scheduling) produces token-for-token identical
+  output, identical admission/first-token/finish steps, and identical
+  per-kind dispatch counts to the synchronous path.
+
+All prompts are prebuilt with numpy BEFORE any compile-count snapshot —
+materialising a prompt via ``make_batch`` traces eager slice ops at raw
+prompt lengths, which would pollute the zero-compile gates with compiles
+the serve path never issues.
+
+CPU-runnable; ``--smoke`` shrinks the family for CI (exercised on both
+JAX pins).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_record, emit, gate, record_metrics
+from repro.configs import SwanConfig, get_smoke_config
+from repro.launch.io import make_batch
+from repro.models import get_model
+from repro.obs import compile_events
+from repro.runtime.serve_engine import Request, ServeEngine
+from repro.runtime.serve_loop import calibrate_swan
+
+
+def _cfg():
+    return get_smoke_config("llama3-8b").replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, dtype="float32", param_dtype="float32")
+
+
+def _workload(cfg, prompt_cap, n_requests, seed=0):
+    """Randomized mixed workload; every prompt materialised up front."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.randint(1, prompt_cap + 1))
+        toks = [int(t) for t in
+                make_batch(cfg, 1, max(plen, 1), seed=300 + i)["tokens"][0]]
+        temp = float(rng.choice([0.0, 0.0, 0.7, 1.3]))
+        reqs.append(Request(
+            uid=f"req{i}", tokens=toks[:plen],
+            max_new_tokens=int(rng.randint(2, 5)),
+            temperature=temp, seed=int(rng.randint(0, 2**31 - 1)),
+            k=[None, 4, 8][int(rng.randint(0, 3))]))
+    return reqs
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, tokens=list(r.tokens),
+                    max_new_tokens=r.max_new_tokens,
+                    temperature=r.temperature, seed=r.seed, k=r.k)
+            for r in reqs]
+
+
+def _ttft_ms(engine, req):
+    """Wall-clock from submit to the first generated token, then drain."""
+    engine.submit(req)
+    t0 = time.perf_counter()
+    while engine.metrics.value("serve_tokens_generated_total") < 1:
+        engine.step()
+    dt = (time.perf_counter() - t0) * 1e3
+    while not engine.done:
+        engine.step()
+    return dt
+
+
+def _run(smoke: bool = False) -> None:
+    if smoke:
+        max_seq, chunk, pslots, prompt_cap, n_reqs = 32, 4, 2, 8, 6
+    else:
+        max_seq, chunk, pslots, prompt_cap, n_reqs = 64, 8, 2, 16, 8
+    n_slots, page_size = 2, 16
+
+    cfg = _cfg()
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    pj = calibrate_swan(api, cfg, params, make_batch(cfg, 2, 24, seed=3))
+    absorbed = api.absorb(params, cfg, pj)
+    swan = SwanConfig(k_max=8, buffer=4, mode="topk")
+
+    def engine(**kw):
+        return ServeEngine(cfg, absorbed, swan=swan, projections=pj,
+                           max_seq=max_seq, n_slots=n_slots,
+                           prefill_chunk=chunk, prefill_slots=pslots, **kw)
+
+    reqs = _workload(cfg, prompt_cap, n_reqs)
+    ttft_req = Request(uid="ttft", tokens=list(reqs[0].tokens),
+                       max_new_tokens=4, k=4)
+
+    # --- cold first-request TTFT (pays prefill-chain + decode JIT) --------
+    cold = engine()
+    cold_ms = _ttft_ms(cold, Request(uid="ttft", tokens=list(ttft_req.tokens),
+                                     max_new_tokens=4, k=4))
+    emit("warmup_ttft_cold", cold_ms * 1e3, f"prompt_len={len(ttft_req.tokens)}")
+
+    # --- warmed slab engine ----------------------------------------------
+    warm = engine()
+    rep = warm.warmup(max_prompt_len=prompt_cap)
+    emit("warmup_slab", rep["warmup_ms"] * 1e3,
+         f"compiles={rep['compiles']};census={rep['census']['total']};"
+         f"items={len(rep['items'])}")
+    rep2 = warm.warmup(max_prompt_len=prompt_cap)
+    gate("warmup_idempotent_slab", rep2["compiles"] == 0,
+         f"second warmup compiled {rep2['compiles']}")
+
+    warm_ms = _ttft_ms(warm, Request(uid="ttft", tokens=list(ttft_req.tokens),
+                                     max_new_tokens=4, k=4))
+    ratio = warm_ms / cold_ms
+    emit("warmup_ttft_warm", warm_ms * 1e3, f"ratio_vs_cold={ratio:.4f}")
+    gate("warm_ttft_le_half_cold", ratio <= 0.5,
+         f"warm {warm_ms:.1f}ms vs cold {cold_ms:.1f}ms (ratio {ratio:.3f})")
+
+    # --- post-warmup randomized workload: zero new compiles --------------
+    census0 = warm.executable_census()
+    c0 = compile_events.total()
+    t0 = time.perf_counter()
+    comps_sync = warm.run(_clone(reqs))
+    dt = time.perf_counter() - t0
+    dc = compile_events.total() - c0
+    census1 = warm.executable_census()
+    n_tok = sum(len(c.tokens) for c in comps_sync)
+    emit("warmup_steady_state_slab", dt / max(n_tok, 1) * 1e6,
+         f"reqs={len(comps_sync)};tokens={n_tok};new_compiles={dc}")
+    gate("zero_steady_state_compiles_slab", dc == 0 and census1 == census0,
+         f"new_compiles={dc} census_delta="
+         f"{census1['total'] - census0['total']}")
+    record_metrics(warm.metrics, "slab")
+
+    # --- paged engine: warmup + zero-compile workload ---------------------
+    pg = engine(paged=True, page_size=page_size)
+    prep = pg.warmup(max_prompt_len=prompt_cap)
+    emit("warmup_paged", prep["warmup_ms"] * 1e3,
+         f"compiles={prep['compiles']};census={prep['census']['total']}")
+    gate("warmup_idempotent_paged",
+         pg.warmup(max_prompt_len=prompt_cap)["compiles"] == 0,
+         "second paged warmup compiled")
+    pcensus0 = pg.executable_census()
+    c0 = compile_events.total()
+    comps_paged = pg.run(_clone(reqs))
+    dc = compile_events.total() - c0
+    gate("zero_steady_state_compiles_paged",
+         dc == 0 and pg.executable_census() == pcensus0,
+         f"new_compiles={dc}")
+    assert len(comps_paged) == len(reqs)
+
+    # --- async fetch: token/step/dispatch identity to the sync path -------
+    e_sync = engine()
+    e_async = engine(async_fetch=True)
+    c1 = e_sync.run(_clone(reqs))
+    c2 = e_async.run(_clone(reqs))
+    t1 = {c.uid: c.tokens for c in c1}
+    t2 = {c.uid: c.tokens for c in c2}
+    s1 = {c.uid: (c.admitted_step, c.first_token_step, c.finished_step)
+          for c in c1}
+    s2 = {c.uid: (c.admitted_step, c.first_token_step, c.finished_step)
+          for c in c2}
+    gate("async_token_identity", t1 == t2 and s1 == s2,
+         "async fetch must be token- and step-identical to sync")
+    gate("async_dispatch_counts", e_sync.dispatches == e_async.dispatches,
+         f"sync={e_sync.dispatches} async={e_async.dispatches}")
+    # warmed sync run above is the same workload: async == warmed too
+    gate("async_matches_warmed",
+         t2 == {c.uid: c.tokens for c in comps_sync},
+         "async tokens must match the warmed sync run")
+
+
+def run(smoke: bool = False) -> None:
+    with bench_record("warmup"):
+        _run(smoke=smoke)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small executable family for CI")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

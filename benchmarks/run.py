@@ -23,7 +23,8 @@ from benchmarks import (bench_adaptive_k, bench_breakeven,
                         bench_kernels, bench_longcontext_error,
                         bench_memory_footprint, bench_paged_cache,
                         bench_serve_engine, bench_table1_retention,
-                        bench_table2_kv_split, bench_table3_projection)
+                        bench_table2_kv_split, bench_table3_projection,
+                        bench_warmup)
 from benchmarks.common import bench_out_dir
 
 MODULES = [
@@ -38,6 +39,7 @@ MODULES = [
     ("adaptive_k", bench_adaptive_k),          # beyond-paper extension
     ("serve_engine", bench_serve_engine),      # continuous batching
     ("paged_cache", bench_paged_cache),        # memory follows live tokens
+    ("warmup", bench_warmup),                  # executable-family warmup
     ("kernels", bench_kernels),
 ]
 

@@ -72,6 +72,13 @@ def main():
                     help="print a periodic stats line every N engine steps "
                          "(queue depth, active lanes, tokens, live cache "
                          "bytes, TTFT p50 — read off engine.metrics)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile each engine's full executable family "
+                         "before its first request (repro.runtime.warmup) "
+                         "— the bench timings then contain zero JIT cost")
+    ap.add_argument("--async-fetch", action="store_true",
+                    help="overlap host scheduling with the decode token "
+                         "transfer (token-identical to the sync path)")
     args = ap.parse_args()
     if ((args.prefill_slots > 1 or args.prefill_budget is not None)
             and not args.prefill_chunk):
@@ -111,6 +118,11 @@ def main():
               f"ttft p50 ~{p50} steps")
 
     def bench(engine, reqs, tag):
+        if args.warmup:
+            rep = engine.warmup(max_prompt_len=args.prompt_len)
+            print(f"[{tag:>6}] warmup: {rep['census']['total']} executables"
+                  f", {rep['compiles']} compiles in "
+                  f"{rep['warmup_ms']:.0f} ms")
         t0 = time.perf_counter()
         if args.stats_every > 0:
             # step manually so we can read the per-step gauges mid-flight
@@ -135,7 +147,8 @@ def main():
     dense = ServeEngine(cfg, params, max_seq=args.max_seq, n_slots=args.slots,
                         prefill_chunk=args.prefill_chunk,
                         prefill_slots=args.prefill_slots,
-                        prefill_budget=args.prefill_budget, mesh=mesh)
+                        prefill_budget=args.prefill_budget, mesh=mesh,
+                        async_fetch=args.async_fetch)
     bench(dense, requests([None]), "dense")
 
     if not args.no_swan:
@@ -150,7 +163,8 @@ def main():
                           prefill_chunk=args.prefill_chunk,
                           prefill_slots=args.prefill_slots,
                           prefill_budget=args.prefill_budget, mesh=mesh,
-                          use_pallas=args.use_pallas)
+                          use_pallas=args.use_pallas,
+                          async_fetch=args.async_fetch)
         # per-request runtime-tunable compression: mix full and half k
         bench(eng, requests([k_max, max(k_max // 2, 1)]), "swan")
         print(f"        decode executables for the mixed-k batch: "
@@ -163,7 +177,8 @@ def main():
                              prefill_chunk=args.prefill_chunk,
                              prefill_slots=args.prefill_slots,
                              prefill_budget=args.prefill_budget, mesh=mesh,
-                             use_pallas=args.use_pallas)
+                             use_pallas=args.use_pallas,
+                             async_fetch=args.async_fetch)
             bench(pg, requests([k_max, max(k_max // 2, 1)]), "paged")
             rep = pg.cache_report()
             print(f"        paged: slab layout would reserve "

@@ -10,7 +10,17 @@ AOT-lowers the ServeEngine's chunk/decode executables over a
         compile universe at O(log max_seq): ONE decode executable per
         page bucket (exactly one for slab), one chunk executable per
         (lane, chunk, prefix) bucket, and an identical workload re-run
-        compiles NOTHING new;
+        compiles NOTHING new.  Counting goes through
+        ``ServeEngine.executable_census()`` — decode, prefill, the chunk
+        family, both admission inserts and pool-grow — so no family can
+        silently escape the bounds;
+  (i')  the warmup contract (``warmup_checks``) — after
+        ``ServeEngine.warmup()`` the census covers every bucket the
+        scheduler can legally request (``repro.runtime.warmup.
+        executable_family``), a second warmup compiles nothing, and a
+        randomized mixed workload (mixed k, temperatures, prompt lengths
+        spanning the chunk/page/prefix buckets) triggers ZERO new XLA
+        compiles (``repro.obs.compile_events``);
   (ii)  zero host transfers inside dispatch bodies — no infeed/outfeed,
         no host sends/recvs, no S(5) copies, no MoveToHost annotations
         (the designed host fetch points live OUTSIDE the executables);
@@ -39,7 +49,7 @@ from repro.analysis.hlo import analyze_hlo, transfer_stats
 
 __all__ = ["AuditCheck", "transfer_check", "collective_check",
            "count_check", "logical_view_check", "kernel_precheck_checks",
-           "audit_lowered", "run_audit"]
+           "audit_lowered", "warmup_checks", "run_audit"]
 
 
 @dataclass
@@ -244,12 +254,18 @@ def _drive(eng, prompts, max_new: int = 3) -> None:
 
 def _exec_count_checks(make_engine, label: str, prompts,
                        paged: bool) -> List[AuditCheck]:
-    """(i): drive a mixed-length workload, bound the compile universe,
-    then re-run the identical workload and require zero new compiles."""
+    """(i): drive a mixed-length workload, bound the compile universe
+    family by family via ``executable_census()`` (decode, prefill, the
+    chunk family, BOTH admission inserts and pool-grow — the families the
+    old decode/prefill-only counting missed), then re-run the identical
+    workload and require zero new compiles anywhere."""
     out: List[AuditCheck] = []
     eng = make_engine()
     _drive(eng, prompts)
-    dec, pre = eng.decode_cache_size, eng.prefill_cache_size
+    try:
+        census = eng.executable_census()
+    except RuntimeError as e:
+        return [AuditCheck(f"exec-count/{label}", "skip", str(e))]
     if paged:
         dec_bound = _log2_buckets(eng.pool.pages_per_seq)
     else:
@@ -260,20 +276,118 @@ def _exec_count_checks(make_engine, label: str, prompts,
                    * _log2_buckets(eng.prefill_chunk or 1)
                    * _log2_buckets(eng.pool.pages_per_seq if paged
                                    else eng.max_seq))
-    out.append(count_check(f"{label}/decode", dec, dec_bound,
+    out.append(count_check(f"{label}/decode", census["decode"], dec_bound,
                            "decode executables"))
-    out.append(count_check(f"{label}/prefill+chunk", pre, 1 + chunk_bound,
-                           "prefill executables"))
+    out.append(count_check(f"{label}/prefill+chunk",
+                           census["prefill"] + census["chunk_total"],
+                           1 + chunk_bound, "prefill executables"))
+    # admission inserts compile once per monolithic prompt pad bucket
+    # (zero on the chunked path); pool-grow once per growth delta
+    out.append(count_check(f"{label}/insert",
+                           census["insert"] + census["insert_paged"],
+                           _log2_buckets(eng.max_seq), "insert executables"))
+    out.append(count_check(f"{label}/pool-grow", census["pool_grow_total"],
+                           _log2_buckets(eng.max_seq), "grow executables"))
     _drive(eng, prompts)                       # identical workload again
-    dec2, pre2 = eng.decode_cache_size, eng.prefill_cache_size
-    if (dec2, pre2) != (dec, pre):
+    census2 = eng.executable_census()
+    if census2 != census:
         out.append(AuditCheck(
             f"exec-count/{label}/steady-state", "fail",
-            f"identical workload recompiled: decode {dec}->{dec2}, "
-            f"prefill {pre}->{pre2}"))
+            f"identical workload recompiled: {census} -> {census2}"))
     else:
         out.append(AuditCheck(f"exec-count/{label}/steady-state", "pass",
-                              "no new executables on identical re-run"))
+                              "no new executables on identical re-run "
+                              "(full census stable)"))
+    return out
+
+
+def _mixed_workload(vocab: int, max_prompt_len: int, seed: int = 0):
+    """Randomized mixed serve workload for the post-warmup zero-compile
+    gate: prompt lengths spanning the chunk/page/prefix buckets, mixed
+    per-request SWAN k, greedy and temperature lanes.  Token ids come from
+    seeded numpy (NOT jnp slicing — building the workload itself must not
+    compile anything)."""
+    import numpy as np
+    from repro.runtime.serve_engine import Request
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for u in range(8):
+        plen = int(rng.randint(1, max_prompt_len + 1))
+        reqs.append(Request(
+            uid=f"w{u}",
+            tokens=rng.randint(0, vocab, size=plen).tolist(),
+            max_new_tokens=int(rng.randint(2, 5)),
+            temperature=float(rng.choice([0.0, 0.0, 0.7, 1.3])),
+            seed=int(rng.randint(0, 2 ** 16)),
+            k=[None, 4, 8][int(rng.randint(0, 3))]))
+    return reqs
+
+
+def warmup_checks(make_engine, label: str, vocab: int,
+                  max_prompt_len: int = 16) -> List[AuditCheck]:
+    """The warmup contract, machine-checked:
+
+    (a) coverage — after ``warmup()`` the executable census meets the
+        static family enumeration bucket by bucket (any legally
+        requestable bucket absent from the warmed family fails);
+    (b) idempotency — a second ``warmup()`` compiles nothing;
+    (c) zero steady-state compiles — a randomized mixed workload (mixed
+        k, temperatures, prompt lengths spanning the buckets) triggers
+        zero XLA compiles and leaves the census bit-identical.
+    """
+    from repro.obs import compile_events
+    out: List[AuditCheck] = []
+    eng = make_engine()
+    try:
+        report = eng.warmup(max_prompt_len=max_prompt_len)
+    except Exception as e:
+        return [AuditCheck(f"warmup/{label}", "fail", repr(e))]
+    census, exp = report["census"], report["expected"]
+    missing = [f"{fam}: {census[fam]} < {exp[fam]}"
+               for fam in ("decode", "prefill", "insert", "insert_paged")
+               if census[fam] < exp[fam]]
+    missing += [f"chunk[{key}]: {census['chunk'].get(key, 0)} < {n}"
+                for key, n in exp["chunk"].items()
+                if census["chunk"].get(key, 0) < n]
+    if missing:
+        out.append(AuditCheck(
+            f"warmup/{label}/coverage", "fail",
+            "legally-requestable buckets absent from the warmed family: "
+            + "; ".join(missing)))
+    else:
+        out.append(AuditCheck(
+            f"warmup/{label}/coverage", "pass",
+            f"census covers the enumerated family "
+            f"({census['total']} executables, "
+            f"{report['compiles']} compiles in "
+            f"{report['warmup_ms']:.0f} ms)"))
+    rep2 = eng.warmup(max_prompt_len=max_prompt_len)
+    if rep2["compiles"]:
+        out.append(AuditCheck(
+            f"warmup/{label}/idempotent", "fail",
+            f"second warmup compiled {rep2['compiles']} executable(s): "
+            f"{[r for r in rep2['items'] if r['compiles']][:3]}"))
+    else:
+        out.append(AuditCheck(f"warmup/{label}/idempotent", "pass",
+                              "second warmup compiled nothing"))
+    reqs = _mixed_workload(vocab, max_prompt_len)
+    c0 = compile_events.total()
+    for r in reqs:
+        eng.submit(r)
+    while not eng.done:
+        eng.step()
+    dc = compile_events.total() - c0
+    census2 = eng.executable_census()
+    if dc or census2 != census:
+        out.append(AuditCheck(
+            f"warmup/{label}/zero-compile", "fail",
+            f"post-warmup mixed workload compiled {dc} executable(s); "
+            f"census {'stable' if census2 == census else 'DRIFTED'}"))
+    else:
+        out.append(AuditCheck(
+            f"warmup/{label}/zero-compile", "pass",
+            f"{len(reqs)}-request mixed workload: 0 compiles, census "
+            "stable"))
     return out
 
 
@@ -325,6 +439,10 @@ def run_audit(smoke: bool = True) -> List[AuditCheck]:
             # across read-path implementations — drive them once per layout
             checks += _exec_count_checks(make_engine, label, prompts(),
                                          paged=kw.get("paged", False))
+            # warmup contract: full-family coverage, idempotency, zero
+            # compiles under a randomized mixed workload (also once per
+            # layout — the family enumeration is read-path independent)
+            checks += warmup_checks(make_engine, label, cfg.vocab_size)
         eng = make_engine()
         checks += audit_lowered(eng, label)
         if kw.get("paged"):

@@ -21,8 +21,8 @@ SWAN102  Host sync on the serve hot path: ``.item()``,
          ``float()/int()/bool()/np.asarray()`` applied to values
          tainted by a jitted-dispatch result, in any function reachable
          from an engine's ``step()``/``run()`` loop.  Known host fetch
-         points (``_lane_tokens``, ``_sample``) are allowlisted — those
-         are where tokens are SUPPOSED to cross.
+         points (``_resolve_tokens``, ``_lane_tokens``, ``_sample``) are
+         allowlisted — those are where tokens are SUPPOSED to cross.
 SWAN103  Shape bucketing: non-power-of-two literal dims in array
          constructors inside dispatch-builder functions under
          ``runtime/`` / ``models/`` — a stray literal like 48 mints a
@@ -75,8 +75,10 @@ POST_FLOOR_APIS = (
 
 # known host fetch points: the functions whose JOB is to move sampled
 # tokens/logits across the device boundary (engine docstrings state the
-# contract; everything else reachable from step() must stay device-side)
-HOST_FETCH_ALLOWLIST = ("_lane_tokens", "_sample")
+# contract; everything else reachable from step() must stay device-side).
+# _resolve_tokens is the async-fetch sync point: _start_fetch issues the
+# copy, _resolve_tokens is where the host finally blocks on it.
+HOST_FETCH_ALLOWLIST = ("_resolve_tokens", "_lane_tokens", "_sample")
 
 # sync primitives flagged unconditionally on the hot path
 _SYNC_ATTRS = ("item", "block_until_ready")

@@ -91,6 +91,24 @@ def main():
                          "chunk attention read (default: auto — compiled "
                          "kernels on TPU, pure-JAX elsewhere; forcing on "
                          "CPU runs the kernels under the interpreter)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="engine: pre-compile the FULL executable family "
+                         "before the first request (repro.runtime.warmup) "
+                         "— no mid-serve JIT cliffs; prints the warmup "
+                         "report summary")
+    ap.add_argument("--max-prompt-len", type=int, default=None,
+                    help="engine: trim the warmed prefix family to prompts "
+                         "of at most this many tokens (default max-seq); "
+                         "longer prompts still serve — their buckets just "
+                         "compile lazily")
+    ap.add_argument("--async-fetch", action="store_true",
+                    help="engine: overlap host scheduling with the decode "
+                         "token transfer (copy_to_host_async at dispatch, "
+                         "resolved at the next step; token-identical)")
+    ap.add_argument("--compilation-cache-dir", default=None,
+                    help="persist JAX's compilation cache here so engine "
+                         "restarts reload compiled executables from disk "
+                         "instead of recompiling the family")
     ap.add_argument("--admission", default="fifo", choices=["fifo", "srf"],
                     help="engine: admission policy — fifo, or srf "
                          "(shortest-remaining-first: bounds TTFT when the "
@@ -126,6 +144,13 @@ def main():
     if args.use_pallas and not (args.engine and args.swan):
         raise SystemExit("--use-pallas requires --engine and --swan "
                          "(the kernels back the SWAN serve read path)")
+    if (args.warmup or args.async_fetch) and not args.engine:
+        raise SystemExit("--warmup/--async-fetch require --engine")
+    if args.compilation_cache_dir:
+        # before any compile happens, so the whole family lands on disk
+        from repro.runtime.warmup import enable_compilation_cache
+        enable_compilation_cache(args.compilation_cache_dir)
+        print(f"compilation cache -> {args.compilation_cache_dir}")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     api = get_model(cfg)
@@ -206,7 +231,13 @@ def _run_engine(cfg, params, swan, projections, args):
                       prefill_budget=args.prefill_budget,
                       mesh=mesh, pool_grow=args.pool_grow,
                       admission=args.admission, trace=trace,
-                      use_pallas=args.use_pallas)
+                      use_pallas=args.use_pallas,
+                      async_fetch=args.async_fetch)
+    if args.warmup:
+        rep = eng.warmup(max_prompt_len=args.max_prompt_len)
+        print(f"warmup: {rep['census']['total']} executables, "
+              f"{rep['compiles']} compiles in {rep['warmup_ms']:.0f} ms "
+              f"({ {k: v['compiles'] for k, v in rep['by_kind'].items()} })")
     if args.profile_steps:
         eng.profile_steps(args.profile_steps, args.profile_dir)
     if mesh is not None:

@@ -8,6 +8,11 @@ Two host-side primitives threaded through the serving stack:
   every dispatch boundary: no wall-clock reads or metric updates ever
   happen inside jitted code, and device-side quantities are step-indexed
   (engine scheduler steps), never timed.
+* :mod:`repro.obs.compile_events` — a process-global XLA compile
+  counter fed by ``jax.monitoring`` backend-compile events.  Backs the
+  engine's ``serve_compile_total`` counter and every zero-compile gate
+  (warmup coverage, steady-state recompile checks): unlike jit-cache
+  introspection it also sees eager one-off executables.
 * :mod:`repro.obs.trace` — a structured JSONL event trace (admission,
   chunk dispatch, first token, decode dispatch, retirement, page
   map/free, pool grow/exhaustion, …) keyed by request uid and engine
@@ -19,6 +24,7 @@ The contract the serve tests pin: metrics/tracing on vs off produces
 IDENTICAL tokens and IDENTICAL dispatch counts — the subsystem observes
 the engine, it never participates in it (tests/test_obs_engine.py).
 """
+from repro.obs import compile_events
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                NULL_REGISTRY, NullRegistry,
                                parse_prometheus)
@@ -27,5 +33,5 @@ from repro.obs.trace import EventTrace, StepProfiler, span
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullRegistry",
     "NULL_REGISTRY", "parse_prometheus", "EventTrace", "StepProfiler",
-    "span",
+    "span", "compile_events",
 ]

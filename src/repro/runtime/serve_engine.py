@@ -147,6 +147,20 @@ numbers mean:
     bucketed over DECODING slots' mapped pages).  The host-resident full
     table is scheduler state, not device memory; only this prefix rides
     along on dispatches.
+
+Executable warmup (``warmup()``; ``repro.runtime.warmup``): every shape
+the scheduler can legally request is enumerable from static config —
+decode page buckets, the chunk ``(prefix, P, C)`` matrix, prefill/insert
+pads, the eager sampling/fetch one-offs.  ``warmup()`` dummy-dispatches
+that whole family through the same jitted callables ``step()`` uses
+(dead-lane operands, donation threaded through), so post-warmup traffic
+triggers ZERO new XLA compiles (``executable_census()`` + the
+process-global ``repro.obs.compile_events`` listener; machine-checked by
+the swanlint Layer-2 ``warmup_checks`` and ``bench_warmup``).  With
+``async_fetch=True`` the decode token transfer starts asynchronously at
+dispatch and resolves at the top of the NEXT step, overlapping the copy
+with host scheduling — token-, step- and dispatch-identical to the sync
+path.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -166,6 +180,7 @@ from repro.core import paged_cache as pc
 from repro.kernels.dispatch import (pallas_decode_supported,
                                     resolve_interpret, resolve_use_pallas)
 from repro.models import get_model, swan_applicable
+from repro.obs import compile_events
 from repro.obs.metrics import MetricsRegistry, NULL_REGISTRY
 from repro.obs.trace import EventTrace, StepProfiler
 from repro.runtime.page_pool import PagePool, PagePoolExhausted
@@ -225,6 +240,31 @@ class Completion:
     first_token_step: int = -1
 
 
+class _PendingTokens:
+    """An in-flight device->host token fetch.
+
+    Created at the decode/chunk dispatch site: the tiny greedy ``[N]`` id
+    vector and (only when temperature lanes exist) a power-of-two-bucketed
+    gather of their logits rows start their host copies IMMEDIATELY via
+    ``copy_to_host_async`` — so the transfer overlaps whatever host-side
+    scheduling work runs next — and ``ServeEngine._resolve_tokens`` is the
+    single designed point where the host finally blocks on the values.
+    ``step`` pins the engine step that DISPATCHED the fetch, so deferred
+    resolution (``async_fetch=True``) stamps completions, TTFT histograms
+    and trace events with the same step the synchronous path would.
+    """
+
+    __slots__ = ("greedy", "rows", "temp", "picks", "step", "lanes")
+
+    def __init__(self, greedy, rows, temp, picks, step, lanes):
+        self.greedy = greedy      # device [N] int32 (argmax ids)
+        self.rows = rows          # device [pow2(n_temp), V] or None
+        self.temp = temp          # lane ids of temperature picks, in order
+        self.picks = picks        # [(lane, Request, draw_index)]
+        self.step = step          # engine step of the dispatch
+        self.lanes = lanes        # slot ids (decode) — None for chunk
+
+
 @dataclass
 class _Slot:
     """Slot state machine: ``prefilling`` (chunked admission in flight;
@@ -256,8 +296,13 @@ class ServeEngine:
                  mesh=None, shard_params: bool = False,
                  pool_grow: bool = False, admission: str = "fifo",
                  metrics=True, trace: Optional[EventTrace] = None,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 async_fetch: bool = False):
         self.cfg = cfg
+        # passive process-global compile counting (repro.obs.compile_events)
+        # — lets dispatch sites report mid-serve compiles into metrics and
+        # lets warmup/audit gate "zero compiles after warmup()"
+        compile_events.install()
         # observability sink: a shared registry may be passed in; False
         # swaps in the no-op registry (the call sites stay unconditional,
         # which is what lets tests prove on == off token-for-token)
@@ -541,6 +586,21 @@ class ServeEngine:
             self._prefill, self._decode = prefill_fn, decode_fn
             self._insert, self._insert_paged = insert_fn, insert_paged_fn
 
+        # overlapped host/device step: defer the decode token fetch so all
+        # host scheduling work of the NEXT step (admission, chunk packing,
+        # table upload) runs while the copy is in flight — token-identical
+        # to the synchronous path (tests/test_warmup.py)
+        self.async_fetch = bool(async_fetch)
+        self._pending: Optional[_PendingTokens] = None
+        # jitted pool-grow executables keyed by the page delta, so repeated
+        # grows of the same size reuse one compile (and land in the census)
+        self._grow_fns: Dict[int, Any] = {}
+        # set by warmup(): the executable family has been pre-compiled;
+        # pool growth re-warms because it reshapes every state-carrying
+        # executable's operands
+        self._warmed = False
+        self.warmup_report: Optional[Dict[str, Any]] = None
+
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.slot_pos = np.full((n_slots,), -1, np.int32)   # next decode position
@@ -560,10 +620,14 @@ class ServeEngine:
         # shard count (one chunk + one decode dispatch per step)
         self.dispatches = {"prefill": 0, "chunk": 0, "decode": 0}
 
-    def _obs_dispatch(self, kind: str, dt: float) -> None:
+    def _obs_dispatch(self, kind: str, dt: float, compiles: int = 0) -> None:
         """Record one hot-path dispatch: which kernel implementation backed
-        it (pallas vs xla) and the host-side submit latency.  No device
-        sync happens here — ``dt`` brackets only the async dispatch call."""
+        it (pallas vs xla), the host-side submit latency, and any XLA
+        compiles the dispatch triggered (``compiles`` is the
+        ``compile_events.total()`` delta bracketing the call — zero in
+        steady state, and zero from the very first request once
+        :meth:`warmup` has run).  No device sync happens here — ``dt``
+        brackets only the async dispatch call."""
         kernel = "pallas" if self.use_pallas else "xla"
         if self.use_pallas:
             self.metrics.counter(
@@ -574,6 +638,11 @@ class ServeEngine:
             "serve_dispatch_ms", DISPATCH_MS_BUCKETS,
             "host-side dispatch submit latency (no device sync)",
             kind=kind, kernel=kernel).observe(dt * 1e3)
+        if compiles:
+            self.metrics.counter(
+                "serve_compile_total",
+                "XLA backend compiles by phase (warmup vs mid-serve)",
+                phase="serve", kind=kind).inc(compiles)
 
     # ------------------------------------------------------------------
     # Scheduling
@@ -612,24 +681,94 @@ class ServeEngine:
 
     @property
     def done(self) -> bool:
-        return not self.queue and self.n_active == 0
+        # an unresolved async token fetch means tokens (and possibly
+        # retirements) are still owed — one more step() resolves it
+        return (not self.queue and self.n_active == 0
+                and self._pending is None)
+
+    @staticmethod
+    def _jit_cache_size(fn, what: str) -> int:
+        """Compiled-executable count of one jitted callable.  Raises
+        instead of guessing when the jit cache is not introspectable —
+        a silent ``-1`` here once left the audit's executable-count
+        bounds blind."""
+        size = getattr(fn, "_cache_size", None)
+        if not callable(size):
+            raise RuntimeError(
+                f"jit cache size not introspectable for the {what} "
+                "dispatch on this JAX build — the executable census "
+                "(and the swanlint count bounds) cannot run")
+        return size()
+
+    def executable_census(self) -> Dict[str, Any]:
+        """Compiled-executable counts for EVERY jitted dispatch family the
+        engine owns: decode, monolithic prefill, the chunk family (keyed
+        by its static slab read-prefix bucket; ``"paged"`` for the
+        table-prefix-bounded paged family), the two admission inserts and
+        the pool-grow executables (keyed by page delta).  This is the one
+        counting surface — the ``decode_cache_size``/``prefill_cache_size``
+        properties, :meth:`warmup` and the swanlint Layer-2 audit all read
+        it, so none of them can silently go blind.  Requires ``jit=True``
+        (a no-jit engine has no compiled executables to count)."""
+        if not self._jit:
+            raise RuntimeError("executable_census requires jit=True")
+        chunk = {("paged" if p is None else str(p)):
+                 self._jit_cache_size(fn, f"chunk[prefix={p}]")
+                 for p, fn in self._chunk_fns.items()}
+        grow = {str(extra): self._jit_cache_size(fn, f"pool_grow[{extra}]")
+                for extra, fn in self._grow_fns.items()}
+        census: Dict[str, Any] = {
+            "decode": self._jit_cache_size(self._decode, "decode"),
+            "prefill": self._jit_cache_size(self._prefill, "prefill"),
+            "chunk": chunk,
+            "chunk_total": sum(chunk.values()),
+            "insert": self._jit_cache_size(self._insert, "insert"),
+            "insert_paged": self._jit_cache_size(self._insert_paged,
+                                                 "insert_paged"),
+            "pool_grow": grow,
+            "pool_grow_total": sum(grow.values()),
+        }
+        census["total"] = (census["decode"] + census["prefill"]
+                           + census["chunk_total"] + census["insert"]
+                           + census["insert_paged"]
+                           + census["pool_grow_total"])
+        return census
 
     @property
     def decode_cache_size(self) -> int:
-        """Compiled decode executables (1 == mixed-k batches share one)."""
-        size = getattr(self._decode, "_cache_size", None)
-        return size() if callable(size) else -1
+        """Compiled decode executables (1 == mixed-k batches share one);
+        0 for a no-jit engine."""
+        if not self._jit:
+            return 0
+        return self.executable_census()["decode"]
 
     @property
     def prefill_cache_size(self) -> int:
         """Compiled prefill executables, monolithic + chunked (bucketing
-        keeps the total <= O(log max_seq))."""
-        total = -1
-        for fn in [self._prefill] + list(self._chunk_fns.values()):
-            size = getattr(fn, "_cache_size", None)
-            if callable(size):
-                total = size() if total < 0 else total + size()
-        return total
+        keeps the total <= O(log max_seq)); 0 for a no-jit engine."""
+        if not self._jit:
+            return 0
+        c = self.executable_census()
+        return c["prefill"] + c["chunk_total"]
+
+    def warmup(self, max_prompt_len: Optional[int] = None) -> Dict[str, Any]:
+        """Pre-compile the engine's ENTIRE executable family before the
+        first request: every (prompt-chunk x lane x slab-prefix /
+        page-table-prefix) bucket the scheduler can legally dispatch, plus
+        the host-side fetch/sampling shapes — so no request ever eats a
+        mid-serve JIT compile.  Delegates to
+        :func:`repro.runtime.warmup.warmup_engine` (dead-lane no-op
+        dispatches through the SAME jitted callables ``step()`` uses,
+        which is what actually populates the dispatch cache — an AOT
+        ``lower().compile()`` would not).  Idempotent: a second call
+        compiles nothing.  Returns the warmup report (also kept on
+        ``self.warmup_report``); ``max_prompt_len`` trims the slab
+        read-prefix family when the operator bounds admitted prompts."""
+        from repro.runtime.warmup import warmup_engine
+        report = warmup_engine(self, max_prompt_len=max_prompt_len)
+        self._warmed = True
+        self.warmup_report = report
+        return report
 
     def shard_of(self, slot: int) -> int:
         """Which mesh shard owns ``slot`` (0 on a single device)."""
@@ -644,19 +783,98 @@ class ServeEngine:
         key = jax.random.fold_in(jax.random.PRNGKey(req.seed), n_prev)
         return int(sample_token(logits, req.temperature, key))
 
-    def _lane_tokens(self, logits, greedy, picks) -> List[int]:
-        """One token per (lane, request, draw-index) triple against device
-        ``logits [N, V]`` / ``greedy [N]``: greedy lanes take the device
-        argmax ([N] ints, tiny), and ONLY the temperature lanes' [V] rows
-        are gathered on device before the host transfer — a greedy batch
-        never round-trips the full logits."""
-        greedy = np.asarray(greedy)
+    def _start_fetch(self, logits, greedy, picks, step: int,
+                     lanes=None) -> _PendingTokens:
+        """Issue the device->host token transfer WITHOUT blocking: greedy
+        lanes take the device argmax ([N] ints, tiny), and ONLY the
+        temperature lanes' [V] rows are gathered on device — a greedy
+        batch never round-trips the full logits.  The temperature index
+        vector is padded to a power-of-two width (extra rows gather lane
+        0 and are ignored at resolve time) so the eager gather compiles
+        O(log n_slots) shapes, all of which :meth:`warmup` pre-compiles.
+        Both transfers start via ``copy_to_host_async``; the host is free
+        to do scheduling work until :meth:`_resolve_tokens`."""
         temp = [lane for lane, req, _ in picks if req.temperature > 0.0]
-        rows = (np.asarray(logits[jnp.asarray(temp, np.int32)])
-                if temp else None)
+        rows = None
+        if temp:
+            idx = np.zeros((self._pow2(len(temp)),), np.int32)
+            idx[:len(temp)] = temp
+            rows = logits[jnp.asarray(idx)]
+            rows.copy_to_host_async()
+        greedy.copy_to_host_async()
+        return _PendingTokens(greedy=greedy, rows=rows, temp=temp,
+                              picks=list(picks), step=step, lanes=lanes)
+
+    def _resolve_tokens(self, pending: _PendingTokens) -> List[int]:
+        """Block on a :class:`_PendingTokens` transfer and sample one token
+        per (lane, request, draw-index) triple.  This is the engine's ONLY
+        decode-token host-sync point (allowlisted for swanlint SWAN102,
+        like the ``_sample`` it calls) — everything upstream of it stays
+        async."""
+        greedy = np.asarray(pending.greedy)
+        rows = (np.asarray(pending.rows) if pending.rows is not None
+                else None)
+        temp = pending.temp
         return [int(greedy[lane]) if req.temperature <= 0.0
                 else self._sample(rows[temp.index(lane)], req, draw)
-                for lane, req, draw in picks]
+                for lane, req, draw in pending.picks]
+
+    def _lane_tokens(self, logits, greedy, picks) -> List[int]:
+        """Synchronous fetch: start the transfer and resolve it
+        immediately (chunked-prefill first tokens, and the decode path
+        when ``async_fetch`` is off)."""
+        return self._resolve_tokens(
+            self._start_fetch(logits, greedy, picks, self.step_count))
+
+    def _resolve_pending(self) -> None:
+        """Resolve the previous step's in-flight decode fetch, if any —
+        called at the TOP of :meth:`step`, before admission, so the
+        scheduler observes exactly the state the synchronous path would
+        have left: tokens applied, retirements done and pages freed before
+        any admission decision.  Metrics/trace rows are stamped with the
+        DISPATCH step (``pending.step``), keeping TTFT / inter-token /
+        completion accounting identical to ``async_fetch=False``."""
+        pending, self._pending = self._pending, None
+        if pending is None:
+            return
+        t0 = time.perf_counter()
+        toks = self._resolve_tokens(pending)
+        self.metrics.histogram(
+            "serve_token_fetch_ms", DISPATCH_MS_BUCKETS,
+            "host block on the decode token transfer",
+            mode="async").observe((time.perf_counter() - t0) * 1e3)
+        step_now = self.step_count
+        self.step_count = pending.step      # stamp at the dispatch step
+        try:
+            self._apply_decode_tokens(pending.lanes, toks)
+        finally:
+            self.step_count = step_now
+
+    def _apply_decode_tokens(self, lanes, toks) -> None:
+        """Apply one decode step's sampled tokens to the scheduler state:
+        advance positions, extend transcripts, feed ``next_tok``, stamp
+        per-token metrics/trace, retire finished slots.  Shared verbatim
+        by the sync path (same step) and the async path (resolved at the
+        top of the next step, stamped with the dispatch step)."""
+        gap_hist = self.metrics.histogram(
+            "serve_inter_token_steps", GAP_BUCKETS,
+            "engine steps between consecutive tokens of one request")
+        tok_ctr = self.metrics.counter(
+            "serve_tokens_generated_total",
+            "sampled tokens (first tokens included)")
+        for i, tok in zip(lanes, toks):
+            s = self.slots[i]
+            self.slot_pos[i] += 1
+            s.generated.append(tok)
+            self.next_tok[i] = tok
+            gap_hist.observe(self.step_count - s.last_token_step)
+            s.last_token_step = self.step_count
+            tok_ctr.inc()
+            if self.trace is not None:
+                self.trace.emit("token", step=self.step_count,
+                                uid=s.req.uid, slot=i,
+                                index=len(s.generated) - 1, token=tok)
+            self._maybe_retire(i)
 
     def _bucket_len(self, plen: int) -> int:
         """Smallest power-of-two bucket holding ``plen`` (capped at
@@ -760,9 +978,16 @@ class ServeEngine:
         state1 = self.api.init_serve_state(self.cfg, self.swan, 1, s1)
         toks = np.zeros((pad_len,), np.int32)
         toks[:plen] = np.asarray(req.tokens, np.int32)
+        c0 = compile_events.total()
         logits, state1 = self._prefill(self.params, {"tokens": toks[None]},
                                        state1, np.int32(k_req),
                                        np.int32(plen))
+        dc = compile_events.total() - c0
+        if dc:
+            self.metrics.counter(
+                "serve_compile_total",
+                "XLA backend compiles by phase (warmup vs mid-serve)",
+                phase="serve", kind="prefill").inc(dc)
         self.dispatches["prefill"] += 1
         self.metrics.counter("serve_dispatches_total",
                              "jitted dispatches by kind",
@@ -919,18 +1144,24 @@ class ServeEngine:
                 f"({self.pool.pages_per_shard} pages/shard) — cannot grow")
         extra = new_per - self.pool.pages_per_shard
 
-        def pad_pool(pool):
-            return jax.tree_util.tree_map(
-                lambda x: jnp.concatenate(
-                    [x, jnp.zeros(x.shape[:1] + (extra,) + x.shape[2:],
-                                  x.dtype)], axis=1), pool)
-
-        fn = pad_pool
-        if self.mesh is not None:
-            specs = self._state_specs["pool"]
-            fn = shard_map_compat(fn, self.mesh, (specs,), specs)
-        if self._jit:
-            fn = jax.jit(fn, donate_argnums=(0,))
+        # grow executables are cached per page DELTA (jit retraces per
+        # input shape within one callable), so repeated growth by the
+        # same stride recompiles nothing and the executable_census can
+        # count the family
+        fn = self._grow_fns.get(extra)
+        if fn is None:
+            def pad_pool(pool, _extra=extra):
+                return jax.tree_util.tree_map(
+                    lambda x: jnp.concatenate(
+                        [x, jnp.zeros(x.shape[:1] + (_extra,) + x.shape[2:],
+                                      x.dtype)], axis=1), pool)
+            fn = pad_pool
+            if self.mesh is not None:
+                specs = self._state_specs["pool"]
+                fn = shard_map_compat(fn, self.mesh, (specs,), specs)
+            if self._jit:
+                fn = jax.jit(fn, donate_argnums=(0,))
+            self._grow_fns[extra] = fn
         state = dict(self.state)
         state["pool"] = fn(self.state["pool"])
         self.state = state
@@ -942,6 +1173,12 @@ class ServeEngine:
             self.trace.emit("pool_grow", step=self.step_count,
                             pages_per_shard_old=old_per,
                             pages_per_shard_new=new_per)
+        if self._warmed:
+            # the pool leaf changed shape, so every state-keyed executable
+            # (decode, chunk family, grow) just went stale — re-warm now
+            # and take the compiles as one visible warmup event instead of
+            # scattered mid-serve cliffs on the next few dispatches
+            self.warmup()
 
     # ------------------------------------------------------------------
     # Engine step
@@ -1056,11 +1293,13 @@ class ServeEngine:
         else:
             page_tab = np.zeros((), np.int32)           # unused operand
             prefix = min(self._pow2(int(start_v.max()) + C), self.max_seq)
+        c0 = compile_events.total()
         t0 = time.perf_counter()
         logits, greedy, self.state = self._chunk_call(
             self.params, toks, self.state, slot_v, start_v, k_v, tlen_v,
             page_tab, prefix=prefix)
-        self._obs_dispatch("chunk", time.perf_counter() - t0)
+        self._obs_dispatch("chunk", time.perf_counter() - t0,
+                           compiles=compile_events.total() - c0)
         self.dispatches["chunk"] += 1
         self.metrics.counter("serve_dispatches_total",
                              "jitted dispatches by kind", kind="chunk").inc()
@@ -1163,12 +1402,20 @@ class ServeEngine:
                         i32v, tab)
 
     def step(self) -> int:
-        """One scheduler iteration: admit → one batched multi-slot prefill
-        chunk dispatch → one batched decode dispatch → retire.  Returns the
-        number of sequences that finished this step."""
+        """One scheduler iteration: resolve the previous step's in-flight
+        token fetch (async mode) → admit → one batched multi-slot prefill
+        chunk dispatch → one batched decode dispatch → retire (or stash
+        the fetch for the next step when ``async_fetch``).  Returns the
+        number of sequences that finished during this call — with
+        ``async_fetch`` a dispatch's completions surface one ``step()``
+        call later (the tokens are identical; only the host-visible
+        boundary shifts)."""
         if self._profiler is not None:
             self._profiler.step_start(self.step_count)
         n_done0 = len(self.completions)
+        # the previous step's decode tokens land BEFORE any scheduling
+        # decision, so admission/chunking see the same world as sync mode
+        self._resolve_pending()
         self._admit_pending()
         if self.prefill_chunk is not None:
             self._advance_prefills()
@@ -1190,11 +1437,13 @@ class ServeEngine:
                 page_tab = self._device_table(self._page_bucket(active))
             else:
                 page_tab = np.zeros((), np.int32)       # unused operand
+            c0 = compile_events.total()
             t0 = time.perf_counter()
             logits, greedy, self.state = self._decode(
                 self.params, self.next_tok, self.slot_pos, self.slot_k,
                 page_tab, self.state)
-            self._obs_dispatch("decode", time.perf_counter() - t0)
+            self._obs_dispatch("decode", time.perf_counter() - t0,
+                               compiles=compile_events.total() - c0)
             self.dispatches["decode"] += 1
             self.metrics.counter("serve_dispatches_total",
                                  "jitted dispatches by kind",
@@ -1202,29 +1451,22 @@ class ServeEngine:
             if self.trace is not None:
                 self.trace.emit("decode_dispatch", step=self.step_count,
                                 lanes=len(active))
-            toks = self._lane_tokens(
-                logits, greedy,
-                [(i, self.slots[i].req, len(self.slots[i].generated))
-                 for i in active])
-            gap_hist = self.metrics.histogram(
-                "serve_inter_token_steps", GAP_BUCKETS,
-                "engine steps between consecutive tokens of one request")
-            tok_ctr = self.metrics.counter(
-                "serve_tokens_generated_total",
-                "sampled tokens (first tokens included)")
-            for i, tok in zip(active, toks):
-                s = self.slots[i]
-                self.slot_pos[i] += 1
-                s.generated.append(tok)
-                self.next_tok[i] = tok
-                gap_hist.observe(self.step_count - s.last_token_step)
-                s.last_token_step = self.step_count
-                tok_ctr.inc()
-                if self.trace is not None:
-                    self.trace.emit("token", step=self.step_count,
-                                    uid=s.req.uid, slot=i,
-                                    index=len(s.generated) - 1, token=tok)
-                self._maybe_retire(i)
+            picks = [(i, self.slots[i].req, len(self.slots[i].generated))
+                     for i in active]
+            if self.async_fetch:
+                # start the device->host copy now, consume it at the top
+                # of the NEXT step — the host does a full step of
+                # scheduling work while the transfer is in flight
+                self._pending = self._start_fetch(
+                    logits, greedy, picks, self.step_count, lanes=active)
+            else:
+                t0 = time.perf_counter()
+                toks = self._lane_tokens(logits, greedy, picks)
+                self.metrics.histogram(
+                    "serve_token_fetch_ms", DISPATCH_MS_BUCKETS,
+                    "host block on the decode token transfer",
+                    mode="sync").observe((time.perf_counter() - t0) * 1e3)
+                self._apply_decode_tokens(active, toks)
         self.step_count += 1
         self._sample_gauges()
         if self._profiler is not None:
